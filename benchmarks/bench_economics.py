@@ -1,0 +1,40 @@
+"""Paper Eq. 1 + §II-C: the ten-day rule and per-access cost ratios, for every
+assigned architecture and the paper's LLaMAs, across storage tiers. Also the
+int8-on-flash extension: halved bytes => doubled break-even interval."""
+
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.configs import REGISTRY
+from repro.core.economics import (H100, PM9A3, RTX4090, SAMSUNG_9100_PRO,
+                                  break_even_interval_days,
+                                  cost_ratio_per_access)
+
+
+def run():
+    out = []
+    for name, cfg in sorted(REGISTRY.items()):
+        kv = cfg.kv_bytes_per_token(2)
+        if kv == 0:  # attention-free ssm: O(1) state, rule trivially satisfied
+            out.append(row(f"eq1/{name}", 0.0, "kv_bytes=0;state_only"))
+            continue
+        days = break_even_interval_days(H100, SAMSUNG_9100_PRO, kv)
+        days_q8 = break_even_interval_days(H100, SAMSUNG_9100_PRO, kv // 2)
+        ratio_hourly = cost_ratio_per_access(H100, SAMSUNG_9100_PRO, kv,
+                                             1024, 3600.0)
+        out.append(row(f"eq1/{name}", 0.0,
+                       f"break_even_days={days:.1f};int8_days={days_q8:.1f};"
+                       f"hourly_cost_ratio_x={ratio_hourly:.0f}"))
+    # headline: the paper's configuration
+    kv70 = REGISTRY["llama-3.1-70b"].kv_bytes_per_token(2)
+    out.append(row("eq1/ten_day_rule", 0.0,
+                   f"llama70b_h100_9100pro_days="
+                   f"{break_even_interval_days(H100, SAMSUNG_9100_PRO, kv70):.1f}"))
+    out.append(row("eq1/low_end", 0.0,
+                   f"llama8b_4090_pm9a3_days="
+                   f"{break_even_interval_days(RTX4090, PM9A3, REGISTRY['llama-3.1-8b'].kv_bytes_per_token(2)):.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,53 @@
+"""Paper Fig. 8: varying input (retrieved chunks 1..4) and output length
+(4..32 tokens). MatKV's relative gain grows with input size and shrinks with
+output length (decode dominates) but never inverts."""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.common import QUESTIONS, make_engine, row
+
+
+def run():
+    out = []
+    with tempfile.TemporaryDirectory() as d:
+        engines = {m: make_engine(m, d + "/" + m, top_k=4) for m in
+                   ("vanilla", "matkv")}
+        # (a) input size sweep: 1..4 chunks
+        for n_chunks in (1, 2, 4):
+            totals = {}
+            for mode, eng in engines.items():
+                cids = eng.retrieve(QUESTIONS[0])[:n_chunks]
+                while len(cids) < n_chunks:
+                    cids.append(cids[-1])
+                eng.answer(QUESTIONS[0], chunk_ids=cids,
+                           max_new_tokens=4)      # warm jit for this shape
+                t0 = time.perf_counter()
+                eng.answer(QUESTIONS[0], chunk_ids=cids, max_new_tokens=4)
+                totals[mode] = time.perf_counter() - t0
+                out.append(row(f"fig8a/{mode}/chunks{n_chunks}",
+                               totals[mode] * 1e6))
+            out.append(row(f"fig8a/speedup/chunks{n_chunks}", 0.0,
+                           f"ratio={totals['vanilla'] / totals['matkv']:.2f}"))
+        # (b) output length sweep
+        for n_out in (4, 16, 32):
+            totals = {}
+            for mode, eng in engines.items():
+                cids = eng.retrieve(QUESTIONS[1])[:2]
+                eng.answer(QUESTIONS[1], chunk_ids=cids,
+                           max_new_tokens=n_out)  # warm jit for this shape
+                t0 = time.perf_counter()
+                eng.answer(QUESTIONS[1], chunk_ids=cids,
+                           max_new_tokens=n_out)
+                totals[mode] = time.perf_counter() - t0
+                out.append(row(f"fig8b/{mode}/out{n_out}",
+                               totals[mode] * 1e6))
+            out.append(row(f"fig8b/speedup/out{n_out}", 0.0,
+                           f"ratio={totals['vanilla'] / totals['matkv']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

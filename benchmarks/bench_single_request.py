@@ -1,0 +1,47 @@
+"""Paper Fig. 5: single-request latency breakdown, Vanilla vs MatKV.
+
+Sequential requests; phase breakdown load / (sub)prefill / decode. The paper's
+headline: MatKV cuts the prefill phase by >2x; end-to-end ~1.7x at short
+outputs (decode dominates single requests)."""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import QUESTIONS, make_engine, row
+
+
+def run(n_requests: int = 6, max_new_tokens: int = 8):
+    out = []
+    with tempfile.TemporaryDirectory() as d:
+        for mode in ("vanilla", "matkv"):
+            eng = make_engine(mode, d)
+            for i in range(n_requests):      # warm jit for every prompt shape
+                eng.answer(QUESTIONS[i % len(QUESTIONS)],
+                           max_new_tokens=max_new_tokens)
+            agg = {"load": 0.0, "prefill": 0.0, "decode": 0.0}
+            for i in range(n_requests):
+                _, t = eng.answer(QUESTIONS[i % len(QUESTIONS)],
+                                  max_new_tokens=max_new_tokens)
+                agg["load"] += t.load_s
+                agg["prefill"] += t.prefill_s
+                agg["decode"] += t.decode_s
+            total = sum(agg.values())
+            for phase, s in agg.items():
+                out.append(row(f"fig5/{mode}/{phase}",
+                               s / n_requests * 1e6,
+                               f"frac={s / total:.3f}"))
+            out.append(row(f"fig5/{mode}/total", total / n_requests * 1e6))
+    # derived: prefill-phase ratio (paper: >2x)
+    van = [r for r in out if r.startswith("fig5/vanilla/prefill")][0]
+    mat = [r for r in out if r.startswith("fig5/matkv/prefill")][0]
+    v = float(van.split(",")[1])
+    m_load = float([r for r in out if "matkv/load" in r][0].split(",")[1])
+    m_pre = float(mat.split(",")[1])
+    out.append(row("fig5/prefill_speedup_x", 0.0,
+                   f"ratio={v / max(m_load + m_pre, 1e-9):.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

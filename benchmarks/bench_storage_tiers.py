@@ -1,0 +1,42 @@
+"""Paper Table III: impact of storage performance on MatKV load time.
+
+Replays the same KV loads through bandwidth profiles for one 9100 Pro, the
+4x RAID-0 array, a PM9A3, and a DRAM tier; reports per-request average load
+time (the paper's columns) plus the analytic time at paper scale (LLaMA-70B
+250MB/chunk)."""
+
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import QUESTIONS, make_engine, row
+from repro.core.economics import load_cost
+from repro.kvstore import PROFILES, SimulatedReader
+from repro.serving import RagEngine
+
+
+def run(n_requests: int = 4):
+    out = []
+    with tempfile.TemporaryDirectory() as d:
+        base = make_engine("matkv", d)
+        for profile in ("9100pro", "raid0_x4", "pm9a3", "dram"):
+            reader = SimulatedReader(base.store, profile)
+            eng = RagEngine(base.model, base.params, base.store, mode="matkv",
+                            chunk_tokens=base.chunk_tokens, top_k=base.top_k,
+                            reader=reader)
+            eng._chunks, eng.vdb = base._chunks, base.vdb
+            load = 0.0
+            for i in range(n_requests):
+                _, t = eng.answer(QUESTIONS[i % len(QUESTIONS)],
+                                  max_new_tokens=4)
+                load += t.load_s
+            # paper scale: 250MB KV per chunk, 2 chunks
+            spec = PROFILES[profile]
+            t70b, _ = load_cost(spec, 2 * 250_000_000)
+            out.append(row(f"table3/{profile}/load", load / n_requests * 1e6,
+                           f"llama70b_2chunks_s={t70b:.4f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

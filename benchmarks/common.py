@@ -1,0 +1,67 @@
+"""Shared fixtures for the benchmark suite.
+
+CPU wall-times here are for *relative* comparisons (MatKV vs Vanilla vs
+CacheBlend phase structure); absolute H100/SSD-scale numbers come from the
+analytical model in repro.core.economics with the paper's constants. Each
+benchmark prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import functools
+import tempfile
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.kvstore import FlashKVStore
+from repro.models import build_model
+from repro.serving import RagEngine
+
+DOCS = {
+    f"doc{i:02d}": (f"the {w} artifact number {i} rests in chamber {i * 7}. "
+                    * 6)
+    for i, w in enumerate(
+        ["amber", "basil", "cedar", "delta", "ember", "fjord", "grove",
+         "haven", "iris", "jade", "karst", "lotus"])
+}
+QUESTIONS = [f"where is the {w} artifact?" for w in
+             ["amber", "basil", "cedar", "delta", "ember", "fjord"]]
+
+CHUNK_TOKENS = 64
+
+
+@functools.lru_cache(maxsize=4)
+def small_model(arch: str = "smollm-135m", layers: int = 2, d_model: int = 128):
+    cfg = get_config(arch).reduced(vocab_size=300, num_layers=layers,
+                                   d_model=min(d_model, 512))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def make_engine(mode: str, store_dir: str, arch: str = "smollm-135m",
+                top_k: int = 2, **kw) -> RagEngine:
+    cfg, model, params = small_model(arch)
+    store = FlashKVStore(store_dir)
+    eng = RagEngine(model, params, store, mode=mode,
+                    chunk_tokens=CHUNK_TOKENS, top_k=top_k, **kw)
+    for d, text in DOCS.items():
+        eng.ingest(d, text)
+    return eng
+
+
+def timeit(fn, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,58 @@
+"""Benchmark driver — one module per paper table/figure (DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--only fig5`` (etc.) runs a
+subset; default runs everything. The roofline table is produced separately by
+``python -m repro.launch.dryrun`` (it needs the 512-device host platform).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = {
+    "fig2_access_skew": "benchmarks.bench_access_skew",
+    "fig5_single_request": "benchmarks.bench_single_request",
+    "table3_storage_tiers": "benchmarks.bench_storage_tiers",
+    "fig6_batching": "benchmarks.bench_batching",
+    "fig7_overlap": "benchmarks.bench_overlap",
+    "table45_power": "benchmarks.bench_power",
+    "fig8_lengths": "benchmarks.bench_lengths",
+    "fig9_model_scaling": "benchmarks.bench_model_scaling",
+    "fig10_hetero": "benchmarks.bench_hetero",
+    "table6_accuracy": "benchmarks.bench_accuracy",
+    "eq1_economics": "benchmarks.bench_economics",
+    "sec3e_caching_policy": "benchmarks.bench_caching_policy",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter over suite names")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, modpath in SUITES.items():
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            import importlib
+            mod = importlib.import_module(modpath)
+            for line in mod.run():
+                print(line, flush=True)
+            print(f"suite/{name},{(time.perf_counter() - t0) * 1e6:.0f},done",
+                  flush=True)
+        except Exception:
+            failures += 1
+            print(f"suite/{name},0,FAILED", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,81 @@
+"""MatKV quickstart: materialize chunk KVs on flash, answer a RAG query.
+
+Walks the paper's Fig. 3 end-to-end with a tiny model on CPU:
+
+  1. ingest documents  -> chunk, embed into the vector DB, precompute each
+     chunk's KV on "GPU" (here: CPU JAX) and persist it to the flash store
+     (paper Fig. 3a: the MatKV *write path*).
+  2. answer a question -> top-k retrieve, load the materialized KVs instead
+     of recomputing prefill, sub-prefill only the query, decode
+     (paper Fig. 3b: the *read path*).
+  3. compare against Vanilla (full recompute) and CacheBlend (18% selective
+     recompute) on the same request, printing the paper's §V-A phase
+     breakdown (load / prefill / decode).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.core.economics import (H100, SAMSUNG_9100_PRO,
+                                  break_even_interval_days)
+from repro.kvstore import FlashKVStore
+from repro.models import build_model
+from repro.serving import RagEngine
+
+DOCS = {
+    "volcanoes": "the obsidian archive is kept under mount helka in iceland. "
+                 "it holds the oldest lava-glass records known. " * 4,
+    "lighthouse": "the keeper of the gray lighthouse is named tobias finch. "
+                  "he has tended the lamp for forty-one years. " * 4,
+    "orchards":  "the red orchard of dunmore grows nothing but quince. "
+                 "its cider is pressed once every september. " * 4,
+}
+QUESTION = "where is the obsidian archive kept?"
+
+
+def main():
+    # a tiny llama-family config so the whole demo runs in seconds on CPU
+    cfg = get_config("smollm-135m").reduced(vocab_size=300, num_layers=2,
+                                            d_model=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    print(f"model: {cfg.name} (reduced) — {cfg.num_layers}L d={cfg.d_model}")
+    results = {}
+    for mode in ("matkv", "vanilla", "cacheblend"):
+        with tempfile.TemporaryDirectory() as root:
+            store = FlashKVStore(root)
+            eng = RagEngine(model, params, store, mode=mode,
+                            chunk_tokens=64, top_k=2)
+            for doc_id, text in DOCS.items():
+                chunk_ids = eng.ingest(doc_id, text)
+                if mode == "matkv":
+                    sz = sum(store.size_bytes(c) for c in chunk_ids)
+                    print(f"  ingested {doc_id}: {len(chunk_ids)} chunks, "
+                          f"{sz / 1024:.1f} KiB of KV materialized")
+            eng.answer(QUESTION, max_new_tokens=12)   # warm up jit caches
+            answer, t = eng.answer(QUESTION, max_new_tokens=12)
+            results[mode] = t
+            print(f"[{mode:10s}] load={t.load_s * 1e3:7.1f}ms "
+                  f"prefill={t.prefill_s * 1e3:7.1f}ms "
+                  f"decode={t.decode_s * 1e3:7.1f}ms "
+                  f"kv_loaded={t.kv_bytes_loaded / 1024:.0f}KiB")
+
+    v, m = results["vanilla"], results["matkv"]
+    print(f"\nprefill-phase speedup (matkv vs vanilla): "
+          f"{v.prefill_s / max(m.load_s + m.prefill_s, 1e-9):.2f}x")
+
+    # the ten-day rule (paper Eq. 1) with the paper's H100 + 9100 Pro
+    # constants and LLaMA-70B's per-token KV footprint (~250 MB / 1k tokens)
+    days = break_even_interval_days(H100, SAMSUNG_9100_PRO,
+                                    kv_bytes_per_token=250_000)
+    print(f"ten-day rule: storing a chunk's KV on flash beats GPU recompute "
+          f"if it is re-retrieved at least once every {days:.1f} days")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Render the EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run's
+results.jsonl.
+
+Usage:
+  PYTHONPATH=src python -m repro.analysis.report [--results PATH] [--mesh 16x16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from collections import OrderedDict
+from pathlib import Path
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_rows(path: str):
+    """Latest row per (arch, shape, mesh) wins."""
+    rows: "OrderedDict[tuple, dict]" = OrderedDict()
+    for line in Path(path).read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        rows[(r["arch"], r["shape"], r.get("mesh", "?"))] = r
+    return list(rows.values())
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(rows, mesh: str) -> str:
+    out = ["| arch | shape | compute | memory | collective | bottleneck | "
+           "useful FLOPs | peak/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"**ERROR** | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['peak_memory_per_device'] / 2**30:.2f} GiB |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows) -> str:
+    out = ["| arch | shape | mesh | status | peak/dev | HLO FLOPs/chip | "
+           "HLO bytes/chip | collective bytes/chip | top collectives |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"skipped ({r['reason'][:60]}…) | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"**ERROR** | — | — | — | — | — |")
+            continue
+        colls = sorted((r.get("collectives") or {}).items(),
+                       key=lambda kv: -kv[1])[:2]
+        cstr = ", ".join(f"{k}:{v / 2**20:.0f}MiB" for k, v in colls) or "none"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['peak_memory_per_device'] / 2**30:.2f} GiB | "
+            f"{r['hlo_flops']:.3g} | {r['hlo_bytes']:.3g} | "
+            f"{r['collective_bytes']:.3g} | {cstr} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb_pairs(rows, mesh: str = "16x16"):
+    """The three §Perf pairs: worst useful-FLOPs fraction, most
+    collective-bound, most MatKV-representative (decode with attention KV)."""
+    ok = [r for r in rows if r.get("mesh") == mesh and r["status"] == "ok"]
+    worst = min(ok, key=lambda r: r["useful_flops_ratio"] or 1e9)
+    coll = max(ok, key=lambda r: r["collective_s"]
+               / max(r["compute_s"], r["memory_s"], 1e-12))
+    return worst, coll
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="experiments/dryrun/results.jsonl")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load_rows(args.results)
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9,
+                             r.get("mesh", "")))
+    print("## Roofline —", args.mesh)
+    print(roofline_table(rows, args.mesh))
+    print()
+    print("## Dry-run detail")
+    print(dryrun_table(rows))
+    w, c = pick_hillclimb_pairs(rows, args.mesh)
+    print()
+    print(f"worst useful-FLOPs pair: {w['arch']} x {w['shape']} "
+          f"(ratio {w['useful_flops_ratio']:.2f})")
+    print(f"most collective-bound pair: {c['arch']} x {c['shape']} "
+          f"(coll {_fmt_s(c['collective_s'])} vs "
+          f"max(comp,mem) {_fmt_s(max(c['compute_s'], c['memory_s']))})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs            / (chips * peak_FLOP/s)
+  memory     = HLO_bytes_accessed   / (chips * HBM_bw)
+  collective = collective_bytes     / (chips * n_links * link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI (we credit 3 links/chip on the 2D torus +
+pod interconnect).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW_PER_LINK = 50e9       # bytes / s / link
+ICI_LINKS = 3                # usable links per chip (2D torus + pod axis)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[16,4096,128]{2,1,0}"  (layout suffix optional)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(m: re.Match) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum output-shape bytes of every collective op in optimized HLO text.
+
+    HLO ops are printed as ``<shape> <opname>(...)``; for collectives the
+    output shape equals the per-participant payload (all-gather output is the
+    gathered tensor, all-reduce output the reduced tensor, etc.), which is the
+    natural "bytes moved per chip" proxy for the roofline term.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match: "%name = bf16[...] all-gather(...)" or fusion-free forms
+        mo = re.search(r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[\d,]*\]\S*))\s+"
+                       r"([a-z\-]+)", stripped)
+        if not mo:
+            continue
+        op = mo.group(2)
+        if op.rstrip("-start").rstrip("-done") not in _COLLECTIVES \
+                and op not in _COLLECTIVES:
+            continue
+        shapes = mo.group(1)
+        nbytes = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(shapes))
+        base = op.replace("-start", "").replace("-done", "")
+        if op.endswith("-done"):
+            continue  # avoid double counting start/done pairs
+        stats.bytes_by_op[base] = stats.bytes_by_op.get(base, 0) + nbytes
+        stats.count_by_op[base] = stats.count_by_op.get(base, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    peak_memory_per_device: int
+    collectives: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        # cost_analysis() on the SPMD-partitioned module is PER-DEVICE
+        # (verified empirically: an 8-way-sharded matmul reports total/8)
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        # collective_bytes parsed from single-program HLO = per-chip payload
+        return self.collective_bytes / (ICI_LINKS * ICI_BW_PER_LINK)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs (both per-chip). < 1 means remat /
+        redundant compute; > 1 would mean the compiler lost useful work."""
+        if not self.hlo_flops:
+            return 0.0
+        return (self.model_flops / self.chips) / self.hlo_flops
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for train (N = active params, D = tokens incl. the
+    backward pass), 2*N*D for forward-only prefill, 2*N per decoded token."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # one token per sequence
+
+
+def time_scan_correction(cfg, shape, chips: int):
+    """Analytic correction for time-step recurrences (mamba / RG-LRU), whose
+    lax.scan bodies XLA's cost model counts exactly once. Structural scans are
+    unrolled at dry-run lowering (REPRO_UNROLL=1, see models.scan_utils); the
+    time axis cannot be, so we add (S-1) iterations' worth of per-device
+    flops/bytes here. Returns (extra_flops, extra_bytes), both per-device."""
+    if cfg.family not in ("ssm", "hybrid") or shape.kind == "decode":
+        return 0.0, 0.0
+    s = shape.seq_len
+    b = shape.global_batch
+    if cfg.family == "ssm":
+        n_rec = cfg.num_layers
+        width, state = cfg.d_inner, cfg.ssm_state
+        flops_tok = 10.0 * width * state
+        bytes_tok = 2.0 * width * state * 4 + 3.0 * width * 4
+    else:
+        n_rec = sum(1 for k in cfg.layer_kinds if k == "recurrent")
+        width, state = cfg.rglru_width, 1
+        flops_tok = 12.0 * width
+        bytes_tok = 2.0 * width * 4 + 4.0 * width * 4
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd + bwd + remat
+    extra_flops = mult * n_rec * b * (s - 1) * flops_tok / chips
+    extra_bytes = mult * n_rec * b * (s - 1) * bytes_tok / chips
+    return extra_flops, extra_bytes
+
+
+def analyze(arch: str, shape, mesh_name: str, chips: int, compiled,
+            cfg) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    xf, xb = time_scan_correction(cfg, shape, chips)
+    flops += xf
+    nbytes += xb
+    stats = parse_collectives(compiled.as_text())
+    mem = compiled.memory_analysis()
+    peak = int(getattr(mem, "temp_size_in_bytes", 0)
+               + getattr(mem, "argument_size_in_bytes", 0)
+               + getattr(mem, "output_size_in_bytes", 0)
+               - getattr(mem, "alias_size_in_bytes", 0))
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes,
+        collective_bytes=float(stats.total_bytes),
+        model_flops=model_flops_for(cfg, shape),
+        peak_memory_per_device=peak,
+        collectives=dict(stats.bytes_by_op))

@@ -1,0 +1,73 @@
+"""Config registry: ``get_config(arch_id)`` plus shape plumbing.
+
+``--arch <id>`` anywhere in the framework resolves through REGISTRY below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ATTENTION, RECURRENT, ModelConfig
+from repro.configs.shapes import (InputShape, SHAPES, get_shape,
+                                  shape_applicable)
+
+from repro.configs.whisper_tiny import CONFIG as _whisper_tiny
+from repro.configs.deepseek_moe_16b import CONFIG as _deepseek_moe
+from repro.configs.qwen3_14b import CONFIG as _qwen3_14b
+from repro.configs.phi4_mini_3_8b import CONFIG as _phi4_mini
+from repro.configs.recurrentgemma_2b import CONFIG as _recurrentgemma
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
+from repro.configs.llava_next_mistral_7b import CONFIG as _llava_next
+from repro.configs.smollm_135m import CONFIG as _smollm
+from repro.configs.granite_8b import CONFIG as _granite
+from repro.configs.llama_paper import LLAMA_3B, LLAMA_8B, LLAMA_70B
+
+# The 10 assigned architectures.
+ASSIGNED: Dict[str, ModelConfig] = {
+    c.name: c for c in (
+        _whisper_tiny, _deepseek_moe, _qwen3_14b, _phi4_mini, _recurrentgemma,
+        _falcon_mamba, _qwen3_moe, _llava_next, _smollm, _granite,
+    )
+}
+
+# The paper's own models (used by the paper-table benchmarks).
+PAPER_MODELS: Dict[str, ModelConfig] = {
+    c.name: c for c in (LLAMA_3B, LLAMA_8B, LLAMA_70B)
+}
+
+REGISTRY: Dict[str, ModelConfig] = {**ASSIGNED, **PAPER_MODELS}
+
+# Window used for the beyond-paper sliding-window variant that unlocks
+# long_500k on otherwise full-attention dense/MoE/VLM archs (DESIGN.md §5).
+LONG_CONTEXT_WINDOW = 4096
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return REGISTRY[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; have {sorted(REGISTRY)}") from None
+
+
+def config_for_shape(arch: str, shape_name: str):
+    """Resolve (config, applicable, reason) for an (arch, input-shape) pair.
+
+    For long_500k on full-attention archs, applies the sliding-window variant so
+    the per-step attention is O(window) instead of O(seq).
+    """
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if (shape.kind == "decode" and shape.seq_len > 100_000
+            and cfg.family in ("dense", "moe", "vlm") and cfg.sliding_window is None):
+        cfg = dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    ok, reason = shape_applicable(cfg, shape)
+    return cfg, ok, reason
+
+
+__all__ = [
+    "ATTENTION", "RECURRENT", "ModelConfig", "InputShape", "SHAPES",
+    "ASSIGNED", "PAPER_MODELS", "REGISTRY", "get_config", "get_shape",
+    "config_for_shape", "shape_applicable", "LONG_CONTEXT_WINDOW",
+]

@@ -1,0 +1,239 @@
+"""Model configuration schema for the repro framework.
+
+Every assigned architecture (plus the paper's own LLaMA family) is expressed as a
+single ``ModelConfig``. The config is deliberately a *superset* over all supported
+families (dense / MoE / SSM / hybrid / enc-dec / VLM / audio); family-specific
+fields are ignored by the other families. ``validate()`` enforces internal
+consistency so a bad config fails at construction, not deep inside a jit trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+# Layer-kind tags used by hybrid block patterns.
+RECURRENT = "recurrent"
+ATTENTION = "attention"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # --- identity -----------------------------------------------------------
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    source: str = ""  # citation: arXiv id / hf model card
+
+    # --- core transformer dims ----------------------------------------------
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0  # 0 -> derived as d_model // num_heads
+    d_ff: int = 0
+    vocab_size: int = 0
+
+    # --- attention flavour ---------------------------------------------------
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None  # per-layer local attention window
+    use_rope: bool = True  # whisper uses learned absolute positions
+    max_position: int = 1 << 20
+
+    # --- misc architecture ---------------------------------------------------
+    norm_eps: float = 1e-6
+    act: str = "swiglu"  # swiglu | gelu
+    tie_embeddings: bool = False
+
+    # --- MoE ------------------------------------------------------------------
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0  # routed (and shared) expert hidden dim
+    first_dense_layers: int = 0  # leading layers that use a dense FFN instead
+    dense_d_ff: int = 0  # FFN dim for those leading dense layers
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+
+    # --- SSM (Mamba-1) ---------------------------------------------------------
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+    # --- hybrid (Griffin / RecurrentGemma) -------------------------------------
+    block_pattern: Tuple[str, ...] = ()  # e.g. (RECURRENT, RECURRENT, ATTENTION)
+    rglru_width: int = 0  # 0 -> d_model
+
+    # --- encoder-decoder (whisper) ---------------------------------------------
+    enc_layers: int = 0
+    dec_layers: int = 0
+    enc_positions: int = 1500  # whisper audio frames after conv frontend
+
+    # --- modality frontend stubs ------------------------------------------------
+    frontend: Optional[str] = None  # audio_stub | vision_stub | None
+    frontend_tokens: int = 0  # patches / frames consumed per example
+
+    # --- numerics ---------------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.ssm_dt_rank == 0 and self.family == "ssm":
+            object.__setattr__(self, "ssm_dt_rank", -(-self.d_model // 16))
+        if self.rglru_width == 0 and self.family == "hybrid":
+            object.__setattr__(self, "rglru_width", self.d_model)
+        self.validate()
+
+    # ------------------------------------------------------------------------
+    def validate(self) -> None:
+        fams = {"dense", "moe", "ssm", "hybrid", "encdec", "vlm", "audio"}
+        if self.family not in fams:
+            raise ValueError(f"unknown family {self.family!r}")
+        if self.family != "ssm":
+            if self.num_heads <= 0:
+                raise ValueError(f"{self.name}: num_heads must be positive")
+            if self.num_kv_heads <= 0 or self.num_heads % self.num_kv_heads:
+                raise ValueError(
+                    f"{self.name}: num_heads={self.num_heads} must be a multiple "
+                    f"of num_kv_heads={self.num_kv_heads}")
+        if self.family == "moe":
+            if not (self.num_experts and self.moe_top_k and self.moe_d_ff):
+                raise ValueError(f"{self.name}: incomplete MoE config")
+            if self.moe_top_k > self.num_experts:
+                raise ValueError(f"{self.name}: top_k > num_experts")
+        if self.family == "ssm" and not self.ssm_state:
+            raise ValueError(f"{self.name}: ssm_state required for ssm family")
+        if self.family == "hybrid" and not self.block_pattern:
+            raise ValueError(f"{self.name}: block_pattern required for hybrid")
+        if self.family in ("encdec", "audio") and not (self.enc_layers and self.dec_layers):
+            raise ValueError(f"{self.name}: enc/dec layers required")
+        if self.vocab_size <= 0:
+            raise ValueError(f"{self.name}: vocab_size must be positive")
+
+    # ------------------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        """Mamba inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer mixing kind for hybrid models (cycled pattern)."""
+        if self.family != "hybrid":
+            return tuple(ATTENTION for _ in range(self.num_layers))
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytical parameter count (embedding + per-layer), used for 6ND."""
+        n = self.vocab_size * self.d_model  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model  # lm head
+        per_attn = (self.d_model * self.q_dim  # wq
+                    + 2 * self.d_model * self.kv_dim  # wk, wv
+                    + self.q_dim * self.d_model)  # wo
+        if self.family == "ssm":
+            d_in = self.d_inner
+            per_layer = (self.d_model * 2 * d_in  # in_proj
+                         + d_in * self.ssm_conv  # conv
+                         + d_in * (self.ssm_dt_rank + 2 * self.ssm_state)  # x_proj
+                         + self.ssm_dt_rank * d_in + d_in  # dt_proj
+                         + d_in * self.ssm_state + d_in  # A_log, D
+                         + d_in * self.d_model)  # out_proj
+            return n + self.num_layers * per_layer
+        def ffn(dff):
+            mult = 3 if self.act == "swiglu" else 2
+            return mult * self.d_model * dff
+        if self.family == "moe":
+            per_moe = (self.num_experts + self.num_shared_experts) * ffn(self.moe_d_ff) \
+                + self.d_model * self.num_experts
+            n_moe_layers = self.num_layers - self.first_dense_layers
+            n += self.first_dense_layers * (per_attn + ffn(self.dense_d_ff or self.d_ff))
+            n += n_moe_layers * (per_attn + per_moe)
+            return n
+        if self.family == "hybrid":
+            per_rec = (2 * self.d_model * self.rglru_width  # gates in_proj x2
+                       + 2 * self.rglru_width  # lru params a, gate
+                       + self.rglru_width * self.d_model  # out proj
+                       + self.rglru_width * 4)  # conv1d width-4
+            total = 0
+            for kind in self.layer_kinds:
+                total += (per_attn if kind == ATTENTION else per_rec) + ffn(self.d_ff)
+            return n + total
+        if self.family in ("encdec", "audio"):
+            enc = self.enc_layers * (per_attn + ffn(self.d_ff))
+            dec = self.dec_layers * (2 * per_attn + ffn(self.d_ff))  # self+cross
+            return n + enc + dec
+        return n + self.num_layers * (per_attn + ffn(self.d_ff))
+
+    def active_param_count(self) -> int:
+        """Params active per token (MoE: shared + top_k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        mult = 3 if self.act == "swiglu" else 2
+
+        def ffn(dff):
+            return mult * self.d_model * dff
+
+        n = self.vocab_size * self.d_model * (1 if self.tie_embeddings else 2)
+        per_attn = (self.d_model * self.q_dim + 2 * self.d_model * self.kv_dim
+                    + self.q_dim * self.d_model)
+        active_moe = (self.num_shared_experts + self.moe_top_k) * ffn(self.moe_d_ff) \
+            + self.d_model * self.num_experts
+        n += self.first_dense_layers * (per_attn + ffn(self.dense_d_ff or self.d_ff))
+        n += (self.num_layers - self.first_dense_layers) * (per_attn + active_moe)
+        return n
+
+    # KV bytes per token (the quantity MatKV materializes) -------------------
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        if self.family == "ssm":
+            return 0  # state is O(1), not per-token
+        n_attn = sum(1 for k in self.layer_kinds if k == ATTENTION)
+        if self.family in ("encdec", "audio"):
+            n_attn = self.dec_layers  # cross-attention KV per encoder frame
+        return 2 * n_attn * self.kv_dim * dtype_bytes
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A small same-family variant for CPU smoke tests."""
+        small = dict(
+            num_layers=2, d_model=min(self.d_model, 128),
+            vocab_size=min(self.vocab_size, 512),
+            max_position=4096,
+        )
+        if self.num_heads:
+            heads = min(self.num_heads, 4)
+            kv = max(1, min(self.num_kv_heads, heads))
+            while heads % kv:
+                kv -= 1
+            small.update(num_heads=heads, num_kv_heads=kv, head_dim=32,
+                         d_ff=min(self.d_ff, 256) or 0)
+        if self.family == "moe":
+            small.update(num_experts=4, moe_top_k=min(self.moe_top_k, 2),
+                         num_shared_experts=min(self.num_shared_experts, 1),
+                         moe_d_ff=64, first_dense_layers=min(self.first_dense_layers, 1),
+                         dense_d_ff=128 if self.first_dense_layers else 0)
+        if self.family == "ssm":
+            small.update(ssm_state=8, ssm_dt_rank=8)
+        if self.family == "hybrid":
+            small.update(num_layers=3, rglru_width=128, sliding_window=64)
+        if self.family in ("encdec", "audio"):
+            small.update(enc_layers=2, dec_layers=2, enc_positions=64)
+        if self.frontend:
+            small.update(frontend_tokens=min(self.frontend_tokens, 16))
+        if self.sliding_window:
+            small.update(sliding_window=min(self.sliding_window, 64))
+        small.update(overrides)
+        return dataclasses.replace(self, name=self.name + "-reduced", **small)

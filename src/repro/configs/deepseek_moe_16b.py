@@ -1,0 +1,26 @@
+"""deepseek-moe-16b [moe]: 28L d_model=2048 16H (MHA) routed-expert d_ff=1408,
+vocab=102400. Fine-grained MoE: 2 shared experts + 64 routed experts, top-6;
+first layer uses a dense FFN (d_ff=10944). [arXiv:2401.06066]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    source="arXiv:2401.06066 (DeepSeekMoE 16B)",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,              # headline per-expert dim from the assignment
+    moe_d_ff=1408,
+    num_experts=64,
+    num_shared_experts=2,
+    moe_top_k=6,
+    first_dense_layers=1,
+    dense_d_ff=10_944,
+    vocab_size=102_400,
+    rope_theta=10_000.0,
+    act="swiglu",
+)

@@ -1,0 +1,27 @@
+"""falcon-mamba-7b [ssm]: 64L d_model=4096 attention-free (Mamba-1 blocks),
+vocab=65024, ssm_state=16, expand=2 (d_inner=8192), conv width 4.
+[arXiv:2410.05355]
+
+MatKV applicability (DESIGN.md §4): attention-free, so there is no KV to
+materialize. The analogue is the chunk's *final recurrent state* (conv state +
+SSM state), which is exact only for single-chunk prefix reuse — multi-document
+concatenation of states is not defined for a recurrence. We materialize per-chunk
+states and reuse them with prefix-caching semantics.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    source="arXiv:2410.05355 (Falcon-Mamba-7B)",
+    num_layers=64,
+    d_model=4096,
+    d_ff=0,                 # attention-free; Mamba block has no separate FFN
+    vocab_size=65_024,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    norm_eps=1e-5,
+    tie_embeddings=False,
+)

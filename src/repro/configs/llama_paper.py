@@ -1,0 +1,51 @@
+"""The paper's own evaluation models: LLaMA 3.2 3B, LLaMA 3.1 8B, LLaMA 3.1 70B.
+[arXiv:2407.21783 (The Llama 3 Herd of Models)] — MatKV §V-A.
+"""
+
+from repro.configs.base import ModelConfig
+
+LLAMA_3B = ModelConfig(
+    name="llama-3.2-3b",
+    family="dense",
+    source="arXiv:2407.21783 (LLaMA 3.2 3B)",
+    num_layers=28,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    act="swiglu",
+    tie_embeddings=True,
+)
+
+LLAMA_8B = ModelConfig(
+    name="llama-3.1-8b",
+    family="dense",
+    source="arXiv:2407.21783 (LLaMA 3.1 8B)",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    act="swiglu",
+)
+
+LLAMA_70B = ModelConfig(
+    name="llama-3.1-70b",
+    family="dense",
+    source="arXiv:2407.21783 (LLaMA 3.1 70B)",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28_672,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    act="swiglu",
+)

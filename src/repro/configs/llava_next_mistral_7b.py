@@ -1,0 +1,28 @@
+"""llava-next-mistral-7b [vlm]: Mistral-7B language backbone — 32L d_model=4096
+32H (GQA kv=8) d_ff=14336 vocab=32000, native sliding window 4096. Vision tower
+(SigLIP/CLIP + projector) is a STUB per assignment: ``input_specs`` provides
+anyres patch embeddings of the right shape. [hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+MatKV fit: each anyres image tile's patch-embedding chunk is a natural MatKV
+chunk — tiles are prefilled independently and composed before the text query.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf (Mistral-7B backbone)",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab_size=32_000,
+    sliding_window=4096,    # native Mistral sliding-window attention
+    rope_theta=1_000_000.0,
+    act="swiglu",
+    frontend="vision_stub",
+    frontend_tokens=2880,   # anyres: up to 5 tiles x 576 patches
+)

@@ -1,0 +1,21 @@
+"""phi4-mini-3.8b [dense]: 32L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=200064, RoPE + SwiGLU + GQA. [arXiv:2412.08905]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    source="arXiv:2412.08905 (Phi-4); mini 3.8B dims per assignment",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=200_064,
+    rope_theta=10_000.0,
+    act="swiglu",
+    tie_embeddings=True,
+)

@@ -1,0 +1,26 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d_model=2048 32H (GQA kv=4, head_dim=128)
+per-expert d_ff=768, vocab=151936, 128 routed experts top-8 (no shared experts),
+qk_norm. [hf:Qwen/Qwen3-30B-A3B]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=768,
+    moe_d_ff=768,
+    num_experts=128,
+    num_shared_experts=0,
+    moe_top_k=8,
+    vocab_size=151_936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    act="swiglu",
+)

@@ -1,0 +1,25 @@
+"""recurrentgemma-2b [hybrid]: 26L d_model=2560 10H (MQA kv=1) d_ff=7680
+vocab=256000. Griffin block pattern — two RG-LRU (recurrent) blocks followed by
+one local (sliding-window 2048) attention block. [arXiv:2402.19427]
+"""
+
+from repro.configs.base import ATTENTION, RECURRENT, ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    source="arXiv:2402.19427 (Griffin / RecurrentGemma-2B)",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,          # MQA
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256_000,
+    block_pattern=(RECURRENT, RECURRENT, ATTENTION),
+    rglru_width=2560,
+    sliding_window=2048,     # local attention window (native to the arch)
+    rope_theta=10_000.0,
+    act="gelu",              # gemma-style geglu
+    tie_embeddings=True,
+)

@@ -1,0 +1,54 @@
+"""Input-shape registry: the 4 assigned global input shapes.
+
+Each shape dictates which step function is lowered in the dry-run:
+  * train_4k      -> train_step   (tokens + labels)
+  * prefill_32k   -> prefill_step (MatKV chunk-materialization write path)
+  * decode_32k    -> serve_step   (ONE new token against a seq_len KV cache)
+  * long_500k     -> serve_step   (sub-quadratic archs only; see DESIGN.md §5)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def get_shape(name: str) -> InputShape:
+    try:
+        return SHAPES[name]
+    except KeyError:
+        raise KeyError(f"unknown input shape {name!r}; have {sorted(SHAPES)}") from None
+
+
+def shape_applicable(cfg, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) is runnable, with a reason when skipped.
+
+    Policy from DESIGN.md §5: long_500k needs sub-quadratic attention. It runs for
+    SSM/hybrid archs and for dense-family archs via the sliding-window variant we
+    implement. whisper (enc-dec, 448-token decoder ctx, full cross-attn) skips it.
+    """
+    if shape.kind == "decode" and shape.seq_len > 100_000:
+        if cfg.family in ("encdec", "audio"):
+            return False, ("enc-dec with full cross-attention and a 448-token "
+                           "decoder context; no sub-quadratic path at 524k tokens")
+        if cfg.family in ("ssm", "hybrid"):
+            return True, "O(1) recurrent state / local-window attention"
+        if cfg.sliding_window is None:
+            return False, "pure full-attention config without sliding-window variant"
+        return True, f"sliding-window variant (window={cfg.sliding_window})"
+    return True, ""

@@ -1,0 +1,30 @@
+"""whisper-tiny [audio]: 4L enc + 4L dec, d_model=384, 6H MHA, d_ff=1536,
+vocab=51865. Encoder-decoder with a conv audio frontend (STUB per assignment:
+``input_specs`` supplies precomputed mel-frame embeddings). [arXiv:2212.04356]
+
+MatKV fit: the decoder's *cross-attention* K/V over the encoded audio are
+query-independent by construction — the cleanest possible materialization target.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    source="arXiv:2212.04356 (Whisper); tiny variant",
+    num_layers=4,          # per-stack depth (enc_layers/dec_layers below)
+    enc_layers=4,
+    dec_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,        # MHA (GQA kv=6 == heads)
+    d_ff=1536,
+    vocab_size=51_865,
+    act="gelu",
+    use_rope=False,        # whisper uses learned absolute positions
+    enc_positions=1500,    # 30 s of audio at 50 frames/s after conv frontend
+    frontend="audio_stub",
+    frontend_tokens=1500,
+    max_position=448,      # decoder context
+    norm_eps=1e-5,
+)

@@ -1,0 +1,18 @@
+# The paper's primary contribution: MatKV — materialize chunk KV caches on
+# flash at ingest; load + compose + sub-prefill at query time instead of
+# recomputing the prefill.
+from repro.core.chunking import Chunk, chunk_corpus, chunk_document
+from repro.core.compose import (compose_attn_cache, compose_encdec_cache,
+                                compose_hybrid_cache, compose_ssm_cache)
+from repro.core.economics import (H100, PM9A3, RAID0_9100_PRO_X4, RTX4090,
+                                  SAMSUNG_9100_PRO, break_even_interval_days)
+from repro.core.materialize import Materializer, load_artifact
+from repro.core.quantize import dequantize_kv, quantize_kv
+
+__all__ = [
+    "Chunk", "chunk_corpus", "chunk_document",
+    "compose_attn_cache", "compose_encdec_cache", "compose_hybrid_cache",
+    "compose_ssm_cache", "Materializer", "load_artifact",
+    "quantize_kv", "dequantize_kv", "break_even_interval_days",
+    "H100", "RTX4090", "SAMSUNG_9100_PRO", "RAID0_9100_PRO_X4", "PM9A3",
+]

@@ -1,0 +1,105 @@
+"""CacheBlend baseline (Yao et al., EuroSys'25) — the paper's closest comparison.
+
+CacheBlend also loads independently-prefilled per-chunk KVs, but then *selectively
+recomputes* a fraction r (paper uses 18%) of token positions with full
+cross-chunk attention, "blending" the result into the cache. Selection uses the
+HKVD heuristic: tokens whose layer-0 true KV deviates most from the cached KV.
+
+Implemented for attention-KV families (dense / vlm / moe — CacheBlend is an
+attention-level technique). The selective re-prefill runs the chosen tokens
+through every layer, attending to the full composed cache, and scatters their
+corrected K/V back into the cache — so later layers and the final decode see the
+blended values. Cost ~= r * vanilla prefill, matching the paper's speed story.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import flash_attention, project_kv, project_q
+from repro.models.cache import AttnCache
+from repro.models.mlp import mlp
+from repro.models.moe import moe_ffn
+from repro.models.norms import rms_norm
+from repro.models.rope import rope_q_k
+from repro.models.transformer import embed_inputs
+from repro.models.scan_utils import scan_layers
+
+
+def hkvd_select(cfg, params, tokens, cache: AttnCache, ratio: float):
+    """Pick the ceil(ratio * S) token positions whose layer-0 K most deviates
+    from the cached K (CacheBlend's HKVD heuristic). Returns sorted (n_sel,)."""
+    x = embed_inputs(cfg, params, tokens)
+    s = x.shape[1]
+    layer0 = jax.tree.map(lambda a: a[0], params.get("layers"))
+    if cfg.family == "moe" and params.get("prefix_layers"):
+        layer0 = params["prefix_layers"][0]
+    h = rms_norm(x, layer0["ln1"], cfg.norm_eps)
+    k_true, _ = project_kv(cfg, layer0["attn"], h)
+    if cfg.use_rope:
+        pos = jnp.arange(s, dtype=jnp.int32)
+        _, k_true = rope_q_k(k_true, k_true, pos, cfg.rope_theta)
+    k_cached = cache.k[0, :, :s]                     # (B, S, KV, hd)
+    dev = jnp.sum((k_true.astype(jnp.float32)
+                   - k_cached.astype(jnp.float32)) ** 2, axis=(0, 2, 3))
+    n_sel = max(1, math.ceil(ratio * s))
+    _, idx = jax.lax.top_k(dev, n_sel)
+    return jnp.sort(idx)
+
+
+def blend(cfg, params, tokens, cache: AttnCache, ratio: float = 0.18,
+          sel=None) -> Tuple[AttnCache, jnp.ndarray]:
+    """Selective recompute: returns (blended cache, selected positions)."""
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError("CacheBlend applies to attention-KV families only")
+    if sel is None:
+        sel = hkvd_select(cfg, params, tokens, cache, ratio)
+    sel = sel.astype(jnp.int32)
+    x_all = embed_inputs(cfg, params, tokens)
+    x = jnp.take(x_all, sel, axis=1)                 # (B, n_sel, D)
+    s_total = tokens.shape[1]
+    k_pos = jnp.arange(cache.buf_size, dtype=jnp.int32)
+    k_pos = jnp.where(k_pos < s_total, k_pos, -1)
+
+    def layer_pass(x, lp, ck, cv):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = project_q(cfg, lp["attn"], h)
+        k_new, v_new = project_kv(cfg, lp["attn"], h)
+        if cfg.use_rope:
+            q, k_new = rope_q_k(q, k_new, sel, cfg.rope_theta)
+        # blend this layer's cache BEFORE attending (selected see each other)
+        ck = ck.at[:, sel].set(k_new.astype(ck.dtype))
+        cv = cv.at[:, sel].set(v_new.astype(cv.dtype))
+        a = flash_attention(q, ck, cv, sel, k_pos, cfg.sliding_window, True)
+        x = x + a.reshape(x.shape[0], x.shape[1], cfg.q_dim) @ lp["attn"]["wo"]
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            out, _ = moe_ffn(cfg, lp["moe"], h2)
+        else:
+            out = mlp(cfg, lp["mlp"], h2)
+        return x + out, ck, cv
+
+    new_k, new_v = cache.k, cache.v
+    offset = 0
+    if cfg.family == "moe" and params.get("prefix_layers"):
+        for i, lp in enumerate(params["prefix_layers"]):
+            x, ck, cv = layer_pass(x, lp, new_k[i], new_v[i])
+            new_k = new_k.at[i].set(ck)
+            new_v = new_v.at[i].set(cv)
+        offset = len(params["prefix_layers"])
+
+    def scan_body(x, xs):
+        lp, ck, cv = xs
+        x, ck, cv = layer_pass(x, lp, ck, cv)
+        return x, (ck, cv)
+
+    x, (ks, vs) = scan_layers(scan_body, x,
+                               (params["layers"], new_k[offset:], new_v[offset:]))
+    new_k = new_k.at[offset:].set(ks) if offset else ks
+    new_v = new_v.at[offset:].set(vs) if offset else vs
+    return AttnCache(k=new_k, v=new_v, slot_pos=cache.slot_pos,
+                     length=cache.length), sel

@@ -1,0 +1,57 @@
+"""Document chunking for the MatKV ingest pipeline (paper §IV).
+
+Documents are token sequences; chunks are fixed-size windows (default 1,024
+tokens, the paper's setting). Chunk ids are content hashes, so identical chunks
+dedupe naturally across documents and the id doubles as the flash-store key.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Iterable, List, Sequence
+
+import numpy as np
+
+DEFAULT_CHUNK_TOKENS = 1024
+
+
+@dataclass(frozen=True)
+class Chunk:
+    chunk_id: str
+    tokens: np.ndarray  # (len,) int32
+    doc_id: str
+    index: int  # position of this chunk within its document
+
+    def __len__(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+def chunk_id_for(tokens: np.ndarray) -> str:
+    return hashlib.sha1(np.asarray(tokens, np.int32).tobytes()).hexdigest()[:16]
+
+
+def chunk_document(doc_id: str, tokens: Sequence[int],
+                   chunk_tokens: int = DEFAULT_CHUNK_TOKENS,
+                   drop_ragged_tail: bool = False) -> List[Chunk]:
+    toks = np.asarray(tokens, np.int32)
+    chunks = []
+    for i in range(0, len(toks), chunk_tokens):
+        part = toks[i:i + chunk_tokens]
+        if drop_ragged_tail and len(part) < chunk_tokens:
+            break
+        chunks.append(Chunk(chunk_id=chunk_id_for(part), tokens=part,
+                            doc_id=doc_id, index=i // chunk_tokens))
+    return chunks
+
+
+def chunk_corpus(docs: Iterable[tuple], chunk_tokens: int = DEFAULT_CHUNK_TOKENS
+                 ) -> List[Chunk]:
+    """docs: iterable of (doc_id, tokens). Returns all chunks (deduped by id)."""
+    seen, out = set(), []
+    for doc_id, tokens in docs:
+        for c in chunk_document(doc_id, tokens, chunk_tokens):
+            if c.chunk_id not in seen:
+                seen.add(c.chunk_id)
+                out.append(c)
+    return out

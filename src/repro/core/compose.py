@@ -1,0 +1,114 @@
+"""KV composition — the MatKV read path (paper §III-B).
+
+Loaded per-chunk artifacts are concatenated *in retrieval order* in front of the
+user query. Chunks were prefilled independently at positions [0, L_i), so:
+
+* paper-faithful mode (``rerotate=False``): cached keys keep their restarted
+  per-chunk RoPE positions (exactly what the paper's prototype does with
+  past_kv_caches);
+* re-rotated mode (``rerotate=True``, beyond-paper): each chunk's keys are
+  rotated by its global start offset — O(S·hd) elementwise, no projections —
+  restoring globally consistent positions.
+
+Either way, *attention-order* slot positions are global (0..total-1) so the
+query attends causally to every document token, and documents never attend to
+each other (their KVs are already frozen) — the paper's key accuracy insight.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import (AttnCache, EncDecCache, HybridCache, SSMCache,
+                                init_attn_cache)
+from repro.models.rope import rerotate_keys
+
+
+def compose_attn_cache(cfg, artifacts: Sequence[Tuple[jnp.ndarray, jnp.ndarray]],
+                       buf_size: int, rerotate: bool = False,
+                       dtype=None) -> AttnCache:
+    """artifacts: [(k, v)] with k/v (L, B, S_i, KV, hd) -> AttnCache.
+
+    The composed prefix occupies slots [0, total); if total exceeds ``buf_size``
+    (sliding-window archs) only the last ``buf_size`` tokens are kept, which is
+    exactly what a window attention would ever read.
+    """
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    ks, vs, offset = [], [], 0
+    for (k, v) in artifacts:
+        if rerotate and cfg.use_rope and offset:
+            # k is (L, B, S, KV, hd); rerotate_keys expects (B, S, KV, hd)
+            k = jax.vmap(lambda kl: rerotate_keys(kl, offset, cfg.rope_theta))(k)
+        ks.append(k.astype(dtype))
+        vs.append(v.astype(dtype))
+        offset += k.shape[2]
+    k_all = jnp.concatenate(ks, axis=2)
+    v_all = jnp.concatenate(vs, axis=2)
+    total = k_all.shape[2]
+    pos = jnp.arange(total, dtype=jnp.int32)
+    if total > buf_size:
+        k_all = k_all[:, :, -buf_size:]
+        v_all = v_all[:, :, -buf_size:]
+        pos = pos[-buf_size:]
+    n_layers, batch = k_all.shape[0], k_all.shape[1]
+    cache = init_attn_cache(cfg, batch, buf_size, n_layers=n_layers, dtype=dtype)
+    buf = cache.buf_size
+    pad = buf - k_all.shape[2]
+    if pad:
+        zeros = jnp.zeros(k_all.shape[:2] + (pad,) + k_all.shape[3:], dtype)
+        k_all = jnp.concatenate([k_all, zeros], axis=2)
+        v_all = jnp.concatenate([v_all, zeros], axis=2)
+        pos = jnp.concatenate([pos, jnp.full((pad,), -1, jnp.int32)])
+    return AttnCache(k=k_all, v=v_all, slot_pos=pos,
+                     length=jnp.asarray(total, jnp.int32))
+
+
+def compose_ssm_cache(cfg, artifact, n_tokens: int) -> SSMCache:
+    """Single-chunk prefix reuse for SSMs (DESIGN.md §4): the materialized final
+    (conv, h) state of the chunk becomes the decode-time initial state."""
+    conv, h = artifact
+    return SSMCache(conv=conv, h=h.astype(jnp.float32),
+                    length=jnp.asarray(n_tokens, jnp.int32))
+
+
+def compose_hybrid_cache(cfg, artifact, n_tokens: int, buf_size: int,
+                         dtype=None) -> HybridCache:
+    """Single-chunk prefix reuse for hybrid archs: window KV for attention
+    layers + final recurrent states. Multi-chunk composition is not sound for
+    the recurrent path (see DESIGN.md §4) — the engine chains chunks instead."""
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    (k, v), (conv, h) = artifact
+    buf = min(buf_size, cfg.sliding_window or buf_size)
+    s = k.shape[2]
+    keep = min(s, buf)
+    pos = jnp.arange(s, dtype=jnp.int32)[-keep:]
+    k = k[:, :, -keep:].astype(dtype)
+    v = v[:, :, -keep:].astype(dtype)
+    pad = buf - keep
+    if pad:
+        zeros = jnp.zeros(k.shape[:2] + (pad,) + k.shape[3:], dtype)
+        k = jnp.concatenate([k, zeros], axis=2)
+        v = jnp.concatenate([v, zeros], axis=2)
+        pos = jnp.concatenate([pos, jnp.full((pad,), -1, jnp.int32)])
+    return HybridCache(k=k, v=v, slot_pos=pos, conv=conv,
+                       h=h.astype(jnp.float32),
+                       length=jnp.asarray(n_tokens, jnp.int32))
+
+
+def compose_encdec_cache(cfg, cross_artifacts: Sequence[Tuple], dec_buf: int,
+                         dtype=None) -> EncDecCache:
+    """Whisper: concatenate materialized cross-KVs of the retrieved audio chunks
+    along the encoder axis; decoder self-cache starts empty."""
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    ck = jnp.concatenate([a[0] for a in cross_artifacts], axis=2).astype(dtype)
+    cv = jnp.concatenate([a[1] for a in cross_artifacts], axis=2).astype(dtype)
+    n_layers, batch = ck.shape[0], ck.shape[1]
+    shape = (n_layers, batch, dec_buf, cfg.num_kv_heads, cfg.head_dim)
+    return EncDecCache(
+        cross_k=ck, cross_v=cv,
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        slot_pos=jnp.full((dec_buf,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32))

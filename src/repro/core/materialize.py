@@ -1,0 +1,166 @@
+"""Chunk-KV materialization — the MatKV write path (paper §III-B, Fig. 3a).
+
+``Materializer`` runs a chunk through the model's prefill once (at ingest
+time), serializes the per-layer KV stacks (or recurrent states / cross-KV,
+per family) and persists them in the flash store keyed by chunk_id. Prefill is
+jitted per padded length bucket so ragged chunks don't trigger recompiles.
+
+Artifacts may be stored quantized (int8 + f16 scales, DESIGN.md §9), halving
+both the flash footprint and the load bytes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunking import Chunk
+from repro.core.quantize import dequantize_kv, quantize_kv
+from repro.kvstore.serialization import deserialize, serialize
+
+
+def _bucket(n: int) -> int:
+    """Pad ragged chunk lengths to the next power-of-two bucket (min 16)."""
+    b = 16
+    while b < n:
+        b *= 2
+    return b
+
+
+class Materializer:
+    def __init__(self, model, params, store, quantized: bool = False):
+        self.model = model
+        self.params = params
+        self.store = store
+        self.quantized = quantized
+        self.cfg = model.cfg
+        self._jitted = {}
+
+    # -- write path ------------------------------------------------------------
+    def _prefill_fn(self, padded_len: int):
+        if padded_len not in self._jitted:
+            def fn(params, tokens):
+                _, artifact = self.model.prefill(params, {"tokens": tokens})
+                return artifact
+            self._jitted[padded_len] = jax.jit(fn)
+        return self._jitted[padded_len]
+
+    def compute_artifact(self, tokens: np.ndarray):
+        """tokens (S,) -> family-specific artifact, trimmed to true length."""
+        s = int(tokens.shape[0])
+        pad = _bucket(s)
+        padded = np.zeros((1, pad), np.int32)
+        padded[0, :s] = tokens
+        if self.model.is_encdec:
+            # audio chunks: tokens stand in for frame ids; the stub frontend
+            # provides embeddings directly (see serving engine / input_specs)
+            raise ValueError("use compute_audio_artifact for enc-dec models")
+        artifact = self._prefill_fn(pad)(self.params, jnp.asarray(padded))
+        return self._trim(artifact, s)
+
+    def compute_audio_artifact(self, frames: np.ndarray):
+        """frames (T, D) stub embeddings -> cross-KV artifact (enc-dec)."""
+        fn = jax.jit(lambda p, f: self.model.prefill(p, {"frontend": f})[1])
+        return fn(self.params, jnp.asarray(frames)[None])
+
+    def _trim(self, artifact, s: int):
+        fam = self.cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            k, v = artifact
+            return (k[:, :, :s], v[:, :, :s])
+        if fam == "ssm":
+            # state after padded zeros is NOT the state after s tokens if pad
+            # tokens were appended — we pad with zeros *after* and mask is not
+            # applied, so recompute on exact length instead for ssm/hybrid.
+            return artifact
+        if fam == "hybrid":
+            (k, v), rec = artifact
+            return ((k[:, :, :s], v[:, :, :s]), rec)
+        return artifact
+
+    def _prefill_exact(self, tokens: np.ndarray):
+        """Recurrent families: run at exact length (padding would corrupt the
+        final state). jit per distinct length (chunk sizes are uniform)."""
+        key = ("exact", int(tokens.shape[0]))
+        if key not in self._jitted:
+            def fn(params, toks):
+                _, artifact = self.model.prefill(params, {"tokens": toks})
+                return artifact
+            self._jitted[key] = jax.jit(fn)
+        return self._jitted[key](self.params, jnp.asarray(tokens)[None])
+
+    def artifact_tensors(self, artifact) -> Dict[str, np.ndarray]:
+        """Flatten an artifact to named tensors (batch dim squeezed)."""
+        fam = self.cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            k, v = artifact
+            out = {"k": k[:, 0], "v": v[:, 0]}
+        elif fam == "ssm":
+            conv, h = artifact
+            out = {"conv": conv[:, 0], "h": h[:, 0]}
+        elif fam == "hybrid":
+            (k, v), (conv, h) = artifact
+            out = {"k": k[:, 0], "v": v[:, 0], "conv": conv[:, 0], "h": h[:, 0]}
+        else:  # encdec
+            ck, cv = artifact
+            out = {"cross_k": ck[:, 0], "cross_v": cv[:, 0]}
+        out = {n: np.asarray(a) for n, a in out.items()}
+        if self.quantized:
+            q = {}
+            for n, a in out.items():
+                if n in ("k", "v", "cross_k", "cross_v"):
+                    qv, sc = quantize_kv(jnp.asarray(a))
+                    q[n + ".q8"] = np.asarray(qv)
+                    q[n + ".scale"] = np.asarray(sc)
+                else:
+                    q[n] = a
+            out = q
+        return out
+
+    def ingest(self, chunk: Chunk) -> int:
+        """Materialize one chunk; returns stored payload size in bytes."""
+        if self.cfg.family in ("ssm", "hybrid"):
+            artifact = self._prefill_exact(chunk.tokens)
+        else:
+            artifact = self.compute_artifact(chunk.tokens)
+        tensors = self.artifact_tensors(artifact)
+        meta = {"arch": self.cfg.name, "family": self.cfg.family,
+                "n_tokens": len(chunk), "chunk_id": chunk.chunk_id,
+                "doc_id": chunk.doc_id, "quantized": self.quantized}
+        payload = serialize(tensors, meta)
+        self.store.put(chunk.chunk_id, payload)
+        return len(payload)
+
+    def ingest_corpus(self, chunks: Sequence[Chunk]) -> int:
+        return sum(self.ingest(c) for c in chunks)
+
+
+# -- read path ----------------------------------------------------------------
+
+def load_artifact(cfg, payload: bytes, dtype=None):
+    """bytes -> (family artifact with batch dim restored, meta)."""
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    tensors, meta = deserialize(payload)
+
+    def deq(name):
+        if name + ".q8" in tensors:
+            return dequantize_kv(jnp.asarray(tensors[name + ".q8"]),
+                                 jnp.asarray(tensors[name + ".scale"]), dtype)
+        return jnp.asarray(tensors[name]).astype(dtype)
+
+    fam = meta["family"]
+    if fam in ("dense", "vlm", "moe"):
+        art = (deq("k")[:, None], deq("v")[:, None])
+    elif fam == "ssm":
+        art = (jnp.asarray(tensors["conv"])[:, None],
+               jnp.asarray(tensors["h"])[:, None].astype(jnp.float32))
+    elif fam == "hybrid":
+        art = ((deq("k")[:, None], deq("v")[:, None]),
+               (jnp.asarray(tensors["conv"])[:, None],
+                jnp.asarray(tensors["h"])[:, None].astype(jnp.float32)))
+    else:  # encdec / audio
+        art = (deq("cross_k")[:, None], deq("cross_v")[:, None])
+    return art, meta

@@ -1,0 +1,35 @@
+"""Int8 KV quantization for flash storage (beyond-paper extension, DESIGN.md §9).
+
+Symmetric per-(layer, token, head) quantization over the head_dim axis. Halves
+the bytes MatKV stores and loads versus bf16 — which doubles the ten-day-rule
+break-even interval and halves load latency. The Pallas kernel in
+``repro.kernels.kv_dequant`` performs the on-load dequantization on-chip; the
+functions here are the reference implementation and the host-side quantizer.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., hd) float -> (int8 values (..., hd), f16 scales (..., 1))."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def quantization_error(x: jnp.ndarray) -> float:
+    q, s = quantize_kv(x)
+    back = dequantize_kv(q, s, jnp.float32)
+    denom = float(jnp.sqrt(jnp.mean(x.astype(jnp.float32) ** 2))) + 1e-12
+    return float(jnp.sqrt(jnp.mean((back - x.astype(jnp.float32)) ** 2))) / denom

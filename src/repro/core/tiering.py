@@ -1,0 +1,199 @@
+"""Selective materialization + eviction for the MatKV store (paper §III-E).
+
+The paper's evaluation uses the deliberately-simplified *Eager,
+Materialize-All* strategy; its Discussion section sketches what a deployment
+needs instead. This module implements that sketch as a first-class layer:
+
+- **Admission** (`TenDayAdmission`): materialize a chunk's KV only once its
+  *observed* inter-access interval beats the Eq.-1 break-even interval —
+  the ten-day rule applied per object instead of fleet-wide. First access is
+  always a miss (the paper's cold start); the second access inside the
+  break-even window triggers materialization (lazy, §III-B footnote).
+- **Eviction** (`LruPolicy`, `LfuPolicy`, `CostAwarePolicy`): when the flash
+  budget saturates, drop the KV whose loss costs least. CostAware ranks by
+  (access rate x recompute cost saved per access) / bytes — i.e. evict the
+  lowest $-value per byte, the direct TCO objective from §III-E.
+- **`TieredStore`**: wraps any KV store with admission + eviction + stats;
+  misses fall back to recompute (the caller's materializer), exactly the
+  cold-start path.
+
+Pure host-side control plane: no jax, deterministic, unit-testable.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+from repro.core.economics import (GpuSpec, SsdSpec, H100, SAMSUNG_9100_PRO,
+                                  break_even_interval_s)
+
+
+# ---------------------------------------------------------------------------
+# admission
+# ---------------------------------------------------------------------------
+
+class AlwaysAdmit:
+    """The paper's Eager Materialize-All baseline."""
+
+    def on_access(self, chunk_id: str, now: float) -> bool:
+        return True
+
+
+class TenDayAdmission:
+    """Materialize once the observed inter-access interval is inside the
+    per-object break-even interval T (Eq. 1). One re-access within T is the
+    cheapest sufficient evidence the object is 'hot enough to store'."""
+
+    def __init__(self, gpu: GpuSpec = H100, ssd: SsdSpec = SAMSUNG_9100_PRO,
+                 kv_bytes_per_token: int = 250_000):
+        self.break_even_s = break_even_interval_s(gpu, ssd,
+                                                  kv_bytes_per_token)
+        self._last_seen: Dict[str, float] = {}
+
+    def on_access(self, chunk_id: str, now: float) -> bool:
+        prev = self._last_seen.get(chunk_id)
+        self._last_seen[chunk_id] = now
+        return prev is not None and (now - prev) <= self.break_even_s
+
+
+# ---------------------------------------------------------------------------
+# eviction
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _Entry:
+    nbytes: int
+    hits: int = 0
+    last_access: float = 0.0
+    first_access: float = 0.0
+
+
+class LruPolicy:
+    def victim(self, entries: "OrderedDict[str, _Entry]") -> str:
+        return min(entries, key=lambda c: entries[c].last_access)
+
+
+class LfuPolicy:
+    def victim(self, entries: "OrderedDict[str, _Entry]") -> str:
+        return min(entries, key=lambda c: (entries[c].hits,
+                                           entries[c].last_access))
+
+
+class CostAwarePolicy:
+    """Evict the lowest saved-$-per-byte object: value = hit rate x
+    (recompute cost per access) / size. Ties the eviction order directly to
+    the paper's TCO argument."""
+
+    def __init__(self, now_fn: Callable[[], float] = time.monotonic):
+        self._now = now_fn
+
+    def victim(self, entries: "OrderedDict[str, _Entry]") -> str:
+        now = self._now()
+
+        def value(c: str) -> float:
+            e = entries[c]
+            age = max(now - e.first_access, 1e-9)
+            rate = e.hits / age
+            return rate / max(e.nbytes, 1)
+
+        return min(entries, key=value)
+
+
+# ---------------------------------------------------------------------------
+# the tiered store
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TierStats:
+    hits: int = 0
+    misses: int = 0
+    admissions: int = 0
+    rejections: int = 0
+    evictions: int = 0
+    bytes_evicted: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class TieredStore:
+    """Admission-gated, capacity-bounded wrapper around a flash KV store.
+
+    ``get(chunk_id)`` returns the payload on hit or None on miss (caller
+    recomputes — the cold-start path). ``offer(chunk_id, payload)`` runs the
+    admission policy and, if admitted, writes through to the backing store,
+    evicting victims while over budget.
+    """
+
+    def __init__(self, store, capacity_bytes: int,
+                 admission=None, eviction=None,
+                 now_fn: Callable[[], float] = time.monotonic):
+        self.store = store
+        self.capacity_bytes = capacity_bytes
+        self.admission = admission or AlwaysAdmit()
+        self.eviction = eviction or LruPolicy()
+        self.stats = TierStats()
+        self._now = now_fn
+        self._entries: "OrderedDict[str, _Entry]" = OrderedDict()
+        self._used = 0
+
+    # -- read path -------------------------------------------------------------
+    def get(self, chunk_id: str) -> Optional[bytes]:
+        now = self._now()
+        entry = self._entries.get(chunk_id)
+        if entry is None:
+            self.stats.misses += 1
+            # a miss is still an access: it feeds the admission estimator
+            return None
+        entry.hits += 1
+        entry.last_access = now
+        self.stats.hits += 1
+        return self.store.get(chunk_id)
+
+    # -- write path ------------------------------------------------------------
+    def offer(self, chunk_id: str, payload: bytes) -> bool:
+        """Admission-gated materialization; returns True if stored."""
+        now = self._now()
+        if chunk_id in self._entries:
+            return True
+        if not self.admission.on_access(chunk_id, now):
+            self.stats.rejections += 1
+            return False
+        if len(payload) > self.capacity_bytes:
+            self.stats.rejections += 1
+            return False
+        while self._used + len(payload) > self.capacity_bytes:
+            self._evict_one()
+        self.store.put(chunk_id, payload)
+        self._entries[chunk_id] = _Entry(nbytes=len(payload),
+                                         last_access=now, first_access=now)
+        self._used += len(payload)
+        self.stats.admissions += 1
+        return True
+
+    def delete(self, chunk_id: str) -> None:
+        e = self._entries.pop(chunk_id, None)
+        if e is not None:
+            self._used -= e.nbytes
+            self.store.delete(chunk_id)
+
+    def _evict_one(self) -> None:
+        victim = self.eviction.victim(self._entries)
+        e = self._entries.pop(victim)
+        self._used -= e.nbytes
+        self.store.delete(victim)
+        self.stats.evictions += 1
+        self.stats.bytes_evicted += e.nbytes
+
+    # -- introspection -----------------------------------------------------------
+    @property
+    def used_bytes(self) -> int:
+        return self._used
+
+    def __contains__(self, chunk_id: str) -> bool:
+        return chunk_id in self._entries

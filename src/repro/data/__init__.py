@@ -1,0 +1,6 @@
+from repro.data.pipeline import PrefetchIterator, batched
+from repro.data.synthetic import KvQaTask, QaExample, f1_score, lm_stream
+from repro.data.tokenizer import BOS, EOS, PAD, SEP, ByteTokenizer
+
+__all__ = ["PrefetchIterator", "batched", "KvQaTask", "QaExample", "f1_score",
+           "lm_stream", "BOS", "EOS", "PAD", "SEP", "ByteTokenizer"]

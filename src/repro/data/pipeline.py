@@ -1,0 +1,53 @@
+"""Host-side data pipeline: batching + background prefetch of the next batch
+(device-feed overlap, the training-side sibling of the serving prefetcher)."""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator
+
+import numpy as np
+
+
+class PrefetchIterator:
+    """Wrap a batch iterator; a daemon thread keeps ``depth`` batches ready."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._it = it
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item
+
+
+def batched(task, batch: int, max_len: int, n_context: int = 2,
+            seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
+    """Batch KvQaTask training examples with left-padding to max_len."""
+    while True:
+        toks = np.zeros((batch, max_len), np.int32)
+        labels = np.zeros((batch, max_len), np.int32)
+        mask = np.zeros((batch, max_len), np.float32)
+        for b in range(batch):
+            t, m = task.train_example(max_len, n_context)
+            toks[b, -len(t):] = t
+            # next-token prediction: labels shifted left
+            labels[b, -len(t):-1] = t[1:]
+            mask[b, -len(t):-1] = m[1:]
+        yield {"tokens": toks, "labels": labels, "loss_mask": mask}

@@ -1,0 +1,154 @@
+"""Synthetic data generators.
+
+1. ``lm_stream`` — token LM batches (mixture of Zipf unigrams + copy motifs so
+   a model actually has something learnable) for the training substrate.
+2. ``KvQaTask`` — the key-value question-answering corpus used for the
+   accuracy benchmark (paper Table VI analogue, DESIGN.md §7): documents are
+   collections of "key = value" facts; a query names a key; the answer is its
+   value. Answering requires attending from the query into one retrieved
+   document — exactly the self-attention pattern MatKV preserves — while
+   cross-document attention is unnecessary, mirroring the paper's insight.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Tuple
+
+import numpy as np
+
+from repro.data.tokenizer import BOS, EOS, SEP, ByteTokenizer
+
+
+def lm_stream(vocab_size: int, batch: int, seq_len: int, seed: int = 0
+              ) -> Iterator[Dict[str, np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab_size)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    while True:
+        toks = rng.choice(np.arange(1, vocab_size), size=(batch, seq_len + 1),
+                          p=probs)
+        # plant learnable copy motifs: x[t] == x[t-3] on random spans
+        for b in range(batch):
+            start = rng.integers(0, seq_len // 2)
+            span = rng.integers(8, max(9, seq_len // 4))
+            motif = toks[b, start:start + 3]
+            reps = np.tile(motif, span // 3 + 1)[:span]
+            toks[b, start:start + span] = reps
+        yield {"tokens": toks[:, :-1].astype(np.int32),
+               "labels": toks[:, 1:].astype(np.int32)}
+
+
+# ---------------------------------------------------------------------------
+# KV-QA retrieval task
+# ---------------------------------------------------------------------------
+
+_WORDS = [
+    "amber", "basil", "cedar", "delta", "ember", "fjord", "grove", "haven",
+    "iris", "jade", "karst", "lotus", "maple", "nadir", "ocean", "pearl",
+    "quartz", "raven", "slate", "topaz", "umber", "vapor", "willow", "xenon",
+    "yarrow", "zephyr", "birch", "coral", "dune", "elm",
+]
+
+
+def _word(rng) -> str:
+    return rng.choice(_WORDS) + str(rng.integers(10, 99))
+
+
+@dataclass
+class QaExample:
+    question: str
+    answer: str
+    gold_doc: str
+
+
+class KvQaTask:
+    """n_docs documents, each with n_facts 'key = value' lines."""
+
+    def __init__(self, n_docs: int = 32, n_facts: int = 8, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.tok = ByteTokenizer()
+        self.docs: Dict[str, str] = {}
+        self.facts: List[Tuple[str, str, str]] = []  # (key, value, doc_id)
+        used = set()
+        for d in range(n_docs):
+            doc_id = f"doc{d:04d}"
+            lines = []
+            for _ in range(n_facts):
+                key = _word(rng) + " " + _word(rng)
+                while key in used:
+                    key = _word(rng) + " " + _word(rng)
+                used.add(key)
+                val = _word(rng)
+                lines.append(f"the {key} is {val}.")
+                self.facts.append((key, val, doc_id))
+            self.docs[doc_id] = " ".join(lines)
+        self._rng = rng
+
+    def examples(self, n: int) -> List[QaExample]:
+        idx = self._rng.choice(len(self.facts), size=n, replace=True)
+        return [QaExample(question=f"what is the {self.facts[i][0]}?",
+                          answer=self.facts[i][1],
+                          gold_doc=self.facts[i][2]) for i in idx]
+
+    # -- tokenized forms --------------------------------------------------------
+    def doc_tokens(self, doc_id: str) -> np.ndarray:
+        return self.tok.encode(self.docs[doc_id])
+
+    def prompt_tokens(self, question: str) -> np.ndarray:
+        # EXACTLY the serving engine's prompt layout (RagEngine._prompt):
+        # SEP question SEP — train/serve format mismatches here cost the
+        # whole benchmark (a 2-layer model has no robustness to spare)
+        return np.concatenate([[SEP], self.tok.encode(" " + question + " "),
+                               [SEP]])
+
+    def train_example(self, max_len: int, n_context: int = 2,
+                      chunk_tokens: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+        """(tokens, loss_mask): [docs | SEP question SEP answer EOS], loss on
+        the answer tokens only. Docs are padded to ``chunk_tokens`` multiples
+        with PAD — the same layout the serving engine produces when it
+        concatenates materialized chunk KVs."""
+        i = int(self._rng.integers(len(self.facts)))
+        key, val, doc_id = self.facts[i]
+        others = [d for d in self.docs if d != doc_id]
+        picks = list(self._rng.choice(others, size=n_context - 1,
+                                      replace=False)) if n_context > 1 else []
+        doc_ids = picks + [doc_id]
+        self._rng.shuffle(doc_ids)
+
+        def chunked(tokens: np.ndarray) -> np.ndarray:
+            n = -(-len(tokens) // chunk_tokens) * chunk_tokens
+            out = np.zeros((n,), np.int32)     # PAD = 0
+            out[:len(tokens)] = tokens
+            return out
+
+        parts = [chunked(self.tok.encode(self.docs[d])) for d in doc_ids]
+        prompt = self.prompt_tokens(f"what is the {key}?")
+        ans = np.concatenate([self.tok.encode(val), [EOS]])
+        toks = np.concatenate(parts + [prompt, ans]).astype(np.int32)
+        mask = np.zeros_like(toks)
+        mask[-len(ans):] = 1
+        if len(toks) > max_len:
+            toks = toks[-max_len:]
+            mask = mask[-max_len:]
+        return toks, mask
+
+
+def f1_score(pred: str, gold: str) -> float:
+    """Token-level F1 (the paper's QA metric)."""
+    p = pred.lower().split()
+    g = gold.lower().split()
+    if not p or not g:
+        return float(p == g)
+    common = 0
+    gg = list(g)
+    for t in p:
+        if t in gg:
+            gg.remove(t)
+            common += 1
+    if common == 0:
+        return 0.0
+    prec = common / len(p)
+    rec = common / len(g)
+    return 2 * prec * rec / (prec + rec)

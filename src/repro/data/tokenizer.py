@@ -1,0 +1,35 @@
+"""Byte-level tokenizer (no external vocab files): token = byte + offset for a
+few special tokens. Enough to run real text through the RAG pipeline and the
+synthetic QA benchmarks; any vocab_size >= 260 model config can consume it."""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+PAD = 0
+BOS = 1
+EOS = 2
+SEP = 3  # document / query separator in RAG prompts
+_OFFSET = 4
+
+
+class ByteTokenizer:
+    vocab_size = 256 + _OFFSET
+
+    def encode(self, text: str, add_bos: bool = False,
+               add_eos: bool = False) -> np.ndarray:
+        ids = [b + _OFFSET for b in text.encode("utf-8")]
+        if add_bos:
+            ids = [BOS] + ids
+        if add_eos:
+            ids = ids + [EOS]
+        return np.asarray(ids, np.int32)
+
+    def decode(self, ids) -> str:
+        # skip specials and out-of-byte-range ids (models may have
+        # vocab_size > 260; an untrained one can emit those ids)
+        bs = bytes(int(i) - _OFFSET for i in np.asarray(ids).ravel()
+                   if _OFFSET <= int(i) < 256 + _OFFSET)
+        return bs.decode("utf-8", errors="replace")

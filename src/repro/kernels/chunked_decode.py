@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: single-token decode attention over a composed MatKV cache.
+
+This is MatKV's serving hot spot: the new token's q attends to the
+concatenated, flash-loaded chunk KVs. The cache stays in HBM and is streamed
+through VMEM in ``block_k`` tiles; grid (batch, kv_head, kv_blocks) with the
+kv-block dim innermost carrying flash-decoding running stats in VMEM scratch.
+The valid prefix length arrives as a scalar in SMEM (slots >= cache_len are
+masked — composed caches are padded to the buffer size). GQA: all ``group`` q
+heads of one kv head are processed together as the (sublane) rows of one MXU
+matmul — q tile is (group, hd), scores tile is (group, block_k).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_k: int, window):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    cache_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (group, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (block_k, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < cache_len
+    if window is not None:
+        mask &= kpos > cache_len - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.maximum(m_new, -1e29)
+    p = jnp.exp(s - m_safe)
+    alpha = jnp.exp(jnp.maximum(m_prev, -1e29) - m_safe)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def chunked_decode(q, k, v, cache_len, *, window=None, block_k: int = 512,
+                   interpret: bool = True):
+    """q (B,H,hd), k/v (B,KV,S,hd), cache_len scalar int32 -> (B,H,hd)."""
+    b, h, hd = q.shape
+    kvh, s = k.shape[1], k.shape[2]
+    group = h // kvh
+    block_k = min(block_k, s)
+    if s % block_k:
+        raise ValueError(f"cache size {s} must divide block_k {block_k}")
+    grid = (b, kvh, s // block_k)
+    qg = q.reshape(b, kvh, group, hd)
+    clen = jnp.asarray(cache_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_kernel, scale=hd ** -0.5, block_k=block_k,
+                               window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, group, hd), lambda bi, ci, ki: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bi, ci, ki: (bi, ci, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda bi, ci, ki: (bi, ci, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, hd),
+                               lambda bi, ci, ki: (bi, ci, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, group, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(clen, qg, k, v)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: blockwise causal flash attention (the MatKV chunk
+materialization / vanilla-baseline prefill hot spot).
+
+TPU-native adaptation of FlashAttention: the score matrix never leaves VMEM;
+the grid is (batch, q_head, q_blocks, kv_blocks) with the kv dimension
+innermost (sequential on TPU), carrying running max / sum / output accumulator
+in VMEM scratch. GQA is expressed through the k/v BlockSpec index maps
+(q head h reads kv head h // group) — no host-side K/V repetition, so HBM
+traffic stays at the GQA level. Block shapes are MXU-aligned (multiples of
+128 on the lane dim; head_dim is the minor dim).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_k: int, window, causal: bool):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # clamp: rows with nothing visible yet keep exp() finite
+    m_safe = jnp.maximum(m_new, -1e29)
+    p = jnp.exp(s - m_safe)
+    alpha = jnp.exp(jnp.maximum(m_prev, -1e29) - m_safe)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill(q, k, v, *, window=None, causal: bool = True,
+                  block_q: int = 128, block_k: int = 128,
+                  interpret: bool = True):
+    """q (B,H,Sq,hd), k/v (B,KV,Sk,hd) -> (B,H,Sq,hd)."""
+    b, h, sq, hd = q.shape
+    kvh, sk = k.shape[1], k.shape[2]
+    group = h // kvh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(f"seq lens ({sq},{sk}) must divide blocks "
+                         f"({block_q},{block_k})")
+    grid = (b, h, sq // block_q, sk // block_k)
+
+    kernel = functools.partial(
+        _kernel, scale=hd ** -0.5, block_q=block_q, block_k=block_k,
+        window=window, causal=causal)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: on-load int8 -> bf16 KV dequantization.
+
+MatKV's int8-on-flash extension (DESIGN.md §9) halves flash bytes; this kernel
+turns the loaded int8 payload + per-vector f16 scales back into bf16 KV tiles
+on-chip, so the HBM->VMEM stream stays at int8 width and the widening happens
+next to the compute. Elementwise, tiled over (rows, hd) VMEM blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+def kv_dequant(q8, scale, *, out_dtype=jnp.bfloat16, block_rows: int = 256,
+               interpret: bool = True):
+    """q8 (N, hd) int8, scale (N, 1) f16 -> (N, hd) out_dtype.
+
+    Callers flatten (L,S,KV) into N; ops.py handles the reshape.
+    """
+    n, hd = q8.shape
+    block_rows = min(block_rows, n)
+    if n % block_rows:
+        raise ValueError(f"rows {n} must divide block_rows {block_rows}")
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, hd), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, hd), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, hd), out_dtype),
+        interpret=interpret,
+    )(q8, scale)

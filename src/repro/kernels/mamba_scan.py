@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: chunked Mamba selective scan.
+
+The recurrence h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t is sequential in t, but
+TPU-native chunking keeps it fast: the grid is (batch, d_inner blocks, time
+chunks) with time innermost (sequential); the (block_d, state) hidden state
+lives in VMEM scratch and is carried across time chunks, while each chunk's
+x/dt/B/C tiles stream HBM->VMEM. Within a chunk a fori_loop steps the
+recurrence entirely in registers/VMEM. This is the materialization hot spot
+for SSM archs (falcon-mamba): MatKV's per-chunk state artifact is h after the
+final time chunk (also written out).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, b_ref, c_ref, alog_ref, h0_ref, y_ref, hout_ref,
+            h_scr, *, block_t: int):
+    ti = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = -jnp.exp(alog_ref[...].astype(jnp.float32))      # (bd, st)
+    x = x_ref[0].astype(jnp.float32)                     # (bt, bd)
+    dt = dt_ref[0].astype(jnp.float32)                   # (bt, bd)
+    bm = b_ref[0].astype(jnp.float32)                    # (bt, st)
+    cm = c_ref[0].astype(jnp.float32)                    # (bt, st)
+
+    def step(t, carry):
+        h = carry
+        da = jnp.exp(dt[t][:, None] * a)                 # (bd, st)
+        h = da * h + (dt[t] * x[t])[:, None] * bm[t][None, :]
+        y_ref[0, t, :] = jnp.sum(h * cm[t][None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, h_scr[...])
+    h_scr[...] = h
+
+    @pl.when(ti == nt - 1)
+    def _write_state():
+        hout_ref[0] = h.astype(hout_ref.dtype)
+
+
+def mamba_scan(x, dt, bmat, cmat, a_log, h0, *, block_d: int = 256,
+               block_t: int = 128, interpret: bool = True):
+    """Chunked selective scan (no D-skip; ops.py adds it).
+
+    x/dt (B,S,din) f32, bmat/cmat (B,S,st), a_log (din,st), h0 (B,din,st).
+    Returns (y (B,S,din), h_final (B,din,st)).
+    """
+    b, s, din = x.shape
+    st = bmat.shape[-1]
+    block_d = min(block_d, din)
+    block_t = min(block_t, s)
+    if din % block_d or s % block_t:
+        raise ValueError(f"(din={din}, S={s}) must divide blocks "
+                         f"({block_d},{block_t})")
+    grid = (b, din // block_d, s // block_t)
+
+    kernel = functools.partial(_kernel, block_t=block_t)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_t, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_t, st), lambda bi, di, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, block_t, st), lambda bi, di, ti: (bi, ti, 0)),
+            pl.BlockSpec((block_d, st), lambda bi, di, ti: (di, 0)),
+            pl.BlockSpec((1, block_d, st), lambda bi, di, ti: (bi, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda bi, di, ti: (bi, ti, di)),
+            pl.BlockSpec((1, block_d, st), lambda bi, di, ti: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, din), x.dtype),
+            jax.ShapeDtypeStruct((b, din, st), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, st), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, bmat, cmat, a_log, h0)
+    return y, h

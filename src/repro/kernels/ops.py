@@ -1,0 +1,61 @@
+"""jit'd wrappers around the Pallas kernels, in model-layout terms.
+
+``interpret`` defaults to True because this container is CPU-only; on a real
+TPU deployment set REPRO_PALLAS_INTERPRET=0 (or pass interpret=False) and the
+same kernels compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunked_decode import chunked_decode
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.kv_dequant import kv_dequant
+from repro.kernels.mamba_scan import mamba_scan
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def flash_prefill_op(q, k, v, window=None, interpret=None):
+    """Model layout: q (B,S,H,hd), k/v (B,S,KV,hd) -> (B,S,H,hd)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    out = flash_prefill(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), window=window,
+                        interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def chunked_decode_op(q, k, v, cache_len, window=None, interpret=None):
+    """Model layout: q (B,1,H,hd), cache k/v (B,S,KV,hd) -> (B,1,H,hd)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    out = chunked_decode(q[:, 0], k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), cache_len,
+                         window=window, interpret=interpret)
+    return out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def kv_dequant_op(q8, scale, out_dtype=jnp.bfloat16, interpret=None):
+    """Artifact layout: q8 (L,S,KV,hd) int8, scale (L,S,KV,1) f16."""
+    interpret = _interpret_default() if interpret is None else interpret
+    l, s, kvh, hd = q8.shape
+    flat = kv_dequant(q8.reshape(-1, hd), scale.reshape(-1, 1),
+                      out_dtype=out_dtype, interpret=interpret)
+    return flat.reshape(l, s, kvh, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mamba_scan_op(x, dt, bmat, cmat, a_log, d_skip, h0, interpret=None):
+    """Model layout (matches models.mamba.selective_scan): adds the D-skip."""
+    interpret = _interpret_default() if interpret is None else interpret
+    y, h = mamba_scan(x, dt, bmat, cmat, a_log, h0, interpret=interpret)
+    return y + d_skip * x, h

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, window=None):
+    """Causal (optionally windowed) attention.
+
+    q (B,H,Sq,hd), k/v (B,KV,Sk,hd), Sq == Sk (prefill). f32 softmax.
+    """
+    b, h, sq, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qr = q.reshape(b, kv, g, sq, hd)
+    s = jnp.einsum("bcgqd,bckd->bcgqk", qr, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bcgqk,bckd->bcgqd", p, v)
+    return out.reshape(b, h, sq, hd).astype(q.dtype)
+
+
+def chunked_decode_ref(q, k, v, cache_len, window=None):
+    """One-token decode attention over a composed KV cache.
+
+    q (B,H,hd); k/v (B,KV,S,hd); cache_len scalar int (valid prefix length).
+    The query sits at position cache_len (it may attend to all valid slots).
+    """
+    b, h, hd = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    qr = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bcgd,bckd->bcgk", qr, k,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    kpos = jnp.arange(s)
+    mask = kpos < cache_len
+    if window is not None:
+        mask &= kpos > cache_len - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bcgk,bckd->bcgd", p, v)
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def kv_dequant_ref(q8, scale, dtype=jnp.bfloat16):
+    """int8 (..., hd) x f16 scale (..., 1) -> dtype."""
+    return (q8.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def mamba_scan_ref(x, dt, bmat, cmat, a_log, d_skip, h0):
+    """Selective scan oracle. x/dt (B,S,din) f32, bmat/cmat (B,S,st),
+    a_log (din,st), d_skip (din,), h0 (B,din,st). Returns (y, h_final)."""
+    a = -jnp.exp(a_log)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[..., None] * a)
+        h = da * h + dtt[..., None] * bt[:, None, :] * xt[..., None]
+        return h, jnp.einsum("bds,bs->bd", h, ct)
+
+    xs = (x.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          bmat.transpose(1, 0, 2), cmat.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2) + d_skip[None, None, :] * x, h

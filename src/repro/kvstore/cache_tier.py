@@ -1,0 +1,79 @@
+"""DRAM LRU cache tier in front of the flash store (paper §III-E "hierarchical
+storage"; Table III's DRAM configuration is this tier with capacity=inf)."""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Optional
+
+
+class LruBytesCache:
+    def __init__(self, capacity_bytes: int):
+        self.capacity = capacity_bytes
+        self._data: "OrderedDict[str, bytes]" = OrderedDict()
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> Optional[bytes]:
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return self._data[key]
+            self.misses += 1
+            return None
+
+    def put(self, key: str, value: bytes) -> None:
+        with self._lock:
+            if key in self._data:
+                self._bytes -= len(self._data.pop(key))
+            if len(value) > self.capacity:
+                return
+            self._data[key] = value
+            self._bytes += len(value)
+            while self._bytes > self.capacity and self._data:
+                _, old = self._data.popitem(last=False)
+                self._bytes -= len(old)
+
+    def invalidate(self, key: str) -> None:
+        with self._lock:
+            if key in self._data:
+                self._bytes -= len(self._data.pop(key))
+
+    @property
+    def size_bytes(self) -> int:
+        return self._bytes
+
+
+class TieredStore:
+    """get-through DRAM tier over a FlashKVStore."""
+
+    def __init__(self, flash, dram_capacity_bytes: int = 0):
+        self.flash = flash
+        self.dram = LruBytesCache(dram_capacity_bytes) if dram_capacity_bytes else None
+
+    def put(self, chunk_id: str, payload: bytes) -> None:
+        self.flash.put(chunk_id, payload)
+        if self.dram is not None:
+            self.dram.put(chunk_id, payload)
+
+    def get(self, chunk_id: str) -> bytes:
+        if self.dram is not None:
+            hit = self.dram.get(chunk_id)
+            if hit is not None:
+                return hit
+        data = self.flash.get(chunk_id)
+        if self.dram is not None:
+            self.dram.put(chunk_id, data)
+        return data
+
+    def exists(self, chunk_id: str) -> bool:
+        return self.flash.exists(chunk_id)
+
+    def delete(self, chunk_id: str) -> bool:
+        if self.dram is not None:
+            self.dram.invalidate(chunk_id)
+        return self.flash.delete(chunk_id)

@@ -1,0 +1,66 @@
+"""KV artifact serialization: msgpack header + raw tensor bytes.
+
+Mirrors the paper's DeepNVMe usage: tensors are written as raw bytes (no
+pickle), so reads are a single sequential scan straight into a reusable bounce
+buffer. Header carries shapes/dtypes/meta; payload layout is deterministic
+(sorted keys) so offsets are computable without parsing the payload.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, Dict, Tuple
+
+import msgpack
+import numpy as np
+
+MAGIC = b"MKV1"
+
+_DTYPES = {"bfloat16": 2, "float16": 2, "float32": 4, "int8": 1, "int32": 4}
+
+
+def _np_view(arr) -> np.ndarray:
+    """View any array (incl. jax bfloat16) as raw-byte-compatible numpy."""
+    a = np.asarray(arr)
+    if a.dtype.name == "bfloat16":
+        return a.view(np.uint16)
+    return a
+
+
+def _restore(buf: np.ndarray, dtype_name: str, shape) -> np.ndarray:
+    if dtype_name == "bfloat16":
+        import ml_dtypes  # jax dependency, always present
+        return buf.view(ml_dtypes.bfloat16).reshape(shape)
+    return buf.view(np.dtype(dtype_name)).reshape(shape)
+
+
+def serialize(tensors: Dict[str, Any], meta: Dict[str, Any] | None = None) -> bytes:
+    """tensors: flat dict name -> array. Returns bytes."""
+    names = sorted(tensors)
+    entries, payloads = [], []
+    for name in names:
+        a = np.ascontiguousarray(_np_view(tensors[name]))
+        raw_dtype = np.asarray(tensors[name]).dtype.name
+        entries.append({"name": name, "dtype": raw_dtype,
+                        "shape": list(np.asarray(tensors[name]).shape),
+                        "nbytes": a.nbytes})
+        payloads.append(a.tobytes())
+    header = msgpack.packb({"tensors": entries, "meta": meta or {}})
+    return MAGIC + struct.pack("<I", len(header)) + header + b"".join(payloads)
+
+
+def deserialize(data: bytes) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    if data[:4] != MAGIC:
+        raise ValueError("bad magic: not a MatKV artifact")
+    hlen = struct.unpack("<I", data[4:8])[0]
+    header = msgpack.unpackb(data[8:8 + hlen])
+    out, off = {}, 8 + hlen
+    for e in header["tensors"]:
+        buf = np.frombuffer(data, dtype=np.uint8, count=e["nbytes"], offset=off)
+        out[e["name"]] = _restore(buf, e["dtype"], e["shape"])
+        off += e["nbytes"]
+    return out, header["meta"]
+
+
+def payload_bytes(tensors: Dict[str, Any]) -> int:
+    return sum(np.asarray(v).nbytes for v in tensors.values())

@@ -1,0 +1,60 @@
+"""Bandwidth-profile simulation for Table III (storage-performance sensitivity).
+
+The container's filesystem is far faster than its role in the experiment, so
+reads are throttled to the modeled device's sequential bandwidth: after the real
+read completes, sleep the remainder of ``bytes / bandwidth``. Timing-sensitive
+benchmarks read through one of these profiles; correctness paths use the raw
+store.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.core.economics import (DRAM_TIER, PM9A3, RAID0_9100_PRO_X4,
+                                  SAMSUNG_9100_PRO, SsdSpec)
+
+PROFILES = {
+    "9100pro": SAMSUNG_9100_PRO,
+    "raid0_x4": RAID0_9100_PRO_X4,
+    "pm9a3": PM9A3,
+    "dram": DRAM_TIER,
+}
+
+
+@dataclass
+class ReadRecord:
+    n_bytes: int
+    real_s: float
+    simulated_s: float
+
+
+class SimulatedReader:
+    """Wraps any store with .get(); enforces the profile's read bandwidth."""
+
+    def __init__(self, store, profile: str | SsdSpec = "9100pro"):
+        self.store = store
+        self.spec = PROFILES[profile] if isinstance(profile, str) else profile
+        self.records: list[ReadRecord] = []
+
+    def get(self, chunk_id: str) -> bytes:
+        t0 = time.perf_counter()
+        data = self.store.get(chunk_id)
+        real = time.perf_counter() - t0
+        target = len(data) / (self.spec.read_gbps * 1e9)
+        if target > real:
+            time.sleep(target - real)
+        self.records.append(ReadRecord(len(data), real,
+                                       max(real, target)))
+        return data
+
+    def exists(self, chunk_id: str) -> bool:
+        return self.store.exists(chunk_id)
+
+    @property
+    def total_simulated_s(self) -> float:
+        return sum(r.simulated_s for r in self.records)
+
+    def energy_joules(self) -> float:
+        return self.total_simulated_s * self.spec.active_power_w

@@ -1,0 +1,76 @@
+"""FlashKVStore: the materialized-KV store on flash (paper §IV).
+
+Each chunk's KV artifact is one file named by chunk_id (exactly the paper's
+layout), written atomically (tmp + rename). ``delete`` keeps the store
+consistent with vector-DB deletions. Stats feed the TCO/economics benchmarks.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+@dataclass
+class StoreStats:
+    puts: int = 0
+    gets: int = 0
+    deletes: int = 0
+    bytes_written: int = 0
+    bytes_read: int = 0
+
+
+class FlashKVStore:
+    def __init__(self, root: str):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.stats = StoreStats()
+        self._lock = threading.Lock()
+
+    def _path(self, chunk_id: str) -> Path:
+        if "/" in chunk_id or chunk_id.startswith("."):
+            raise ValueError(f"invalid chunk_id {chunk_id!r}")
+        return self.root / f"{chunk_id}.kv"
+
+    def put(self, chunk_id: str, payload: bytes) -> None:
+        path = self._path(chunk_id)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+        with self._lock:
+            self.stats.puts += 1
+            self.stats.bytes_written += len(payload)
+
+    def get(self, chunk_id: str) -> bytes:
+        with open(self._path(chunk_id), "rb") as f:
+            data = f.read()
+        with self._lock:
+            self.stats.gets += 1
+            self.stats.bytes_read += len(data)
+        return data
+
+    def exists(self, chunk_id: str) -> bool:
+        return self._path(chunk_id).exists()
+
+    def delete(self, chunk_id: str) -> bool:
+        path = self._path(chunk_id)
+        try:
+            path.unlink()
+        except FileNotFoundError:
+            return False
+        with self._lock:
+            self.stats.deletes += 1
+        return True
+
+    def size_bytes(self, chunk_id: str) -> int:
+        return self._path(chunk_id).stat().st_size
+
+    def list_ids(self) -> List[str]:
+        return sorted(p.stem for p in self.root.glob("*.kv"))
+
+    def total_bytes(self) -> int:
+        return sum(p.stat().st_size for p in self.root.glob("*.kv"))

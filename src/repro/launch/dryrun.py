@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is ordinary.
+
+"""Multi-pod dry run: lower + compile every (architecture x input shape) on the
+production meshes, print memory_analysis / cost_analysis, and emit the roofline
+rows consumed by EXPERIMENTS.md §Dry-run / §Roofline.
+
+Two compiles per pair (see DESIGN.md §Roofline-accounting):
+
+1. FIT compile — full depth, scan-over-layers (production lowering). Proves the
+   sharding is coherent and ``memory_analysis()`` reflects the true per-device
+   peak. XLA's cost model counts while-loop bodies once, so this compile is NOT
+   used for FLOPs.
+2. COST lowers — reduced-depth (one and two layer-stack periods) with
+   REPRO_UNROLL=1 (scans unrolled). Per-layer cost slope = (c2p - c1p)/period;
+   total = intercept + slope * num_layers. Captures true per-layer FLOPs,
+   bytes, and collective bytes including everything GSPMD inserts. Time-step
+   recurrences (mamba/RG-LRU) are corrected analytically on top
+   (analysis.roofline.time_scan_correction).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod]
+Results append to experiments/dryrun/results.jsonl (one JSON object per pair).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.analysis.roofline import (Roofline, model_flops_for,
+                                     parse_collectives, time_scan_correction)
+from repro.configs import ASSIGNED, SHAPES, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import Inapplicable, make_lowerable, resolved_config
+
+RESULTS = Path("experiments/dryrun/results.jsonl")
+
+
+def _depth_period(cfg) -> int:
+    """Layer-stack period for the cost extrapolation."""
+    if cfg.family == "hybrid":
+        return len(cfg.block_pattern)
+    return 1
+
+
+def _reduced(cfg, n_layers: int):
+    repl = {"num_layers": n_layers}
+    if cfg.family in ("encdec", "audio"):
+        repl.update(enc_layers=n_layers, dec_layers=n_layers)
+    if cfg.family == "moe":
+        repl.update(first_dense_layers=min(cfg.first_dense_layers, 1))
+    return dataclasses.replace(cfg, **repl)
+
+
+def _cost_of(arch, shape_name, mesh, cfg_override):
+    fn, args, _, _ = make_lowerable(arch, shape_name, mesh,
+                                    cfg_override=cfg_override)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll.total_bytes), dict(coll.bytes_by_op))
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    shape = get_shape(shape_name)
+
+    # ---- 1. FIT compile: full depth, scan lowering --------------------------
+    os.environ["REPRO_UNROLL"] = "0"
+    t0 = time.perf_counter()
+    try:
+        fn, args, rules, cfg = make_lowerable(arch, shape_name, mesh)
+    except Inapplicable as e:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": str(e)}
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    t_fit = time.perf_counter() - t0
+    mem = compiled.memory_analysis()
+    peak = int(getattr(mem, "temp_size_in_bytes", 0)
+               + getattr(mem, "argument_size_in_bytes", 0)
+               + getattr(mem, "output_size_in_bytes", 0)
+               - getattr(mem, "alias_size_in_bytes", 0))
+    print(compiled.memory_analysis())
+
+    # ---- 2. COST lowers: reduced depth, unrolled -----------------------------
+    os.environ["REPRO_UNROLL"] = "1"
+    period = _depth_period(cfg)
+    l1, l2 = period, 2 * period
+    if cfg.family == "moe" and cfg.first_dense_layers:
+        l1, l2 = 2, 3  # 1 dense prefix + (1, 2) moe layers
+    t0 = time.perf_counter()
+    f1, b1, c1, ops1 = _cost_of(arch, shape_name, mesh, _reduced(cfg, l1))
+    f2, b2, c2, ops2 = _cost_of(arch, shape_name, mesh, _reduced(cfg, l2))
+    t_cost = time.perf_counter() - t0
+    os.environ["REPRO_UNROLL"] = "0"
+
+    n_slope = (cfg.num_layers - l1) / (l2 - l1)
+    flops = f1 + (f2 - f1) * n_slope
+    nbytes = b1 + (b2 - b1) * n_slope
+    coll = c1 + (c2 - c1) * n_slope
+    coll_ops = {k: ops1.get(k, 0) + (ops2.get(k, 0) - ops1.get(k, 0)) * n_slope
+                for k in set(ops1) | set(ops2)}
+    xf, xb = time_scan_correction(cfg, shape, chips)
+    flops += xf
+    nbytes += xb
+
+    roof = Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes, collective_bytes=coll,
+        model_flops=model_flops_for(cfg, shape),
+        peak_memory_per_device=peak, collectives=coll_ops)
+    row = roof.row()
+    row.update({
+        "status": "ok",
+        "fit_compile_s": round(t_fit, 2),
+        "cost_compile_s": round(t_cost, 2),
+        "scan_correction_flops": xf, "scan_correction_bytes": xb,
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+    })
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ASSIGNED), help="one architecture")
+    ap.add_argument("--shape", choices=sorted(SHAPES), help="one input shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) pair")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        pairs = [(a, s) for a in sorted(ASSIGNED) for s in
+                 ("train_4k", "prefill_32k", "decode_32k", "long_500k")]
+    elif args.arch and args.shape:
+        pairs = [(args.arch, args.shape)]
+    else:
+        ap.error("--all or both --arch and --shape required")
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    n_devices = len(jax.devices())
+    print(f"devices: {n_devices}")
+    assert n_devices == 512, "dryrun requires the 512-device host platform"
+
+    mesh_name = "2x16x16" if args.multi_pod else "16x16"
+    done = set()
+    if out_path.exists():
+        for line in out_path.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+            except json.JSONDecodeError:
+                pass
+
+    for arch, shape in pairs:
+        if (arch, shape, mesh_name) in done:
+            print(f"CACHED {arch} x {shape} [{mesh_name}]")
+            continue
+        label = f"{arch} x {shape} [{mesh_name}]"
+        try:
+            row = run_pair(arch, shape, args.multi_pod)
+        except Exception as e:  # a failure here is a bug in our sharding
+            row = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-2000:]}
+        with open(out_path, "a") as f:
+            f.write(json.dumps(row) + "\n")
+        if row["status"] == "ok":
+            print(f"OK   {label}: fit={row['fit_compile_s']}s "
+                  f"cost={row['cost_compile_s']}s "
+                  f"bottleneck={row['bottleneck']} "
+                  f"compute={row['compute_s']:.3e}s "
+                  f"memory={row['memory_s']:.3e}s "
+                  f"collective={row['collective_s']:.3e}s "
+                  f"peak/dev={row['peak_memory_per_device']/2**30:.2f}GiB",
+                  flush=True)
+        elif row["status"] == "skipped":
+            print(f"SKIP {label}: {row['reason']}", flush=True)
+        else:
+            print(f"FAIL {label}: {row['error']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

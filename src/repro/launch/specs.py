@@ -1,0 +1,170 @@
+"""ShapeDtypeStruct input specs + lowerable step functions per (arch x shape).
+
+``input_specs(cfg, shape)`` builds weak-type-correct SDS stand-ins for every
+model input (tokens/labels, stub frontend embeddings, decode caches) — no
+device allocation. ``make_lowerable`` pairs them with the right step function
+(train_step / prefill_step / serve_step) and the shardings resolved from
+repro.dist, ready for ``jit(...).lower(...).compile()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import config_for_shape, get_shape
+from repro.configs.shapes import InputShape
+from repro.dist.partition import (batch_specs, cache_specs, param_specs,
+                                  to_shardings, zero1_specs)
+from repro.dist.sharding import mesh_context
+from repro.models import build_model
+from repro.training.optimizer import AdamWConfig, init_state, apply_updates
+
+WHISPER_DECODER_LEN = 448
+
+
+def shape_rules(cfg, shape: InputShape) -> Dict[str, tuple]:
+    """Per-shape logical-rule overrides (DESIGN.md §6)."""
+    if shape.kind in ("train", "prefill"):
+        # Megatron sequence parallelism for the residual stream (and the
+        # context-parallel q fallback for head counts that don't divide the
+        # model axis — see attention._shard_q)
+        return {"act_seq": ("model",)}
+    if shape.kind == "decode" and shape.global_batch == 1:
+        # batch=1 long-context: context-parallel cache over every axis
+        return {"cache_seq": ("pod", "data", "model")}
+    return {}
+
+
+def resolved_config(arch: str, shape_name: str):
+    """config_for_shape + per-shape structural adjustments (whisper enc len)."""
+    cfg, ok, reason = config_for_shape(arch, shape_name)
+    shape = get_shape(shape_name)
+    if cfg.family in ("encdec", "audio"):
+        # seq_len maps to the ENCODER frame axis (the MatKV'd "document");
+        # decoder length is capped by the architecture (448 for whisper)
+        cfg = dataclasses.replace(cfg, enc_positions=shape.seq_len,
+                                  frontend_tokens=shape.seq_len)
+    return cfg, shape, ok, reason
+
+
+def params_sds(model, cfg, shape: InputShape):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if model.is_encdec:
+        return jax.eval_shape(
+            lambda k: model.init(k, enc_len=cfg.enc_positions,
+                                 dec_len=WHISPER_DECODER_LEN), key)
+    return jax.eval_shape(model.init, key)
+
+
+def input_specs(cfg, shape: InputShape, model=None) -> Dict[str, Any]:
+    """SDS stand-ins for the step inputs of this (arch, shape)."""
+    model = model or build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    emb = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.bfloat16)
+
+    if shape.kind == "train":
+        if cfg.family in ("encdec", "audio"):
+            return {"frontend": emb(b, s, cfg.d_model),
+                    "tokens": tok(b, WHISPER_DECODER_LEN),
+                    "labels": tok(b, WHISPER_DECODER_LEN)}
+        if cfg.frontend:  # vlm
+            ft = min(cfg.frontend_tokens, s // 2)
+            return {"frontend": emb(b, ft, cfg.d_model),
+                    "tokens": tok(b, s - ft), "labels": tok(b, s - ft)}
+        return {"tokens": tok(b, s), "labels": tok(b, s)}
+
+    if shape.kind == "prefill":
+        if cfg.family in ("encdec", "audio"):
+            return {"frontend": emb(b, s, cfg.d_model)}
+        if cfg.frontend:
+            ft = min(cfg.frontend_tokens, s // 2)
+            return {"frontend": emb(b, ft, cfg.d_model),
+                    "tokens": tok(b, s - ft)}
+        return {"tokens": tok(b, s)}
+
+    # decode: ONE new token against a seq_len cache
+    if cfg.family in ("encdec", "audio"):
+        cache = jax.eval_shape(
+            lambda: build_model(cfg).init_cache(
+                b, WHISPER_DECODER_LEN, enc_len=s))
+    else:
+        cache = jax.eval_shape(lambda: build_model(cfg).init_cache(b, s))
+    return {"cache": cache, "tokens": tok(b, 1)}
+
+
+def make_lowerable(arch: str, shape_name: str, mesh,
+                   adamw: Optional[AdamWConfig] = None,
+                   cfg_override=None):
+    """Returns (jitted_fn, args tuple of SDS, rules, cfg) or raises
+    Inapplicable for skipped (arch, shape) pairs. ``cfg_override`` substitutes
+    a modified config (the dry-run's reduced-depth cost lowers)."""
+    cfg, shape, ok, reason = resolved_config(arch, shape_name)
+    if not ok:
+        raise Inapplicable(reason)
+    if cfg_override is not None:
+        cfg = cfg_override
+    model = build_model(cfg)
+    rules = shape_rules(cfg, shape)
+    p_sds = params_sds(model, cfg, shape)
+    p_specs = param_specs(mesh, p_sds, rules)
+    p_sh = to_shardings(mesh, p_specs)
+    batch = input_specs(cfg, shape, model)
+
+    if shape.kind == "train":
+        adamw = adamw or AdamWConfig()
+        from repro.training.optimizer import AdamWState
+        opt_sds = jax.eval_shape(init_state, p_sds)
+        zspecs = zero1_specs(mesh, p_sds, p_specs)
+        opt_specs = AdamWState(step=jax.sharding.PartitionSpec(),
+                               m=zspecs, v=zspecs)
+        opt_sh = to_shardings(mesh, opt_specs)
+        b_sh = to_shardings(mesh, batch_specs(mesh, batch, rules))
+
+        def train_step(params, opt_state, b):
+            with mesh_context(mesh, rules):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: model.loss(p, b, remat=True, ce_chunk=512),
+                    has_aux=True)(params)
+                params, opt_state, om = apply_updates(adamw, params, grads,
+                                                      opt_state)
+                metrics = dict(metrics)
+                metrics.update(om)
+                return params, opt_state, metrics
+
+        fn = jax.jit(train_step, in_shardings=(p_sh, opt_sh, b_sh),
+                     donate_argnums=(0, 1))
+        return fn, (p_sds, opt_sds, batch), rules, cfg
+
+    if shape.kind == "prefill":
+        b_sh = to_shardings(mesh, batch_specs(mesh, batch, rules))
+
+        def prefill_step(params, b):
+            with mesh_context(mesh, rules):
+                _, artifact = model.prefill(params, b)
+                return artifact
+
+        fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh))
+        return fn, (p_sds, batch), rules, cfg
+
+    # decode
+    cache_sds = batch["cache"]
+    c_sh = to_shardings(mesh, cache_specs(mesh, cache_sds, rules))
+    t_sh = to_shardings(mesh, batch_specs(
+        mesh, {"tokens": batch["tokens"]}, rules))["tokens"]
+
+    def serve_step(params, cache, tokens):
+        with mesh_context(mesh, rules):
+            return model.decode_step(params, cache, tokens)
+
+    fn = jax.jit(serve_step, in_shardings=(p_sh, c_sh, t_sh),
+                 donate_argnums=(1,))
+    return fn, (p_sds, cache_sds, batch["tokens"]), rules, cfg
+
+
+class Inapplicable(Exception):
+    """(arch, shape) pair intentionally skipped (see DESIGN.md §5)."""

@@ -1,0 +1,382 @@
+"""GQA attention with RoPE / qk-norm / sliding window / prefix (MatKV) support.
+
+Two compute paths:
+
+* ``flash_attention`` — blockwise chunked-q attention with a custom VJP that
+  recomputes scores per block (flash-attention backward). Never materializes the
+  full (Sq, Sk) score matrix; this is what makes prefill_32k / train_4k fit HBM.
+  The Pallas kernel in ``repro.kernels.flash_prefill`` is its TPU twin; this jnp
+  version doubles as the kernel's oracle and as the portable fallback.
+* plain SDPA for tiny problems (decode, smoke tests) via the same entry point —
+  a single q block degenerates to ordinary attention.
+
+Masking is expressed with *global position arrays* for q and k. This one
+mechanism covers causal training masks, sliding windows, MatKV composed
+prefixes (documents occupy slots [0, P), query continues after), and ring
+buffers (slot positions arbitrary, invalid slots = -1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import current_mesh, shard
+from repro.models.norms import rms_norm
+from repro.models.rope import rope_q_k
+from repro.models.scan_utils import scan_layers
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, key, cross: bool = False):
+    """Attention params. ``cross=True`` adds no extra params; K/V projections are
+    used against the encoder sequence instead (whisper cross-attention)."""
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+
+    def dense(k, fan_in, fan_out):
+        return (jax.random.normal(k, (fan_in, fan_out), jnp.float32)
+                * fan_in ** -0.5).astype(dt)
+
+    p = {
+        "wq": dense(ks[0], d, qd),
+        "wk": dense(ks[1], d, kvd),
+        "wv": dense(ks[2], d, kvd),
+        "wo": dense(ks[3], qd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dt)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dt)
+    return p
+
+
+def project_q(cfg, p, x):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.num_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    return q
+
+
+def project_kv(cfg, p, x):
+    b, s, _ = x.shape
+    k = (x @ p["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# position-based masking
+# ---------------------------------------------------------------------------
+
+def position_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                  window: Optional[int], causal: bool) -> jnp.ndarray:
+    """(Sq, Sk) bool mask from global positions. k slots with pos < 0 invalid."""
+    qp = q_pos[:, None].astype(jnp.int32)
+    kp = k_pos[None, :].astype(jnp.int32)
+    m = kp >= 0
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# blockwise flash attention with custom VJP
+# ---------------------------------------------------------------------------
+
+def _pick_block(s: int, target: int = 0) -> int:
+    """k-block size for the blockwise attention. REPRO_ATTN_KBLOCK tunes the
+    score-matrix working set (per-block scores = B*H*Sq*kb f32) — a perf lever
+    the dry-run / hillclimb loop sets per workload."""
+    import os
+    target = target or int(os.environ.get("REPRO_ATTN_KBLOCK", "512"))
+    if s <= target:
+        return s
+    for b in (target, 512, 256, 128, 64):
+        if b <= target and s % b == 0:
+            return b
+    return s  # fall back to one block
+
+
+def _scores(q, k_blk, scale):
+    """q (B,Sq,KV,G,hd), k_blk (B,kb,KV,hd) -> (B,KV,G,Sq,kb) f32."""
+    return jnp.einsum("bqcgd,bscd->bcgqs", q, k_blk,
+                      preferred_element_type=jnp.float32) * scale
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_attention(q, k, v, q_pos, k_pos, window, causal):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), *_pos int32 (S,). Returns (B,Sq,H,hd).
+
+    Online-softmax scan over K-BLOCKS (flash-attention-2 structure): q stays
+    whole, so a sequence-sharded q shard never crosses the scan boundary —
+    this is what makes context-parallel prefill lower cleanly (the scanned
+    k axis is constrained to be replicated by the caller; scanning over a
+    *sharded* axis would force GSPMD to gather per iteration). Per-iteration
+    working set is (B,H,Sq,kb) f32 scores; nothing S_k-sized materializes.
+    """
+    out, _ = _flash_fwd(q, k, v, q_pos, k_pos, window, causal)
+    return out
+
+
+def _flash_fwd(q, k, v, q_pos, k_pos, window, causal):
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5
+    kb = _pick_block(sk)
+    if sq <= kb:
+        # decode / sub-prefill: q is tiny, K is the (sequence-sharded) cache.
+        # One full-K pass: the softmax over the sharded Sk axis lowers to
+        # small partial max/sum all-reduces, and K never crosses a scan
+        # boundary (scanning a sharded axis would make GSPMD gather it).
+        qr = q.reshape(b, sq, kvh, g, hd)
+        s = _scores(qr, k, scale)                       # (B,KV,G,Sq,Sk)
+        mask = position_mask(q_pos.astype(jnp.int32), k_pos.astype(jnp.int32),
+                             window, causal)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e29)
+        p = jnp.exp(s - m)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bcgqs,bscd->bqcgd", p / jnp.maximum(l, 1e-30), v,
+                       preferred_element_type=jnp.float32)
+        out = o.astype(q.dtype).reshape(b, sq, h, hd)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, (q, k, v, q_pos, k_pos, lse, out)
+    nk = sk // kb
+    qr = q.reshape(b, sq, kvh, g, hd)
+    # all-gather-KV context parallelism: k/v may arrive sequence-sharded
+    # (prefill/train under act_seq rules); gather them ONCE here — letting
+    # the scan below slice a sharded axis makes GSPMD gather per block
+    # (granite train_4k: collective 5.2s -> 31s before this constraint).
+    # GQA KV is small (2 x S x KV x hd), so one gather/layer is the cheap
+    # direction; q keeps its (head or sequence) sharding.
+    k = shard(k, "batch", None, None, None)
+    v = shard(v, "batch", None, None, None)
+    kr = k.reshape(b, nk, kb, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kb, kvh, hd).transpose(1, 0, 2, 3, 4)
+    kpr = k_pos.reshape(nk, kb)
+    qp = q_pos.astype(jnp.int32)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry            # (B,KV,G,Sq,1), same, (B,Sq,KV,G,hd)
+        k_blk, v_blk, kp = xs
+        s = _scores(qr, k_blk, scale)        # (B,KV,G,Sq,kb)
+        mask = position_mask(qp, kp, window, causal)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_run - m_new)       # rescale of old accumulators
+        p = jnp.exp(s - m_new)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bcgqs,bscd->bqcgd", p, v_blk,
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha.transpose(0, 3, 1, 2, 4) + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kvh, g, sq, 1), -1e29, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq, 1), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
+    (m, l, acc), _ = scan_layers(body, (m0, l0, acc0), (kr, vr, kpr))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))           # saved for backward
+    out = (acc / jnp.maximum(l.transpose(0, 3, 1, 2, 4), 1e-30)).astype(q.dtype)
+    out = out.reshape(b, sq, h, hd)
+    return out, (q, k, v, q_pos, k_pos, lse, out)
+
+
+def _shard_like_q(t):
+    """Apply _shard_q's layout policy to any (B,S,H,hd) tensor (shape-based:
+    no cfg at hand inside the custom-vjp backward)."""
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return t
+    if t.shape[2] % mesh.shape["model"] == 0:
+        return shard(t, "batch", None, "heads", None)
+    return shard(t, "batch", "act_seq", None, None)
+
+
+def _flash_bwd(window, causal, res, dout):
+    q, k, v, q_pos, k_pos, lse, out = res
+    # dout arrives in the residual stream's (sequence-sharded) layout while q
+    # is head-sharded — mixing the two makes GSPMD flip score layouts with
+    # 4 GiB all-gathers per block (granite train: collective 5.2s -> 31s).
+    # Constrain both to q's layout up front; one reshard of dout is cheap.
+    dout = _shard_like_q(dout)
+    q = _shard_like_q(q)
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5
+    kb = _pick_block(sk)
+    nk = sk // kb
+    qr = q.reshape(b, sq, kvh, g, hd)
+    dor = dout.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
+    k = shard(k, "batch", None, None, None)   # gather once, as in forward
+    v = shard(v, "batch", None, None, None)
+    kr = k.reshape(b, nk, kb, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kb, kvh, hd).transpose(1, 0, 2, 3, 4)
+    kpr = k_pos.reshape(nk, kb)
+    qp = q_pos.astype(jnp.int32)
+    # delta = rowsum(do * out) (flash-2 backward; out saved by the forward)
+    delta = jnp.sum(dor * out.reshape(b, sq, kvh, g, hd).astype(jnp.float32),
+                    axis=-1)[..., None]                  # (B,Sq,KV,G,1)
+    delta = delta.transpose(0, 2, 3, 1, 4)               # (B,KV,G,Sq,1)
+
+    def body(dq_acc, xs):
+        k_blk, v_blk, kp = xs
+        s = _scores(qr, k_blk, scale)
+        mask = position_mask(qp, kp, window, causal)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse)                             # exact softmax probs
+        dp = jnp.einsum("bqcgd,bscd->bcgqs", dor,
+                        v_blk.astype(jnp.float32))
+        ds = p * (dp - delta) * scale
+        dq_acc = dq_acc + jnp.einsum("bcgqs,bscd->bqcgd", ds,
+                                     k_blk.astype(jnp.float32))
+        dk_blk = jnp.einsum("bcgqs,bqcgd->bscd", ds, qr.astype(jnp.float32))
+        dv_blk = jnp.einsum("bcgqs,bqcgd->bscd", p, dor)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((b, sq, kvh, g, hd), jnp.float32)
+    dq, (dks, dvs) = scan_layers(body, dq0, (kr, vr, kpr))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(b, sk, kvh, hd)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(b, sk, kvh, hd)
+    dq = dq.reshape(b, sq, h, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+def _flash_fwd_vjp(q, k, v, qp, kp, w, c):
+    out, res = _flash_fwd(q, k, v, qp, kp, w, c)
+    return out, res
+
+
+flash_attention.defvjp(_flash_fwd_vjp, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# high-level entry points used by the model definitions
+# ---------------------------------------------------------------------------
+
+def _shard_q(cfg, q):
+    """Head-shard q when the head count divides the model axis; otherwise
+    fall back to sequence sharding (context parallelism) so archs whose head
+    count doesn't divide the mesh (qwen3-14b: 40 heads on model=16) don't
+    replicate the O(S^2) attention over the model axis (EXPERIMENTS.md §Perf).
+    ``act_seq`` resolves to () outside seq-parallel rules, so this degrades
+    to the old behaviour on a single device."""
+    mesh = current_mesh()
+    if (mesh is not None and "model" in mesh.shape
+            and cfg.num_heads % mesh.shape["model"] != 0):
+        return shard(q, "batch", "act_seq", None, None)
+    return shard(q, "batch", None, "heads", None)
+
+
+def attn_self(cfg, p, x, positions, window: Optional[int] = None
+              ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Causal self-attention over x (B,S,D) at ``positions`` (S,) int32.
+
+    Returns (out (B,S,D), (k, v)) — k/v are the MatKV materialization product.
+    """
+    q = project_q(cfg, p, x)
+    k, v = project_kv(cfg, p, x)
+    if cfg.use_rope:
+        q, k = rope_q_k(q, k, positions, cfg.rope_theta)
+    q = _shard_q(cfg, q)
+    out = flash_attention(q, k, v, positions, positions,
+                          window if window else cfg.sliding_window, True)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    return out @ p["wo"], (k, v)
+
+
+def attn_with_prefix(cfg, p, x, positions, prefix_k, prefix_v, prefix_pos,
+                     window: Optional[int] = None):
+    """New tokens x (B,Sq,D) at global ``positions`` (Sq,), attending to a
+    prefix KV buffer (B,Sp,KV,hd) whose slots sit at global ``prefix_pos`` (Sp,)
+    (-1 = invalid slot), plus causally to themselves.
+
+    This one function is MatKV's serving core: Sq=1 is a decode step against a
+    loaded cache; Sq=len(query) is the composed "sub-prefill" of the user query
+    over concatenated materialized document KVs.
+
+    Returns (out (B,Sq,D), (k_new, v_new)) — caller owns writing k/v into cache.
+    """
+    q = project_q(cfg, p, x)
+    k_new, v_new = project_kv(cfg, p, x)
+    if cfg.use_rope:
+        q, k_new = rope_q_k(q, k_new, positions, cfg.rope_theta)
+    keys = jnp.concatenate([prefix_k, k_new.astype(prefix_k.dtype)], axis=1)
+    vals = jnp.concatenate([prefix_v, v_new.astype(prefix_v.dtype)], axis=1)
+    k_pos = jnp.concatenate([prefix_pos.astype(jnp.int32),
+                             positions.astype(jnp.int32)])
+    out = flash_attention(q, keys, vals, positions.astype(jnp.int32), k_pos,
+                          window if window else cfg.sliding_window, True)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    return out @ p["wo"], (k_new, v_new)
+
+
+def attn_into_cache(cfg, p, x, rope_pos, order_pos, pk, pv, slot_pos, start,
+                    window: Optional[int] = None):
+    """Write-then-attend decode (flash-decoding friendly).
+
+    Projects x's KV, writes it into this layer's cache buffers
+    pk/pv (B,S_buf,KV,hd) at slot ``start`` (scalar, = length % buf), then
+    attends over the *updated buffer only*. Unlike ``attn_with_prefix`` there
+    is no concatenation, so a sequence-sharded cache keeps its sharding: the
+    softmax over the sharded S_buf axis lowers to tiny per-(B,H,q) partial
+    max/sum all-reduces instead of an all-gather of the whole KV cache.
+
+    ``rope_pos`` rotates q/k (may be MatKV restart-mode positions);
+    ``order_pos`` is the attention-order position of the new tokens — the
+    mask runs entirely in order space against ``slot_pos``, which must
+    already include the new tokens (caller updates it once for all layers).
+    Causal masking by position makes write-before-attend exact for Sq >= 1.
+
+    Returns (out (B,Sq,D), pk, pv) with the updated buffers.
+    """
+    q = project_q(cfg, p, x)
+    k_new, v_new = project_kv(cfg, p, x)
+    if cfg.use_rope:
+        q, k_new = rope_q_k(q, k_new, rope_pos, cfg.rope_theta)
+    zero = jnp.zeros((), jnp.int32)
+    pk = jax.lax.dynamic_update_slice(
+        pk, k_new.astype(pk.dtype), (zero, start, zero, zero))
+    pv = jax.lax.dynamic_update_slice(
+        pv, v_new.astype(pv.dtype), (zero, start, zero, zero))
+    out = flash_attention(q, pk, pv, order_pos.astype(jnp.int32),
+                          slot_pos.astype(jnp.int32),
+                          window if window else cfg.sliding_window, True)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    return out @ p["wo"], pk, pv
+
+
+def attn_cross(cfg, p, x, ck, cv):
+    """Cross-attention: x (B,Sq,D) over precomputed encoder K/V (B,Se,KV,hd).
+
+    No mask, no RoPE (whisper-style absolute positions live in the embeddings).
+    ck/cv are exactly what MatKV materializes for enc-dec models.
+    """
+    q = project_q(cfg, p, x)
+    se = ck.shape[1]
+    k_pos = jnp.arange(se, dtype=jnp.int32)
+    q_pos = jnp.full((x.shape[1],), se, dtype=jnp.int32)  # no causal constraint
+    out = flash_attention(q, ck, cv, q_pos, k_pos, None, False)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    return out @ p["wo"]
+
+
+def cross_kv(cfg, p, enc_out):
+    """Materialize cross-attention K/V from encoder output (whisper write path)."""
+    return project_kv(cfg, p, enc_out)

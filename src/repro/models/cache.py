@@ -1,0 +1,170 @@
+"""Decode-time state containers (registered pytrees).
+
+Slot-position convention: every attention cache carries ``slot_pos`` (S_buf,)
+int32 — the *attention-order* global position of the token in each buffer slot,
+-1 for empty slots. Masks are derived purely from positions, which makes ring
+buffers (sliding-window archs) and MatKV composed prefixes use one mechanism.
+RoPE angles are baked into K at write time and are independent of slot_pos
+(that's how the paper's "restarted positions" mode coexists with correct
+causal masking).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _register(cls, data_fields):
+    jax.tree_util.register_dataclass(
+        cls, data_fields=list(data_fields), meta_fields=[])
+    return cls
+
+
+@dataclass
+class AttnCache:
+    k: jnp.ndarray          # (L, B, S_buf, KV, hd)
+    v: jnp.ndarray          # (L, B, S_buf, KV, hd)
+    slot_pos: jnp.ndarray   # (S_buf,) int32, -1 = empty
+    length: jnp.ndarray     # scalar int32: total tokens seen
+
+    @property
+    def buf_size(self) -> int:
+        return self.k.shape[2]
+
+
+_register(AttnCache, ["k", "v", "slot_pos", "length"])
+
+
+@dataclass
+class SSMCache:
+    conv: jnp.ndarray       # (L, B, conv_w-1, d_inner)
+    h: jnp.ndarray          # (L, B, d_inner, ssm_state) f32
+    length: jnp.ndarray     # scalar int32
+
+
+_register(SSMCache, ["conv", "h", "length"])
+
+
+@dataclass
+class HybridCache:
+    """Separate stores for attention layers and recurrent layers."""
+    k: jnp.ndarray          # (L_attn, B, W_buf, KV, hd)
+    v: jnp.ndarray
+    slot_pos: jnp.ndarray   # (W_buf,)
+    conv: jnp.ndarray       # (L_rec, B, 3, width)
+    h: jnp.ndarray          # (L_rec, B, width) f32
+    length: jnp.ndarray
+
+    @property
+    def buf_size(self) -> int:
+        return self.k.shape[2]
+
+
+_register(HybridCache, ["k", "v", "slot_pos", "conv", "h", "length"])
+
+
+@dataclass
+class EncDecCache:
+    """Whisper: cross-KV is the materialized artifact; self-cache is decoder's."""
+    cross_k: jnp.ndarray    # (L_dec, B, S_enc, KV, hd)
+    cross_v: jnp.ndarray
+    k: jnp.ndarray          # (L_dec, B, S_buf, KV, hd) decoder self-attention
+    v: jnp.ndarray
+    slot_pos: jnp.ndarray
+    length: jnp.ndarray
+
+    @property
+    def buf_size(self) -> int:
+        return self.k.shape[2]
+
+
+_register(EncDecCache, ["cross_k", "cross_v", "k", "v", "slot_pos", "length"])
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+def _buf(cfg, seq_len: int) -> int:
+    """Attention buffer size: the window for sliding-window archs, else seq."""
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def init_attn_cache(cfg, batch: int, seq_len: int, n_layers: Optional[int] = None,
+                    dtype=None) -> AttnCache:
+    n_layers = n_layers or cfg.num_layers
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    buf = _buf(cfg, seq_len)
+    shape = (n_layers, batch, buf, cfg.num_kv_heads, cfg.head_dim)
+    return AttnCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        slot_pos=jnp.full((buf,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def init_ssm_cache(cfg, batch: int, dtype=None) -> SSMCache:
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    return SSMCache(
+        conv=jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        h=jnp.zeros((cfg.num_layers, batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def init_hybrid_cache(cfg, batch: int, seq_len: int, dtype=None) -> HybridCache:
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    kinds = cfg.layer_kinds
+    l_attn = sum(1 for k in kinds if k == "attention")
+    l_rec = len(kinds) - l_attn
+    buf = _buf(cfg, seq_len)
+    kv_shape = (l_attn, batch, buf, cfg.num_kv_heads, cfg.head_dim)
+    return HybridCache(
+        k=jnp.zeros(kv_shape, dtype), v=jnp.zeros(kv_shape, dtype),
+        slot_pos=jnp.full((buf,), -1, jnp.int32),
+        conv=jnp.zeros((l_rec, batch, 3, cfg.rglru_width), dtype),
+        h=jnp.zeros((l_rec, batch, cfg.rglru_width), jnp.float32),
+        length=jnp.zeros((), jnp.int32))
+
+
+def init_encdec_cache(cfg, batch: int, enc_len: int, dec_buf: int,
+                      dtype=None) -> EncDecCache:
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    cross_shape = (cfg.dec_layers, batch, enc_len, cfg.num_kv_heads, cfg.head_dim)
+    self_shape = (cfg.dec_layers, batch, dec_buf, cfg.num_kv_heads, cfg.head_dim)
+    return EncDecCache(
+        cross_k=jnp.zeros(cross_shape, dtype), cross_v=jnp.zeros(cross_shape, dtype),
+        k=jnp.zeros(self_shape, dtype), v=jnp.zeros(self_shape, dtype),
+        slot_pos=jnp.full((dec_buf,), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# ring/bulk writes
+# ---------------------------------------------------------------------------
+
+def write_kv(k_buf, v_buf, slot_pos, length, k_new, v_new, positions=None):
+    """Write k_new/v_new (L,B,Sq,KV,hd) into buffers at slot ``length % buf``.
+
+    Bulk writes (prefill into an empty cache) must not wrap; decode writes are
+    Sq=1 so they never wrap. ``positions`` overrides the attention-order
+    positions recorded for the new slots (defaults to length + arange(Sq)).
+    Returns (k_buf, v_buf, slot_pos, new_length).
+    """
+    sq = k_new.shape[2]
+    buf = k_buf.shape[2]
+    start = (length % buf).astype(jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    k_buf = jax.lax.dynamic_update_slice(
+        k_buf, k_new.astype(k_buf.dtype), (zero, zero, start, zero, zero))
+    v_buf = jax.lax.dynamic_update_slice(
+        v_buf, v_new.astype(v_buf.dtype), (zero, zero, start, zero, zero))
+    if positions is None:
+        positions = length + jnp.arange(sq, dtype=jnp.int32)
+    slot_pos = jax.lax.dynamic_update_slice(
+        slot_pos, positions.astype(jnp.int32), (start,))
+    return k_buf, v_buf, slot_pos, length + sq

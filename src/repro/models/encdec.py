@@ -1,0 +1,167 @@
+"""Whisper-style encoder-decoder (audio family).
+
+The conv/mel frontend is a STUB per the assignment: callers provide precomputed
+frame embeddings (B, T, d_model); a learned projector + learned absolute
+positions stand in for the conv stack. The decoder is a standard pre-LN
+transformer with self-attention + cross-attention.
+
+MatKV mapping: the decoder's cross-attention K/V over the encoded audio are
+computed once per document (= audio chunk) and are query-independent — they are
+THE materialized artifact (``encode_and_materialize``). Decoding then needs
+only the loaded cross-KV plus a small self-attention cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attn_cross, attn_with_prefix, cross_kv,
+                                    flash_attention, init_attention, project_kv,
+                                    project_q)
+from repro.models.cache import EncDecCache, write_kv
+from repro.models.scan_utils import scan_layers
+from repro.models.mlp import init_mlp, mlp
+from repro.models.norms import layer_norm
+
+
+def _ln_params(d, dt):
+    return {"w": jnp.ones((d,), dt), "b": jnp.zeros((d,), dt)}
+
+
+def init_params(cfg, key, enc_len: Optional[int] = None, dec_len: Optional[int] = None):
+    dt = jnp.dtype(cfg.param_dtype)
+    enc_len = enc_len or cfg.enc_positions
+    dec_len = dec_len or cfg.max_position
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"attn": init_attention(cfg, k1), "mlp": init_mlp(cfg, k2),
+                "ln1": _ln_params(d, dt), "ln2": _ln_params(d, dt)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"self_attn": init_attention(cfg, k1),
+                "cross_attn": init_attention(cfg, k2, cross=True),
+                "mlp": init_mlp(cfg, k3),
+                "ln1": _ln_params(d, dt), "ln2": _ln_params(d, dt),
+                "ln3": _ln_params(d, dt)}
+
+    return {
+        "frontend_proj": (jax.random.normal(keys[0], (d, d), jnp.float32)
+                          * d ** -0.5).astype(dt),
+        "enc_pos": (jax.random.normal(keys[1], (enc_len, d), jnp.float32)
+                    * 0.02).astype(dt),
+        "dec_pos": (jax.random.normal(keys[2], (dec_len, d), jnp.float32)
+                    * 0.02).astype(dt),
+        "embed": (jax.random.normal(keys[3], (cfg.vocab_size, d), jnp.float32)
+                  * d ** -0.5).astype(dt),
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(keys[4], cfg.enc_layers)),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(keys[5], cfg.dec_layers)),
+        "enc_ln": _ln_params(d, dt),
+        "dec_ln": _ln_params(d, dt),
+    }
+
+
+def _ln(x, p, eps):
+    return layer_norm(x, p["w"], p["b"], eps)
+
+
+def encode(cfg, params, frames):
+    """frames (B,T,D) stub embeddings -> encoder output (B,T,D)."""
+    t = frames.shape[1]
+    x = frames.astype(cfg.activation_dtype) @ params["frontend_proj"]
+    x = x + params["enc_pos"][:t][None].astype(x.dtype)
+    nocausal_pos = jnp.arange(t, dtype=jnp.int32)
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"], cfg.norm_eps)
+        q = project_q(cfg, lp["attn"], h)
+        k, v = project_kv(cfg, lp["attn"], h)
+        # bidirectional: q_pos = T for all queries, so every key is visible
+        a = flash_attention(q, k, v,
+                            jnp.full((t,), t, jnp.int32), nocausal_pos,
+                            None, True)
+        x = x + a.reshape(x.shape[0], t, cfg.q_dim) @ lp["attn"]["wo"]
+        x = x + mlp(cfg, lp["mlp"], _ln(x, lp["ln2"], cfg.norm_eps))
+        return x, None
+
+    x, _ = scan_layers(body, x, params["enc_layers"])
+    return _ln(x, params["enc_ln"], cfg.norm_eps)
+
+
+def encode_and_materialize(cfg, params, frames):
+    """MatKV write path: encode audio, emit per-decoder-layer cross K/V stacks
+    (L_dec, B, T, KV, hd)."""
+    enc_out = encode(cfg, params, frames)
+
+    def body(_, lp):
+        k, v = cross_kv(cfg, lp["cross_attn"], enc_out)
+        return None, (k, v)
+
+    _, (ck, cv) = scan_layers(body, None, params["dec_layers"])
+    return enc_out, (ck, cv)
+
+
+def decode_tokens(cfg, params, tokens, enc_out, positions=None):
+    """Teacher-forced decoder over full token sequence (training)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    x = x + params["dec_pos"][:s][None].astype(x.dtype)
+    pos = jnp.arange(s, dtype=jnp.int32) if positions is None else positions
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"], cfg.norm_eps)
+        q = project_q(cfg, lp["self_attn"], h)
+        k, v = project_kv(cfg, lp["self_attn"], h)
+        a = flash_attention(q, k, v, pos, pos, None, True)
+        x = x + a.reshape(b, s, cfg.q_dim) @ lp["self_attn"]["wo"]
+        x = x + attn_cross(cfg, lp["cross_attn"],
+                           _ln(x, lp["ln2"], cfg.norm_eps), *cross_kv(
+                               cfg, lp["cross_attn"], enc_out))
+        x = x + mlp(cfg, lp["mlp"], _ln(x, lp["ln3"], cfg.norm_eps))
+        return x, None
+
+    x, _ = scan_layers(body, x, params["dec_layers"])
+    x = _ln(x, params["dec_ln"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(x.dtype)
+
+
+def forward(cfg, params, frames, tokens):
+    """Full enc-dec forward (training). Returns (logits, aux=0)."""
+    enc_out = encode(cfg, params, frames)
+    logits = decode_tokens(cfg, params, tokens, enc_out)
+    return logits, jnp.zeros((), jnp.float32), None
+
+
+def decode_step(cfg, params, cache: EncDecCache, tokens, positions=None):
+    """tokens (B,Sq) against materialized cross-KV + decoder self cache."""
+    b, sq = tokens.shape
+    order_pos = cache.length + jnp.arange(sq, dtype=jnp.int32)
+    pos = order_pos if positions is None else positions
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    x = x + jnp.take(params["dec_pos"], pos, axis=0)[None].astype(x.dtype)
+
+    def body(x, xs):
+        lp, pk, pv, ck, cv = xs
+        a, kv = attn_with_prefix(cfg, lp["self_attn"],
+                                 _ln(x, lp["ln1"], cfg.norm_eps),
+                                 pos, pk, pv, cache.slot_pos)
+        x = x + a
+        x = x + attn_cross(cfg, lp["cross_attn"],
+                           _ln(x, lp["ln2"], cfg.norm_eps), ck, cv)
+        x = x + mlp(cfg, lp["mlp"], _ln(x, lp["ln3"], cfg.norm_eps))
+        return x, kv
+
+    x, kvs = scan_layers(body, x, (params["dec_layers"], cache.k, cache.v,
+                                    cache.cross_k, cache.cross_v))
+    k, v, spos, length = write_kv(cache.k, cache.v, cache.slot_pos, cache.length,
+                                  kvs[0], kvs[1], positions=order_pos)
+    new_cache = EncDecCache(cross_k=cache.cross_k, cross_v=cache.cross_v,
+                            k=k, v=v, slot_pos=spos, length=length)
+    x = _ln(x, params["dec_ln"], cfg.norm_eps)
+    return x @ params["embed"].T.astype(x.dtype), new_cache

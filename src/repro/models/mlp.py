@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / plain GELU (functional)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+
+def _dense(key, fan_in, fan_out, dtype):
+    return (jax.random.normal(key, (fan_in, fan_out), jnp.float32)
+            * fan_in ** -0.5).astype(dtype)
+
+
+def init_mlp(cfg, key, d_ff: int = 0):
+    d_ff = d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wi_gate": _dense(ks[0], cfg.d_model, d_ff, dt),
+            "wi_up": _dense(ks[1], cfg.d_model, d_ff, dt),
+            "wo": _dense(ks[2], d_ff, cfg.d_model, dt),
+        }
+    return {
+        "wi": _dense(ks[0], cfg.d_model, d_ff, dt),
+        "wo": _dense(ks[2], d_ff, cfg.d_model, dt),
+    }
+
+
+def mlp(cfg, p, x):
+    if "wi_gate" in p:
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    if h.ndim == 3:
+        h = shard(h, "batch", None, "ffn")
+    return h @ p["wo"]

@@ -1,0 +1,147 @@
+"""Unified model API over all families — the single surface the training loop,
+serving engine, MatKV core, dry-run, and benchmarks program against.
+
+    model = Model(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)              # training
+    logits, artifact = model.prefill(params, batch)        # MatKV write path
+    cache = model.init_cache(batch_size, seq_len)
+    logits, cache = model.decode_step(params, cache, toks)  # serve path
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache as cache_lib
+from repro.models import encdec, transformer
+from repro.models.scan_utils import scan_layers
+
+
+def chunked_cross_entropy(cfg, params, hidden: jnp.ndarray,
+                          labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None,
+                          chunk: int = 512) -> jnp.ndarray:
+    """CE without materializing (B,S,V) logits: scan over seq chunks, unembed +
+    logsumexp per chunk, remat'd so the backward recomputes chunk logits.
+
+    With a 150k--256k vocab this is the difference between a ~20 GB and a
+    ~0.3 GB per-device peak for train_4k."""
+    from repro.models.transformer import unembed
+
+    b, s, _ = hidden.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = (mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+          if mask is not None else jnp.ones_like(lc, jnp.float32))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        h, lab, m = xs
+        logits = unembed(cfg, params, h).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        nll_sum, m_sum = carry
+        m = m.astype(jnp.float32)
+        return (nll_sum + jnp.sum((logz - gold) * m), m_sum + jnp.sum(m)), None
+
+    (nll, msum), _ = scan_layers(body, (jnp.zeros(()), jnp.zeros(())),
+                                  (hc, lc, mc))
+    return nll / jnp.maximum(msum, 1.0)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token cross-entropy in f32. labels (B,S) int32; mask optional (B,S)."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.is_encdec = cfg.family in ("encdec", "audio")
+
+    # -- params ---------------------------------------------------------------
+    def init(self, key, enc_len: Optional[int] = None,
+             dec_len: Optional[int] = None):
+        if self.is_encdec:
+            return encdec.init_params(self.cfg, key, enc_len=enc_len,
+                                      dec_len=dec_len)
+        return transformer.init_params(self.cfg, key)
+
+    # -- training ----------------------------------------------------------------
+    def forward(self, params, batch: Dict[str, Any], remat: bool = False):
+        if self.is_encdec:
+            return encdec.forward(self.cfg, params, batch["frontend"],
+                                  batch["tokens"])
+        return transformer.forward(self.cfg, params, batch["tokens"],
+                                   frontend=batch.get("frontend"),
+                                   remat=remat)
+
+    def loss(self, params, batch: Dict[str, Any], remat: bool = False,
+             ce_chunk: int = 0) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        labels = batch["labels"]
+        if ce_chunk and not self.is_encdec:
+            hidden, aux, _ = transformer.forward(
+                self.cfg, params, batch["tokens"],
+                frontend=batch.get("frontend"), remat=remat,
+                return_hidden=True)
+            if batch.get("frontend") is not None:
+                hidden = hidden[:, -labels.shape[1]:]
+            ce = chunked_cross_entropy(self.cfg, params, hidden, labels,
+                                       batch.get("loss_mask"), ce_chunk)
+        else:
+            logits, aux, _ = self.forward(params, batch, remat=remat)
+            if not self.is_encdec and batch.get("frontend") is not None:
+                # frontend tokens carry no LM loss; logits cover [frontend|text]
+                logits = logits[:, -labels.shape[1]:]
+            ce = cross_entropy(logits, labels, batch.get("loss_mask"))
+        total = ce + aux
+        return total, {"loss": total, "ce": ce, "aux": aux}
+
+    # -- MatKV write path -----------------------------------------------------
+    def prefill(self, params, batch: Dict[str, Any], positions=None):
+        """Returns (logits_or_enc, artifact). artifact is what MatKV stores."""
+        if self.is_encdec:
+            enc_out, (ck, cv) = encdec.encode_and_materialize(
+                self.cfg, params, batch["frontend"])
+            return enc_out, (ck, cv)
+        return transformer.prefill(self.cfg, params, batch["tokens"],
+                                   frontend=batch.get("frontend"),
+                                   positions=positions)
+
+    # -- serve path ---------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int, enc_len: int = 0, dtype=None):
+        cfg = self.cfg
+        if self.is_encdec:
+            return cache_lib.init_encdec_cache(
+                cfg, batch, enc_len or cfg.enc_positions,
+                min(seq_len, cfg.max_position), dtype=dtype)
+        if cfg.family == "ssm":
+            return cache_lib.init_ssm_cache(cfg, batch, dtype=dtype)
+        if cfg.family == "hybrid":
+            return cache_lib.init_hybrid_cache(cfg, batch, seq_len, dtype=dtype)
+        return cache_lib.init_attn_cache(cfg, batch, seq_len, dtype=dtype)
+
+    def decode_step(self, params, cache, tokens, positions=None):
+        if self.is_encdec:
+            return encdec.decode_step(self.cfg, params, cache, tokens, positions)
+        return transformer.decode_step(self.cfg, params, cache, tokens, positions)
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

@@ -1,0 +1,183 @@
+"""Fine-grained Mixture-of-Experts FFN (DeepSeekMoE / Qwen3-MoE style).
+
+Two dispatch paths:
+
+* **Expert-parallel shard_map** (production, used whenever a mesh with a
+  ``model`` axis is active and E divides it): experts are sharded over the
+  model axis; tokens stay in their data-axis sharding (they are already
+  replicated along the model axis at the layer boundary). Each device routes
+  its local tokens to its LOCAL expert shard with a sort-based static-capacity
+  dispatch, runs the expert FFNs as batched einsums, scatter-adds weighted
+  results, and a single psum over the model axis combines expert outputs —
+  the same collective volume as a Megatron TP FFN, with no GSPMD-replicated
+  gather/scatter blow-ups (the naive pjit lowering of MoE scatter ops
+  replicated the full token buffer per device: +200 GiB/device at
+  qwen3-moe-30b train_4k scale; this path removes that).
+* **Dense-dispatch fallback** (single device / no mesh): same sort-based
+  static-capacity algorithm over all experts.
+
+Overflow tokens are dropped (capacity_factor controls the drop rate),
+matching Switch/GShard semantics. Shared experts (DeepSeekMoE) are
+algebraically a single dense SwiGLU with hidden size S*moe_d_ff and are
+computed outside the routed path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import current_mesh, shard
+from repro.models.mlp import init_mlp, mlp
+
+
+def _dense(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * fan_in ** -0.5).astype(dtype)
+
+
+def init_moe(cfg, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense(ks[0], (d, e), d, jnp.float32),  # router kept in f32
+        "w_gate": _dense(ks[1], (e, d, f), d, dt),
+        "w_up": _dense(ks[2], (e, d, f), d, dt),
+        "w_down": _dense(ks[3], (e, f, d), f, dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4], d_ff=cfg.num_shared_experts * cfg.moe_d_ff)
+    return p
+
+
+def _capacity(n_tokens: int, cfg, mult: int = 8) -> int:
+    """Per-expert capacity, rounded for hardware alignment.
+
+    Large capacities round to 2048 — a multiple of the 128-wide MXU tile and
+    of every batch-axis mesh extent ``expert_cap`` shards over (pod x data =
+    32); small (smoke-test) capacities only need the 8-row tile."""
+    c = math.ceil(n_tokens * cfg.moe_top_k / cfg.num_experts * cfg.capacity_factor)
+    if c >= 2048:
+        mult = 2048
+    return max(mult, ((c + mult - 1) // mult) * mult)
+
+
+def _routing(cfg, xf, router):
+    logits = xf.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)                      # (N, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, cfg.moe_top_k)  # (N, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    n, k = expert_idx.shape
+    e = cfg.num_experts
+    assign_frac = jnp.zeros((e,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (n * k))
+    aux = cfg.router_aux_coef * e * jnp.sum(assign_frac
+                                            * jnp.mean(probs, axis=0))
+    return gate_vals, expert_idx, aux
+
+
+def _dispatch_compute_combine(cfg, xf, gate_vals, expert_idx, w_gate, w_up,
+                              w_down, e_start: int, cap: int):
+    """Sort-based static-capacity dispatch against experts
+    [e_start, e_start + w_gate.shape[0]). xf (N, D) -> (N, D) partial output
+    (tokens routed to experts outside the range contribute zero)."""
+    n, d = xf.shape
+    k = cfg.moe_top_k
+    e_loc = w_gate.shape[0]
+
+    e_flat = expert_idx.reshape(-1)                               # (N*k,)
+    order = jnp.argsort(e_flat)
+    sorted_e = e_flat[order]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(cfg.num_experts),
+                                   side="left")
+    pos_in_grp = jnp.arange(n * k) - group_start[sorted_e]
+    local_e = sorted_e - e_start
+    in_range = (local_e >= 0) & (local_e < e_loc)
+    keep = in_range & (pos_in_grp < cap)
+    dest = jnp.where(keep, local_e * cap + pos_in_grp, e_loc * cap)
+    token_of = order // k
+
+    x_e = jnp.zeros((e_loc * cap, d), xf.dtype).at[dest].set(
+        xf[token_of], mode="drop").reshape(e_loc, cap, d)
+
+    act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", x_e, w_gate)) \
+        * jnp.einsum("ecd,edf->ecf", x_e, w_up)
+    y_e = jnp.einsum("ecf,efd->ecd", h, w_down)                   # (E_loc,C,D)
+
+    y_flat = y_e.reshape(e_loc * cap, d)
+    gathered = jnp.take(y_flat, jnp.minimum(dest, e_loc * cap - 1), axis=0)
+    w = (gate_vals.reshape(-1)[order] * keep).astype(xf.dtype)
+    return jnp.zeros((n, d), xf.dtype).at[token_of].add(
+        gathered * w[:, None], mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# paths
+# ---------------------------------------------------------------------------
+
+def _moe_dense(cfg, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    gate_vals, expert_idx, aux = _routing(cfg, xf, p["router"])
+    cap = _capacity(b * s, cfg)
+    out = _dispatch_compute_combine(cfg, xf, gate_vals, expert_idx,
+                                    p["w_gate"], p["w_up"], p["w_down"],
+                                    e_start=0, cap=cap)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_expert_parallel(cfg, p, x, mesh) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n_model = mesh.shape["model"]
+    b = x.shape[0]
+    # data axes that evenly divide the batch (long_500k's B=1 -> replicated)
+    chosen = []
+    for a in ("pod", "data"):
+        if a in mesh.shape and b % math.prod(
+                mesh.shape[ax] for ax in chosen + [a]) == 0:
+            chosen.append(a)
+    bd = tuple(chosen) if len(chosen) > 1 else (chosen[0] if chosen else None)
+    n_data = math.prod(mesh.shape[a] for a in chosen) if chosen else 1
+    n_loc = (b // n_data) * x.shape[1]
+    cap = _capacity(n_loc, cfg)
+    e_loc = cfg.num_experts // n_model
+
+    def local_fn(router, wg, wu, wd, xl):
+        bl, s, d = xl.shape
+        xf = xl.reshape(bl * s, d)
+        gate_vals, expert_idx, aux = _routing(cfg, xf, router)
+        e_start = jax.lax.axis_index("model") * e_loc
+        out = _dispatch_compute_combine(cfg, xf, gate_vals, expert_idx,
+                                        wg, wu, wd, e_start, cap)
+        out = jax.lax.psum(out, axis_name="model")
+        if chosen:
+            aux = jax.lax.pmean(aux, axis_name=tuple(chosen))
+        return out.reshape(bl, s, d), aux
+
+    x_spec = P(bd, None, None)
+    out, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None), x_spec),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(p["router"], p["w_gate"], p["w_up"], p["w_down"], x)
+    return out, aux
+
+
+def moe_ffn(cfg, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,D) -> (out (B,S,D), aux_loss scalar)."""
+    mesh = current_mesh()
+    if (mesh is not None and "model" in mesh.shape
+            and cfg.num_experts % mesh.shape["model"] == 0):
+        out, aux = _moe_expert_parallel(cfg, p, x, mesh)
+    else:
+        out, aux = _moe_dense(cfg, p, x)
+    if cfg.num_shared_experts:
+        out = out + mlp(cfg, p["shared"], x)
+    return out, aux

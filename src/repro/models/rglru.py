@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Block structure (arXiv:2402.19427): two input branches of width ``rglru_width``;
+the x-branch passes through a width-4 causal conv then the RG-LRU recurrence;
+the gate branch is GeLU'd and multiplies the recurrence output; out-projection
+returns to d_model.
+
+RG-LRU recurrence (f32):
+    r_t = sigmoid(W_r x_t)        (recurrence gate)
+    i_t = sigmoid(W_i x_t)        (input gate)
+    a_t = a ** (c * r_t)          with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+State: conv_state (B, 3, W), h (B, W). Like the Mamba block, the final state is
+what MatKV materializes for recurrent layers (prefix-reuse semantics).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+_C = 8.0
+_CONV_W = 4
+
+
+def _dense(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * fan_in ** -0.5).astype(dtype)
+
+
+def init_rglru(cfg, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    d, w = cfg.d_model, cfg.rglru_width
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = sigmoid(Lambda) lands in [0.9, 0.999]
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    return {
+        "in_x": _dense(ks[0], (d, w), d, dt),
+        "in_gate": _dense(ks[1], (d, w), d, dt),
+        "conv_w": _dense(ks[2], (_CONV_W, w), _CONV_W, dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_r": _dense(ks[3], (w, w), w, dt),
+        "w_i": _dense(ks[5], (w, w), w, dt),
+        "lam": jnp.log(u / (1.0 - u)),            # (w,) f32, sigmoid^-1(u)
+        "out_proj": _dense(jax.random.fold_in(key, 7), (w, d), w, dt),
+    }
+
+
+def _causal_conv(p, x, conv_state):
+    w = p["conv_w"].astype(jnp.float32)
+    xin = jnp.concatenate([conv_state.astype(jnp.float32),
+                           x.astype(jnp.float32)], axis=1)
+    out = sum(xin[:, i:i + x.shape[1], :] * w[i] for i in range(_CONV_W))
+    new_state = xin[:, -(_CONV_W - 1):, :].astype(conv_state.dtype)
+    return out + p["conv_b"].astype(jnp.float32), new_state
+
+
+def rglru_scan(x, r, i, lam, h0, chunk: int = 64):
+    """x/r/i (B,S,W) f32, lam (W,), h0 (B,W) f32 -> (y (B,S,W), h_final).
+
+    Chunked two-level scan with remat (same residual-memory rationale as
+    models.mamba.selective_scan): AD keeps only chunk-boundary states."""
+    log_a = -_C * jax.nn.softplus(-lam)           # log sigmoid(lam) * c  (<= 0)
+    s = x.shape[1]
+    for c in (chunk, 32, 16, 8, 4, 2, 1):
+        if s % c == 0:
+            chunk = c
+            break
+    nc = s // chunk
+
+    def step(h, inp):
+        xt, rt, it = inp
+        log_at = rt * log_a                        # (B,W)
+        at = jnp.exp(log_at)
+        gated = it * xt
+        h = at * h + jnp.sqrt(jnp.maximum(1.0 - at * at, 1e-12)) * gated
+        return h, h
+
+    @jax.checkpoint
+    def chunk_body(h, xs_chunk):
+        return jax.lax.scan(step, h, xs_chunk)
+
+    def to_chunks(t):
+        moved = jnp.moveaxis(t, 1, 0)
+        out = moved.reshape((nc, chunk) + moved.shape[1:])
+        return shard(out, None, None, "batch", "inner")
+
+    h0 = shard(h0, "batch", "inner")
+    h_final, ys = jax.lax.scan(chunk_body, h0,
+                               (to_chunks(x), to_chunks(r), to_chunks(i)))
+    y = jnp.moveaxis(ys.reshape((s,) + ys.shape[2:]), 0, 1)
+    return y, h_final
+
+
+def rglru_fwd(cfg, p, x, state: Optional[Tuple] = None):
+    """x (B,S,D) -> (out (B,S,D), (conv_state, h))."""
+    b, s, _ = x.shape
+    w = cfg.rglru_width
+    if state is None:
+        conv_state = jnp.zeros((b, _CONV_W - 1, w), x.dtype)
+        h0 = jnp.zeros((b, w), jnp.float32)
+    else:
+        conv_state, h0 = state
+        h0 = h0.astype(jnp.float32)
+
+    xb = x @ p["in_x"]
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    xb = shard(xb, "batch", None, "inner")
+    conv_out, conv_state = _causal_conv(p, xb, conv_state)
+
+    xc = conv_out                                  # f32
+    r = jax.nn.sigmoid((xc.astype(x.dtype) @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xc.astype(x.dtype) @ p["w_i"]).astype(jnp.float32))
+    y, h = rglru_scan(xc, r, i, p["lam"], h0)
+    out = (y.astype(x.dtype) * gate) @ p["out_proj"]
+    return out, (conv_state, h)

@@ -1,0 +1,58 @@
+"""Rotary position embeddings, plus the MatKV "re-rotation" trick.
+
+RoPE rotates (q, k) by an angle proportional to the absolute position. Because
+rotations compose (R(p + d) = R(d) . R(p)), a cached key computed at local
+position p can be shifted to global position p + d with a single elementwise
+rotation by d — no recomputation of the projection. MatKV's paper-faithful mode
+keeps restarted per-chunk positions; ``rerotate`` is our beyond-paper variant
+that restores globally consistent positions at compose time (DESIGN.md §9).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions: (..., S) int -> cos, sin of shape (..., S, head_dim/2)."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D) with cos/sin (B, S, D/2) or (S, D/2). Llama-style halves."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, D/2) -> broadcast over batch and heads
+        cos_b = cos[None, :, None, :]
+        sin_b = sin[None, :, None, :]
+    else:  # (B, S, D/2)
+        cos_b = cos[:, :, None, :]
+        sin_b = sin[:, :, None, :]
+    x1f = x1.astype(jnp.float32)
+    x2f = x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [x1f * cos_b - x2f * sin_b, x2f * cos_b + x1f * sin_b], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rope_q_k(q, k, positions, theta):
+    """Rotate q (B,S,H,D) and k (B,S,KV,D) at ``positions`` (B,S) or (S,)."""
+    cos, sin = rope_angles(positions, q.shape[-1], theta)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+
+
+def rerotate_keys(k: jnp.ndarray, offset, theta: float) -> jnp.ndarray:
+    """Shift cached keys k (B, S, KV, D) by ``offset`` positions (scalar or (B,)).
+
+    Uses R(p + offset) = R(offset) . R(p): one elementwise rotation, no matmul.
+    """
+    off = jnp.asarray(offset)
+    if off.ndim == 0:
+        pos = jnp.broadcast_to(off[None], (k.shape[1],))  # (S,)
+    else:
+        pos = jnp.broadcast_to(off[:, None], (k.shape[0], k.shape[1]))  # (B,S)
+    cos, sin = rope_angles(pos, k.shape[-1], theta)
+    return apply_rope(k, cos, sin)

@@ -1,0 +1,39 @@
+"""Scan-or-unroll helper.
+
+XLA's cost model counts a while-loop body ONCE regardless of trip count, so a
+lax.scan over layers (or attention blocks) hides almost all FLOPs/bytes from
+``compiled.cost_analysis()``. The dry-run therefore lowers with
+REPRO_UNROLL=1, which turns these structural scans into Python loops (bigger
+HLO, accurate accounting); normal execution keeps lax.scan (small HLO, fast
+compiles). Time-step recurrences (mamba / RG-LRU) stay as lax.scan always —
+their trip counts are data-length and are corrected analytically in
+repro.analysis.roofline instead.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def unroll_enabled() -> bool:
+    return os.environ.get("REPRO_UNROLL") == "1"
+
+
+def scan_layers(body, carry, xs, length=None):
+    """Drop-in for jax.lax.scan(body, carry, xs) over STRUCTURAL axes."""
+    if not unroll_enabled():
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if all(y is None for y in ys):
+        stacked = None
+    else:
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked

@@ -1,0 +1,467 @@
+"""Decoder-only model assembly for the dense / moe / ssm / hybrid / vlm families.
+
+Parameters are plain nested dicts. Homogeneous layer stacks keep their params
+stacked with a leading L dim and run under ``lax.scan`` (small HLO, fast
+compiles even at 64 layers); heterogeneous stacks (hybrid block patterns,
+DeepSeek's leading dense layer) unroll in Python.
+
+Three entry points per model (the MatKV lifecycle):
+  forward      — full causal forward (training / vanilla-baseline prefill)
+  prefill      — forward that also returns the per-layer KV stack / final
+                 recurrent states: the artifact MatKV materializes to flash
+  decode_step  — Sq new tokens against a cache (Sq=1: decode; Sq>1: the
+                 composed "sub-prefill" of a user query over loaded doc KVs)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTENTION, RECURRENT
+from repro.dist.sharding import shard
+from repro.models import cache as cache_lib
+from repro.models.attention import (attn_into_cache, attn_self,
+                                    attn_with_prefix, init_attention)
+from repro.models.cache import (AttnCache, HybridCache, SSMCache, write_kv)
+from repro.models.mamba import init_mamba, mamba_fwd
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.norms import rms_norm
+from repro.models.rglru import init_rglru, rglru_fwd
+from repro.models.scan_utils import scan_layers
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer(cfg, key, d_ff: int = 0):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": init_attention(cfg, k1),
+        "mlp": init_mlp(cfg, k2, d_ff=d_ff),
+        "ln1": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+        "ln2": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+    }
+
+
+def _init_moe_layer(cfg, key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": init_attention(cfg, k1),
+        "moe": init_moe(cfg, k2),
+        "ln1": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+        "ln2": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+    }
+
+
+def _init_mamba_layer(cfg, key):
+    return {
+        "mamba": init_mamba(cfg, key),
+        "ln1": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+    }
+
+
+def _init_hybrid_layer(cfg, key, kind: str):
+    k1, k2 = jax.random.split(key)
+    mix = (init_attention(cfg, k1) if kind == ATTENTION else init_rglru(cfg, k1))
+    return {
+        ("attn" if kind == ATTENTION else "rec"): mix,
+        "mlp": init_mlp(cfg, k2),
+        "ln1": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+        "ln2": jnp.ones((cfg.d_model,), jnp.dtype(cfg.param_dtype)),
+    }
+
+
+def init_params(cfg, key):
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    p = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * cfg.d_model ** -0.5).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(
+            keys[1], (cfg.d_model, cfg.vocab_size), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dt)
+    if cfg.frontend:
+        p["projector"] = (jax.random.normal(
+            keys[2], (cfg.d_model, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dt)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        lkeys = jax.random.split(keys[3], cfg.num_layers)
+        p["layers"] = jax.vmap(lambda k: _init_dense_layer(cfg, k))(lkeys)
+    elif fam == "moe":
+        n_pre = cfg.first_dense_layers
+        p["prefix_layers"] = [
+            _init_dense_layer(cfg, jax.random.fold_in(keys[4], i),
+                              d_ff=cfg.dense_d_ff or cfg.d_ff)
+            for i in range(n_pre)]
+        lkeys = jax.random.split(keys[3], cfg.num_layers - n_pre)
+        p["layers"] = jax.vmap(lambda k: _init_moe_layer(cfg, k))(lkeys)
+    elif fam == "ssm":
+        lkeys = jax.random.split(keys[3], cfg.num_layers)
+        p["layers"] = jax.vmap(lambda k: _init_mamba_layer(cfg, k))(lkeys)
+    elif fam == "hybrid":
+        p["layers"] = [
+            _init_hybrid_layer(cfg, jax.random.fold_in(keys[3], i), kind)
+            for i, kind in enumerate(cfg.layer_kinds)]
+    else:
+        raise ValueError(f"transformer.init_params: unsupported family {fam}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, params, tokens, frontend: Optional[jnp.ndarray] = None):
+    """tokens (B,S_text) [+ frontend (B,T,D)] -> x (B,S,D)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.activation_dtype)
+    if cfg.family == "hybrid":  # gemma-style embedding scale
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if frontend is not None:
+        fe = (frontend.astype(cfg.activation_dtype) @ params["projector"])
+        x = jnp.concatenate([fe, x], axis=1)
+    # act_seq resolves to () outside seq-parallel rules (single device, decode)
+    return shard(x, "batch", "act_seq", None)
+
+
+def unembed(cfg, params, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if getattr(cfg, "logit_softcap", None):
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    # NOT act_seq here: vocab already occupies the model axis and a
+    # PartitionSpec may use a mesh axis once (vocab-sharded logits are the
+    # natural matmul output layout)
+    return shard(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg, lp, x, positions, remat: bool):
+    def body(lp, x):
+        a, kv = attn_self(cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                          positions)
+        x = x + a
+        x = x + mlp(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        # layer-boundary residual: sequence-sharded under training rules
+        # (Megatron sequence parallelism; "act_seq" -> () outside training)
+        return shard(x, "batch", "act_seq", None), kv
+    if remat:
+        body = jax.checkpoint(body)
+    return body(lp, x)
+
+
+def _moe_block(cfg, lp, x, positions, remat: bool):
+    def body(lp, x):
+        a, kv = attn_self(cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                          positions)
+        x = x + a
+        m, aux = moe_ffn(cfg, lp["moe"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return shard(x + m, "batch", "act_seq", None), (kv, aux)
+    if remat:
+        body = jax.checkpoint(body)
+    return body(lp, x)
+
+
+def _mamba_block(cfg, lp, x, state, remat: bool):
+    def body(lp, x, state):
+        out, new_state = mamba_fwd(cfg, lp["mamba"],
+                                   rms_norm(x, lp["ln1"], cfg.norm_eps), state)
+        return shard(x + out, "batch", "act_seq", None), new_state
+    if remat:
+        body = jax.checkpoint(body)
+    return body(lp, x, state)
+
+
+def _hybrid_block(cfg, lp, x, positions, state, remat: bool):
+    """state: (conv, h) for recurrent layers, (k, v, slot_pos) prefix for attn
+    decode, or None for full forward."""
+    def body(lp, x, state):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if "attn" in lp:
+            if state is None:
+                a, kv = attn_self(cfg, lp["attn"], h, positions,
+                                  window=cfg.sliding_window)
+            else:
+                pk, pv, spos = state
+                a, kv = attn_with_prefix(cfg, lp["attn"], h, positions, pk, pv,
+                                         spos, window=cfg.sliding_window)
+            x, new_state = x + a, kv
+        else:
+            out, new_state = rglru_fwd(cfg, lp["rec"], h, state)
+            x = x + out
+        x = x + mlp(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return shard(x, "batch", "act_seq", None), new_state
+    if remat:
+        body = jax.checkpoint(body)
+    return body(lp, x, state)
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / vanilla prefill) — also the KV materialization path
+# ---------------------------------------------------------------------------
+
+def _shard_artifact_kv(kv):
+    """Constrain the *collected* per-layer KV artifact (B,S,KV,hd) to
+    sequence sharding. Without this the materialization output replicates on
+    the model axis and the artifact alone (L x B x S x KV x hd x 2) blows the
+    per-device peak (41 GiB for qwen3-14b prefill_32k — EXPERIMENTS.md §Perf).
+    Only the returned copy is constrained; the attention operands are not."""
+    k, v = kv
+    return (shard(k, "batch", "cache_seq", None, None),
+            shard(v, "batch", "cache_seq", None, None))
+
+
+def forward(cfg, params, tokens, frontend=None, positions=None,
+            remat: bool = False, collect_kv: bool = False,
+            return_hidden: bool = False):
+    """Returns (logits (B,S,V), aux_loss, artifact).
+
+    artifact (when collect_kv): per-family materialization product —
+      dense/moe/vlm: (k, v) stacked (L,B,S,KV,hd)
+      ssm:           (conv_state, h) final states
+      hybrid:        ((k, v) for attn layers, (conv, h) for recurrent layers)
+    """
+    x = embed_inputs(cfg, params, tokens, frontend)
+    s = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    fam = cfg.family
+    aux_total = jnp.zeros((), jnp.float32)
+    artifact = None
+
+    if fam in ("dense", "vlm"):
+        def scan_body(x, lp):
+            x, kv = _dense_block(cfg, lp, x, positions, remat)
+            return x, _shard_artifact_kv(kv) if collect_kv else None
+        x, kvs = scan_layers(scan_body, x, params["layers"])
+        artifact = kvs
+    elif fam == "moe":
+        pre_kvs = []
+        for lp in params["prefix_layers"]:
+            x, kv = _dense_block(cfg, lp, x, positions, remat)
+            pre_kvs.append(_shard_artifact_kv(kv) if collect_kv else kv)
+        def scan_body(carry, lp):
+            x, aux = carry
+            x, (kv, a) = _moe_block(cfg, lp, x, positions, remat)
+            return (x, aux + a), _shard_artifact_kv(kv) if collect_kv else None
+        (x, aux_total), kvs = scan_layers(scan_body, (x, aux_total),
+                                           params["layers"])
+        if collect_kv:
+            if pre_kvs:
+                pk = jnp.stack([kv[0] for kv in pre_kvs])
+                pv = jnp.stack([kv[1] for kv in pre_kvs])
+                artifact = (jnp.concatenate([pk, kvs[0]], axis=0),
+                            jnp.concatenate([pv, kvs[1]], axis=0))
+            else:
+                artifact = kvs
+    elif fam == "ssm":
+        def scan_body(x, lp):
+            x, st = _mamba_block(cfg, lp, x, None, remat)
+            return x, st if collect_kv else None
+        x, states = scan_layers(scan_body, x, params["layers"])
+        artifact = states
+    elif fam == "hybrid":
+        attn_kvs, rec_states = [], []
+        for lp in params["layers"]:
+            x, st = _hybrid_block(cfg, lp, x, positions, None, remat)
+            if collect_kv:
+                if "attn" in lp:
+                    attn_kvs.append(_shard_artifact_kv(st))
+                else:
+                    rec_states.append(st)
+        if collect_kv:
+            kv = (jnp.stack([a[0] for a in attn_kvs]),
+                  jnp.stack([a[1] for a in attn_kvs]))
+            rec = (jnp.stack([r[0] for r in rec_states]),
+                   jnp.stack([r[1] for r in rec_states]))
+            artifact = (kv, rec)
+    else:
+        raise ValueError(f"forward: unsupported family {fam}")
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux_total, artifact
+    return unembed(cfg, params, x), aux_total, artifact
+
+
+def prefill(cfg, params, tokens, frontend=None, positions=None):
+    """MatKV write path: forward + the materialization artifact."""
+    logits, aux, artifact = forward(cfg, params, tokens, frontend,
+                                    positions, collect_kv=True)
+    return logits, artifact
+
+
+# ---------------------------------------------------------------------------
+# decode (Sq tokens against a cache)
+# ---------------------------------------------------------------------------
+
+def _decode_concat() -> bool:
+    """REPRO_DECODE_CONCAT=1 restores the concat-then-attend decode lowering
+    (the pre-hillclimb baseline, kept for A/B: concatenating the new token
+    onto a sequence-sharded cache forces GSPMD to all-gather the whole KV
+    cache every step — see EXPERIMENTS.md §Perf)."""
+    import os
+    return os.environ.get("REPRO_DECODE_CONCAT") == "1"
+
+
+def decode_step(cfg, params, cache, tokens, positions=None):
+    """tokens (B,Sq) against cache; returns (logits (B,Sq,V), new cache).
+
+    ``positions`` overrides RoPE positions (MatKV restart-mode sub-prefill);
+    attention-order masking always uses cache slot positions + global order.
+    """
+    x = embed_inputs(cfg, params, tokens)
+    sq = x.shape[1]
+    order_pos = cache.length + jnp.arange(sq, dtype=jnp.int32)
+    if positions is None:
+        positions = order_pos
+    fam = cfg.family
+    concat = _decode_concat()
+    if fam in ("dense", "vlm", "moe") and not concat:
+        # write-then-attend: update slot_pos once (same slots for all
+        # layers), then each layer writes its new KV into its buffer slice
+        # and attends over the buffer only. No concat => the cache keeps its
+        # sequence sharding and decode emits no cache-sized collectives.
+        start = (cache.length % cache.buf_size).astype(jnp.int32)
+        spos = jax.lax.dynamic_update_slice(cache.slot_pos,
+                                            order_pos.astype(jnp.int32),
+                                            (start,))
+
+    if fam in ("dense", "vlm"):
+        if concat:
+            def scan_body(x, xs):
+                lp, pk, pv = xs
+                a, kv = attn_with_prefix(cfg, lp["attn"],
+                                         rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                         positions, pk, pv, cache.slot_pos)
+                x = x + a
+                x = x + mlp(cfg, lp["mlp"],
+                            rms_norm(x, lp["ln2"], cfg.norm_eps))
+                return x, kv
+            x, kvs = scan_layers(scan_body, x,
+                                 (params["layers"], cache.k, cache.v))
+            k, v, spos, length = write_kv(cache.k, cache.v, cache.slot_pos,
+                                          cache.length, kvs[0], kvs[1],
+                                          positions=order_pos)
+            new_cache = AttnCache(k=k, v=v, slot_pos=spos, length=length)
+        else:
+            def scan_body(x, xs):
+                lp, pk, pv = xs
+                a, pk, pv = attn_into_cache(
+                    cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                    positions, order_pos, pk, pv, spos, start)
+                x = x + a
+                x = x + mlp(cfg, lp["mlp"],
+                            rms_norm(x, lp["ln2"], cfg.norm_eps))
+                return x, (pk, pv)
+            x, (k, v) = scan_layers(scan_body, x,
+                                    (params["layers"], cache.k, cache.v))
+            new_cache = AttnCache(k=k, v=v, slot_pos=spos,
+                                  length=cache.length + sq)
+    elif fam == "moe":
+        n_pre = cfg.first_dense_layers
+        if concat:
+            new_ks, new_vs = [], []
+            for i, lp in enumerate(params["prefix_layers"]):
+                a, kv = attn_with_prefix(cfg, lp["attn"],
+                                         rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                         positions, cache.k[i], cache.v[i],
+                                         cache.slot_pos)
+                x = x + a
+                x = x + mlp(cfg, lp["mlp"],
+                            rms_norm(x, lp["ln2"], cfg.norm_eps))
+                new_ks.append(kv[0]); new_vs.append(kv[1])
+            def scan_body(x, xs):
+                lp, pk, pv = xs
+                a, kv = attn_with_prefix(cfg, lp["attn"],
+                                         rms_norm(x, lp["ln1"], cfg.norm_eps),
+                                         positions, pk, pv, cache.slot_pos)
+                x = x + a
+                m, _ = moe_ffn(cfg, lp["moe"],
+                               rms_norm(x, lp["ln2"], cfg.norm_eps))
+                return x + m, kv
+            x, kvs = scan_layers(
+                scan_body, x,
+                (params["layers"], cache.k[n_pre:], cache.v[n_pre:]))
+            k_new = kvs[0] if not new_ks else jnp.concatenate(
+                [jnp.stack(new_ks), kvs[0]], axis=0)
+            v_new = kvs[1] if not new_vs else jnp.concatenate(
+                [jnp.stack(new_vs), kvs[1]], axis=0)
+            k, v, spos, length = write_kv(cache.k, cache.v, cache.slot_pos,
+                                          cache.length, k_new, v_new,
+                                          positions=order_pos)
+            new_cache = AttnCache(k=k, v=v, slot_pos=spos, length=length)
+        else:
+            new_ks, new_vs = [], []
+            for i, lp in enumerate(params["prefix_layers"]):
+                a, pk_i, pv_i = attn_into_cache(
+                    cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                    positions, order_pos, cache.k[i], cache.v[i], spos, start)
+                x = x + a
+                x = x + mlp(cfg, lp["mlp"],
+                            rms_norm(x, lp["ln2"], cfg.norm_eps))
+                new_ks.append(pk_i); new_vs.append(pv_i)
+            def scan_body(x, xs):
+                lp, pk, pv = xs
+                a, pk, pv = attn_into_cache(
+                    cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                    positions, order_pos, pk, pv, spos, start)
+                x = x + a
+                m, _ = moe_ffn(cfg, lp["moe"],
+                               rms_norm(x, lp["ln2"], cfg.norm_eps))
+                return x + m, (pk, pv)
+            x, (ks, vs) = scan_layers(
+                scan_body, x,
+                (params["layers"], cache.k[n_pre:], cache.v[n_pre:]))
+            k = ks if not new_ks else jnp.concatenate(
+                [jnp.stack(new_ks), ks], axis=0)
+            v = vs if not new_vs else jnp.concatenate(
+                [jnp.stack(new_vs), vs], axis=0)
+            new_cache = AttnCache(k=k, v=v, slot_pos=spos,
+                                  length=cache.length + sq)
+    elif fam == "ssm":
+        def scan_body(x, xs):
+            lp, conv, h = xs
+            x, (conv, h) = _mamba_block(cfg, lp, x, (conv, h), remat=False)
+            return x, (conv, h)
+        x, (convs, hs) = scan_layers(scan_body, x,
+                                      (params["layers"], cache.conv, cache.h))
+        new_cache = SSMCache(conv=convs, h=hs, length=cache.length + sq)
+    elif fam == "hybrid":
+        i_attn = i_rec = 0
+        new_k, new_v, new_conv, new_h = [], [], [], []
+        for lp in params["layers"]:
+            if "attn" in lp:
+                st = (cache.k[i_attn], cache.v[i_attn], cache.slot_pos)
+                x, kv = _hybrid_block(cfg, lp, x, positions, st, remat=False)
+                new_k.append(kv[0]); new_v.append(kv[1]); i_attn += 1
+            else:
+                st = (cache.conv[i_rec], cache.h[i_rec])
+                x, st = _hybrid_block(cfg, lp, x, positions, st, remat=False)
+                new_conv.append(st[0]); new_h.append(st[1]); i_rec += 1
+        k, v, spos, length = write_kv(cache.k, cache.v, cache.slot_pos,
+                                      cache.length,
+                                      jnp.stack(new_k), jnp.stack(new_v),
+                                      positions=order_pos)
+        new_cache = HybridCache(k=k, v=v, slot_pos=spos,
+                                conv=jnp.stack(new_conv), h=jnp.stack(new_h),
+                                length=length)
+    else:
+        raise ValueError(f"decode_step: unsupported family {fam}")
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), new_cache

@@ -1,0 +1,4 @@
+from repro.retrieval.embed import EMBED_DIM, HashingEmbedder
+from repro.retrieval.vectordb import VectorDB
+
+__all__ = ["EMBED_DIM", "HashingEmbedder", "VectorDB"]

@@ -1,0 +1,31 @@
+"""Embedding model stub for the vector DB (paper uses all-MiniLM-L6-v2; any
+embedding model is interchangeable here — §IV "customizable"). We use a seeded
+random-projection bag-of-tokens embedder: deterministic, order-insensitive at
+the n-gram level, good enough to give realistic skewed retrieval behaviour for
+the system benchmarks without shipping a trained encoder."""
+
+from __future__ import annotations
+
+import numpy as np
+
+EMBED_DIM = 128
+
+
+class HashingEmbedder:
+    def __init__(self, dim: int = EMBED_DIM, vocab_size: int = 1 << 16,
+                 seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.dim = dim
+        self.vocab_size = vocab_size
+        self.table = rng.standard_normal((vocab_size, dim), np.float32)
+        self.table /= np.linalg.norm(self.table, axis=1, keepdims=True)
+
+    def embed_tokens(self, tokens: np.ndarray) -> np.ndarray:
+        idx = np.asarray(tokens, np.int64) % self.vocab_size
+        # bag of tokens + bigrams for mild order sensitivity
+        vec = self.table[idx].sum(0)
+        if len(idx) > 1:
+            bi = (idx[:-1] * 31 + idx[1:]) % self.vocab_size
+            vec = vec + 0.5 * self.table[bi].sum(0)
+        n = np.linalg.norm(vec)
+        return (vec / n if n > 0 else vec).astype(np.float32)

@@ -1,0 +1,67 @@
+"""Minimal in-memory vector database (the paper uses ChromaDB): exact top-k
+cosine search over chunk embeddings, with the chunk_id <-> flash-KV linkage
+that MatKV's delete path relies on (paper §IV delete(O))."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class VectorDB:
+    def __init__(self, dim: int):
+        self.dim = dim
+        self._ids: List[str] = []
+        self._vecs: List[np.ndarray] = []
+        self._matrix: Optional[np.ndarray] = None
+        self._pos: Dict[str, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def add(self, chunk_id: str, embedding: np.ndarray) -> None:
+        if chunk_id in self._pos:
+            return
+        v = np.asarray(embedding, np.float32)
+        n = np.linalg.norm(v)
+        if n > 0:
+            v = v / n
+        self._pos[chunk_id] = len(self._ids)
+        self._ids.append(chunk_id)
+        self._vecs.append(v)
+        self._matrix = None
+
+    def delete(self, chunk_id: str, kv_store=None) -> bool:
+        """Remove the embedding and (per the paper) the stale materialized KV."""
+        pos = self._pos.pop(chunk_id, None)
+        if pos is None:
+            return False
+        self._ids.pop(pos)
+        self._vecs.pop(pos)
+        self._pos = {c: i for i, c in enumerate(self._ids)}
+        self._matrix = None
+        if kv_store is not None:
+            kv_store.delete(chunk_id)
+        return True
+
+    def _mat(self) -> np.ndarray:
+        if self._matrix is None:
+            self._matrix = (np.stack(self._vecs) if self._vecs
+                            else np.zeros((0, self.dim), np.float32))
+        return self._matrix
+
+    def search(self, query: np.ndarray, top_k: int = 5
+               ) -> List[Tuple[str, float]]:
+        m = self._mat()
+        if not len(m):
+            return []
+        q = np.asarray(query, np.float32)
+        n = np.linalg.norm(q)
+        if n > 0:
+            q = q / n
+        scores = m @ q
+        k = min(top_k, len(scores))
+        idx = np.argpartition(-scores, k - 1)[:k]
+        idx = idx[np.argsort(-scores[idx])]
+        return [(self._ids[i], float(scores[i])) for i in idx]

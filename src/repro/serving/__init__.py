@@ -1,0 +1,6 @@
+from repro.serving.engine import PhaseTimings, RagEngine
+from repro.serving.sampling import greedy, temperature_sample
+from repro.serving.scheduler import BatchScheduler
+
+__all__ = ["PhaseTimings", "RagEngine", "greedy", "temperature_sample",
+           "BatchScheduler"]

@@ -1,0 +1,236 @@
+"""The MatKV RAG serving engine (paper Fig. 3b).
+
+Modes:
+  vanilla    — full KV recomputation: one prefill over [docs | query], decode.
+  matkv      — load materialized chunk KVs from flash, compose, sub-prefill the
+               query only, decode. (paper-faithful; ``rerotate=True`` switches
+               on the beyond-paper position re-rotation)
+  cacheblend — matkv + selective recompute of r=18% of doc tokens (baseline).
+
+Per-request phase timings (load / prefill / decode) mirror the paper's §V-A
+latency breakdown. SSM/hybrid archs serve via prefix-state reuse + chained
+recompute of later chunks (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blend import blend
+from repro.core.chunking import Chunk, chunk_document
+from repro.core.compose import (compose_attn_cache, compose_hybrid_cache,
+                                compose_ssm_cache)
+from repro.core.materialize import Materializer, load_artifact
+from repro.data.tokenizer import EOS, SEP, ByteTokenizer
+from repro.models.cache import AttnCache, write_kv
+from repro.retrieval.embed import HashingEmbedder
+from repro.retrieval.vectordb import VectorDB
+from repro.serving.sampling import greedy
+
+
+@dataclass
+class PhaseTimings:
+    load_s: float = 0.0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    n_doc_tokens: int = 0
+    n_new_tokens: int = 0
+    kv_bytes_loaded: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.load_s + self.prefill_s + self.decode_s
+
+
+class RagEngine:
+    def __init__(self, model, params, store, mode: str = "matkv",
+                 chunk_tokens: int = 256, top_k: int = 2,
+                 rerotate: bool = False, blend_ratio: float = 0.18,
+                 quantized: bool = False, reader=None):
+        assert mode in ("vanilla", "matkv", "cacheblend")
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.store = store
+        self.reader = reader or store          # SimulatedReader for timing runs
+        self.mode = mode
+        self.chunk_tokens = chunk_tokens
+        self.top_k = top_k
+        self.rerotate = rerotate
+        self.blend_ratio = blend_ratio
+        self.tok = ByteTokenizer()
+        self.embedder = HashingEmbedder()
+        self.vdb = VectorDB(self.embedder.dim)
+        self.materializer = Materializer(model, params, store,
+                                         quantized=quantized)
+        self._chunks: Dict[str, Chunk] = {}
+        self._decode_fn = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, c, t))
+        self._subprefill_fns = {}
+        self._vanilla_fns = {}
+
+    # -- ingest ------------------------------------------------------------------
+    def ingest(self, doc_id: str, text: str) -> List[str]:
+        toks = self.tok.encode(text)
+        ids = []
+        for c in chunk_document(doc_id, toks, self.chunk_tokens):
+            self._chunks[c.chunk_id] = c
+            self.vdb.add(c.chunk_id, self.embedder.embed_tokens(c.tokens))
+            if self.mode != "vanilla" and not self.store.exists(c.chunk_id):
+                self.materializer.ingest(c)
+            ids.append(c.chunk_id)
+        return ids
+
+    def delete(self, chunk_id: str) -> None:
+        self.vdb.delete(chunk_id, kv_store=self.store)
+        self._chunks.pop(chunk_id, None)
+
+    # -- retrieval ----------------------------------------------------------------
+    def retrieve(self, question: str) -> List[str]:
+        q = self.embedder.embed_tokens(self.tok.encode(question))
+        return [cid for cid, _ in self.vdb.search(q, self.top_k)]
+
+    # -- helpers --------------------------------------------------------------------
+    def _pad_chunk(self, tokens: np.ndarray) -> np.ndarray:
+        out = np.zeros((self.chunk_tokens,), np.int32)
+        out[:len(tokens)] = tokens
+        return out
+
+    def _prompt(self, question: str) -> np.ndarray:
+        return np.concatenate([[SEP], self.tok.encode(" " + question + " "),
+                               [SEP]]).astype(np.int32)
+
+    def _subprefill(self, cache, query: jnp.ndarray):
+        key = (query.shape, type(cache).__name__)
+        if key not in self._subprefill_fns:
+            self._subprefill_fns[key] = jax.jit(
+                lambda p, c, t: self.model.decode_step(p, c, t))
+        return self._subprefill_fns[key](self.params, cache, query)
+
+    def _decode_loop(self, cache, first_token, max_new_tokens: int
+                     ) -> Tuple[List[np.ndarray], object]:
+        toks = [np.asarray(first_token)]
+        cur = first_token
+        for _ in range(max_new_tokens - 1):
+            logits, cache = self._decode_fn(self.params, cache, cur[:, None])
+            cur = greedy(logits[:, -1])
+            toks.append(np.asarray(cur))
+        return toks, cache
+
+    # -- load + compose (the MatKV read path) ---------------------------------------
+    def load_and_compose(self, chunk_ids: Sequence[str], buf_size: int,
+                         batch_rows: int = 1):
+        """Returns (cache, n_doc_tokens, bytes_loaded). One row; rows replicate."""
+        t_bytes = 0
+        artifacts, metas = [], []
+        for cid in chunk_ids:
+            payload = self.reader.get(cid)
+            t_bytes += len(payload)
+            art, meta = load_artifact(self.cfg, payload)
+            artifacts.append(art)
+            metas.append(meta)
+        fam = self.cfg.family
+        if fam in ("dense", "vlm", "moe"):
+            if batch_rows > 1:
+                artifacts = [jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (a.shape[0], batch_rows) + a.shape[2:]), art)
+                    for art in artifacts]
+            cache = compose_attn_cache(self.cfg, artifacts, buf_size,
+                                       rerotate=self.rerotate)
+            n_doc = int(cache.length)
+        elif fam == "ssm":
+            # prefix reuse of chunk 1; chain-recompute chunks 2..k
+            n_doc = metas[0]["n_tokens"]
+            cache = compose_ssm_cache(self.cfg, artifacts[0], n_doc)
+            for cid, meta in zip(chunk_ids[1:], metas[1:]):
+                toks = jnp.asarray(self._chunks[cid].tokens)[None]
+                _, cache = self._subprefill(cache, toks)
+                n_doc += meta["n_tokens"]
+        elif fam == "hybrid":
+            n_doc = metas[0]["n_tokens"]
+            cache = compose_hybrid_cache(self.cfg, artifacts[0], n_doc, buf_size)
+            for cid, meta in zip(chunk_ids[1:], metas[1:]):
+                toks = jnp.asarray(self._chunks[cid].tokens)[None]
+                _, cache = self._subprefill(cache, toks)
+                n_doc += meta["n_tokens"]
+        else:
+            raise ValueError(f"engine: unsupported family {fam}")
+        return cache, n_doc, t_bytes
+
+    # -- request paths -----------------------------------------------------------------
+    def answer(self, question: str, max_new_tokens: int = 20,
+               chunk_ids: Optional[Sequence[str]] = None
+               ) -> Tuple[str, PhaseTimings]:
+        timings = PhaseTimings()
+        chunk_ids = list(chunk_ids or self.retrieve(question))
+        prompt = self._prompt(question)
+
+        if self.mode == "vanilla":
+            doc_toks = [self._pad_chunk(self._chunks[c].tokens)
+                        for c in chunk_ids]
+            full = np.concatenate(doc_toks + [prompt])[None]
+            timings.n_doc_tokens = sum(len(d) for d in doc_toks)
+            t0 = time.perf_counter()
+            cache, logits = self._vanilla_prefill(jnp.asarray(full))
+            jax.block_until_ready(logits)
+            timings.prefill_s = time.perf_counter() - t0
+            first = greedy(logits[:, -1])
+        else:
+            buf = timings.n_doc_tokens = len(chunk_ids) * self.chunk_tokens
+            t0 = time.perf_counter()
+            cache, n_doc, nbytes = self.load_and_compose(
+                chunk_ids, buf + len(prompt) + max_new_tokens + 8)
+            jax.block_until_ready(cache.k if hasattr(cache, "k") else cache.h)
+            timings.load_s = time.perf_counter() - t0
+            timings.kv_bytes_loaded = nbytes
+            t0 = time.perf_counter()
+            if self.mode == "cacheblend":
+                doc_concat = jnp.asarray(np.concatenate(
+                    [self._pad_chunk(self._chunks[c].tokens)
+                     for c in chunk_ids])[None])
+                cache, _ = blend(self.cfg, self.params, doc_concat, cache,
+                                 self.blend_ratio)
+            logits, cache = self._subprefill(cache, jnp.asarray(prompt)[None])
+            jax.block_until_ready(logits)
+            timings.prefill_s = time.perf_counter() - t0
+            first = greedy(logits[:, -1])
+
+        t0 = time.perf_counter()
+        toks, _ = self._decode_loop(cache, first, max_new_tokens)
+        timings.decode_s = time.perf_counter() - t0
+        timings.n_new_tokens = max_new_tokens
+        ids = [int(t[0]) for t in toks]
+        if EOS in ids:
+            ids = ids[:ids.index(EOS)]
+        return self.tok.decode(ids), timings
+
+    def _vanilla_prefill(self, full_tokens: jnp.ndarray):
+        """Full forward with KV collection -> decode-ready cache."""
+        key = full_tokens.shape
+        if key not in self._vanilla_fns:
+            def fn(params, toks):
+                logits, artifact = self.model.prefill(params, {"tokens": toks})
+                s = toks.shape[1]
+                if self.cfg.family in ("dense", "vlm", "moe"):
+                    k, v = artifact
+                    cache = self.model.init_cache(
+                        toks.shape[0], s + 64)
+                    kb, vb, sp, ln = write_kv(cache.k, cache.v, cache.slot_pos,
+                                              cache.length, k, v)
+                    cache = AttnCache(k=kb, v=vb, slot_pos=sp, length=ln)
+                elif self.cfg.family == "ssm":
+                    cache = compose_ssm_cache(self.cfg, artifact, s)
+                else:
+                    (kv, rec) = artifact
+                    cache = compose_hybrid_cache(
+                        self.cfg, (kv, rec), s, s + 64)
+                return cache, logits
+            self._vanilla_fns[key] = jax.jit(fn)
+        return self._vanilla_fns[key](self.params, full_tokens)

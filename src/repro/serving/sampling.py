@@ -1,0 +1,20 @@
+"""Token sampling strategies for the decode loop."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jnp.ndarray) -> jnp.ndarray:
+    """logits (B, V) -> (B,) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(key, logits: jnp.ndarray, temperature: float = 1.0,
+                       top_k: int = 0) -> jnp.ndarray:
+    lf = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k:
+        thresh = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < thresh, -1e30, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)

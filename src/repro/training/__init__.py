@@ -1,0 +1,9 @@
+from repro.training.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.optimizer import (AdamWConfig, AdamWState, apply_updates,
+                                      init_state)
+from repro.training.train_loop import TrainConfig, make_train_step, train
+
+__all__ = ["latest_checkpoint", "restore_checkpoint", "save_checkpoint",
+           "AdamWConfig", "AdamWState", "apply_updates", "init_state",
+           "TrainConfig", "make_train_step", "train"]

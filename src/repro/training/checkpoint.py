@@ -1,0 +1,70 @@
+"""Checkpointing: msgpack header + raw tensor payload (same container format as
+the KV artifacts), atomic rename, with step bookkeeping and pytree-structure
+round-tripping for arbitrarily nested param/optimizer states."""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.kvstore.serialization import deserialize, serialize
+
+
+def _flatten_with_paths(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, params, opt_state=None) -> str:
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    tensors = {f"params/{k}": v for k, v in _flatten_with_paths(params).items()}
+    if opt_state is not None:
+        tensors.update({f"opt/{k}": v
+                        for k, v in _flatten_with_paths(opt_state).items()})
+    payload = serialize(tensors, {"step": step})
+    path = d / f"ckpt_{step:08d}.mkv"
+    tmp = path.with_suffix(".tmp")
+    with open(tmp, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+    return str(path)
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    d = Path(directory)
+    if not d.exists():
+        return None
+    ckpts = sorted(d.glob("ckpt_*.mkv"))
+    return str(ckpts[-1]) if ckpts else None
+
+
+def restore_checkpoint(path: str, params_template, opt_template=None
+                       ) -> Tuple[int, Any, Any]:
+    """Restore into the shapes/structure of the provided templates."""
+    with open(path, "rb") as f:
+        tensors, meta = deserialize(f.read())
+
+    def rebuild(template, prefix):
+        flat_keys = list(_flatten_with_paths(template).keys())
+        leaves, treedef = jax.tree.flatten(template)
+        new_leaves = []
+        for key, leaf in zip(flat_keys, leaves):
+            arr = tensors[f"{prefix}/{key}"]
+            if tuple(arr.shape) != tuple(np.shape(leaf)):
+                raise ValueError(f"shape mismatch for {key}: "
+                                 f"{arr.shape} vs {np.shape(leaf)}")
+            new_leaves.append(arr.astype(np.asarray(leaf).dtype))
+        return jax.tree.unflatten(treedef, new_leaves)
+
+    params = rebuild(params_template, "params")
+    opt = rebuild(opt_template, "opt") if opt_template is not None else None
+    return int(meta["step"]), params, opt

@@ -1,0 +1,15 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run alone forces 512 host
+# devices, inside its own process). Keep kernels in interpret mode.
+os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

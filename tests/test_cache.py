@@ -1,0 +1,172 @@
+"""Cache semantics: prefill/decode equivalence across families, ring buffers."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.compose import compose_hybrid_cache, compose_ssm_cache
+from repro.models import build_model
+from repro.models.cache import AttnCache, write_kv, init_attn_cache
+
+
+def _rand_tokens(key, b, s, v):
+    return jax.random.randint(key, (b, s), 0, v)
+
+
+def test_dense_prefill_decode_equivalence(rng_key):
+    cfg = get_config("granite-8b").reduced()
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    toks = _rand_tokens(rng_key, 2, 12, cfg.vocab_size)
+    full, _, _ = model.forward(params, {"tokens": toks})
+    _, (k, v) = model.prefill(params, {"tokens": toks[:, :8]})
+    cache = model.init_cache(2, 16)
+    kb, vb, sp, ln = write_kv(cache.k, cache.v, cache.slot_pos, cache.length,
+                              k, v)
+    cache = AttnCache(k=kb, v=vb, slot_pos=sp, length=ln)
+    for t in range(8, 12):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_subprefill_multi_token_equivalence(rng_key):
+    """decode_step with Sq>1 (the MatKV query sub-prefill) == token-by-token."""
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    toks = _rand_tokens(rng_key, 1, 10, cfg.vocab_size)
+    _, (k, v) = model.prefill(params, {"tokens": toks[:, :4]})
+    def fresh():
+        c = model.init_cache(1, 16)
+        kb, vb, sp, ln = write_kv(c.k, c.v, c.slot_pos, c.length, k, v)
+        return AttnCache(k=kb, v=vb, slot_pos=sp, length=ln)
+    lg_bulk, _ = model.decode_step(params, fresh(), toks[:, 4:10])
+    cache = fresh()
+    for t in range(4, 10):
+        lg_one, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg_bulk[:, t - 4], np.float32),
+                                   np.asarray(lg_one[:, 0], np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_ring_buffer_decode(rng_key):
+    """Windowed arch: ring-buffer decode == full forward with window mask."""
+    # float32: the ring buffer permutes slot order, which changes the bf16
+    # contraction order and wobbles logits by 1-2 ulp; the *semantic*
+    # equivalence we assert here is exact in f32.
+    cfg = get_config("smollm-135m").reduced(
+        sliding_window=8, param_dtype="float32", activation_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    s_total = 20
+    toks = _rand_tokens(rng_key, 1, s_total, cfg.vocab_size)
+    full, _, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(1, 64)   # buffer capped to window=8
+    assert cache.buf_size == 8
+    errs = []
+    for t in range(s_total):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+        errs.append(float(jnp.max(jnp.abs(
+            lg[:, 0].astype(jnp.float32) - full[:, t].astype(jnp.float32)))))
+    assert max(errs) < 2e-3, errs
+
+
+def test_ssm_state_prefix_reuse(rng_key):
+    cfg = get_config("falcon-mamba-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    toks = _rand_tokens(rng_key, 1, 16, cfg.vocab_size)
+    full, _, _ = model.forward(params, {"tokens": toks})
+    _, art = model.prefill(params, {"tokens": toks[:, :10]})
+    cache = compose_ssm_cache(cfg, art, 10)
+    for t in range(10, 16):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_hybrid_prefix_reuse(rng_key):
+    cfg = get_config("recurrentgemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    toks = _rand_tokens(rng_key, 1, 16, cfg.vocab_size)
+    full, _, _ = model.forward(params, {"tokens": toks})
+    _, art = model.prefill(params, {"tokens": toks[:, :10]})
+    cache = compose_hybrid_cache(cfg, art, 10, buf_size=64)
+    for t in range(10, 16):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   rtol=3e-3, atol=3e-3)
+
+
+def test_whisper_cross_kv_decode(rng_key):
+    cfg = get_config("whisper-tiny").reduced()
+    model = build_model(cfg)
+    params = model.init(rng_key, enc_len=24, dec_len=32)
+    frames = jax.random.normal(rng_key, (1, 24, cfg.d_model))
+    toks = _rand_tokens(rng_key, 1, 8, cfg.vocab_size)
+    # teacher-forced full decode
+    logits_full, _, _ = model.forward(params, {"frontend": frames,
+                                               "tokens": toks})
+    # materialized cross-KV + incremental decode
+    _, (ck, cv) = model.prefill(params, {"frontend": frames})
+    cache = model.init_cache(1, 32, enc_len=24)
+    cache = dataclasses.replace(cache, cross_k=ck, cross_v=cv)
+    for t in range(8):
+        lg, cache = model.decode_step(params, cache, toks[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                                   np.asarray(logits_full[:, t], np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_decode_paths_equivalent(rng_key, monkeypatch):
+    """The optimized write-then-attend decode (default) and the
+    paper-baseline concat-then-attend lowering (REPRO_DECODE_CONCAT=1) are
+    the same math — logits must agree to f32 roundoff, single- and
+    multi-token (sub-prefill) alike."""
+    cfg = get_config("smollm-135m").reduced(
+        param_dtype="float32", activation_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    toks = _rand_tokens(rng_key, 2, 12, cfg.vocab_size)
+    _, (k, v) = model.prefill(params, {"tokens": toks[:, :6]})
+
+    def fresh():
+        c = model.init_cache(2, 24)
+        kb, vb, sp, ln = write_kv(c.k, c.v, c.slot_pos, c.length, k, v)
+        return AttnCache(k=kb, v=vb, slot_pos=sp, length=ln)
+
+    for sq in (1, 4):                       # decode and sub-prefill widths
+        step = toks[:, 6:6 + sq]
+        monkeypatch.delenv("REPRO_DECODE_CONCAT", raising=False)
+        lg_new, c_new = model.decode_step(params, fresh(), step)
+        monkeypatch.setenv("REPRO_DECODE_CONCAT", "1")
+        lg_old, c_old = model.decode_step(params, fresh(), step)
+        np.testing.assert_allclose(np.asarray(lg_new, np.float32),
+                                   np.asarray(lg_old, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(c_new.slot_pos),
+                                      np.asarray(c_old.slot_pos))
+        assert int(c_new.length) == int(c_old.length)
+
+
+def test_write_kv_wraps_ring(rng_key):
+    cache = init_attn_cache(get_config("smollm-135m").reduced(), 1, 4)
+    l, b, _, kvh, hd = cache.k.shape
+    k_new = jnp.ones((l, b, 1, kvh, hd))
+    base = cache
+    k, v, sp, ln = base.k, base.v, base.slot_pos, base.length
+    for t in range(6):
+        k, v, sp, ln = write_kv(k, v, sp, ln, k_new * (t + 1), k_new, None)
+    # after 6 writes into a 4-slot ring, slots hold tokens [4,5,2,3]
+    np.testing.assert_array_equal(np.asarray(sp), [4, 5, 2, 3])
+    assert int(ln) == 6
+    assert float(k[0, 0, 1, 0, 0]) == 6.0  # token 5 written at slot 1

@@ -1,0 +1,87 @@
+"""Config registry + analytical model accounting."""
+
+import pytest
+
+from repro.configs import (ASSIGNED, PAPER_MODELS, REGISTRY, config_for_shape,
+                           get_config, get_shape, SHAPES)
+
+
+def test_all_assigned_present():
+    expected = {
+        "whisper-tiny", "deepseek-moe-16b", "qwen3-14b", "phi4-mini-3.8b",
+        "recurrentgemma-2b", "falcon-mamba-7b", "qwen3-moe-30b-a3b",
+        "llava-next-mistral-7b", "smollm-135m", "granite-8b",
+    }
+    assert expected == set(ASSIGNED)
+
+
+def test_every_config_cites_source():
+    for cfg in REGISTRY.values():
+        assert cfg.source, cfg.name
+
+
+@pytest.mark.parametrize("name,lo,hi", [
+    ("deepseek-moe-16b", 15e9, 17.5e9),
+    ("qwen3-14b", 13.5e9, 15.5e9),
+    ("phi4-mini-3.8b", 3.5e9, 4.2e9),
+    ("recurrentgemma-2b", 2.0e9, 2.8e9),
+    ("falcon-mamba-7b", 6.8e9, 7.8e9),
+    ("qwen3-moe-30b-a3b", 29e9, 32e9),
+    ("llava-next-mistral-7b", 7.0e9, 7.6e9),
+    ("smollm-135m", 0.12e9, 0.15e9),
+    ("granite-8b", 7.6e9, 8.5e9),
+    ("whisper-tiny", 0.03e9, 0.08e9),
+    ("llama-3.1-70b", 68e9, 72e9),
+])
+def test_param_counts_match_public_numbers(name, lo, hi):
+    n = get_config(name).param_count()
+    assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    active = cfg.active_param_count()
+    assert 2.5e9 <= active <= 4e9  # the "A3B" in the name
+
+
+def test_kv_bytes_per_token_paper_scale():
+    # paper: LLaMA-70B, 1024-token chunk -> ~250MB materialized KV (fp16)
+    cfg = get_config("llama-3.1-70b")
+    mb = cfg.kv_bytes_per_token(2) * 1024 / 1e6
+    assert 250 <= mb <= 400  # 8 kv heads x 128 x 2 x 80L x 2B = 335MB
+
+    assert get_config("falcon-mamba-7b").kv_bytes_per_token() == 0
+
+
+def test_shape_policy():
+    # whisper skips long_500k; everyone else runs it (window variant for dense)
+    _, ok, reason = config_for_shape("whisper-tiny", "long_500k")
+    assert not ok and "448" in reason
+    for arch in ASSIGNED:
+        if arch == "whisper-tiny":
+            continue
+        cfg, ok, _ = config_for_shape(arch, "long_500k")
+        assert ok, arch
+        if cfg.family in ("dense", "moe", "vlm"):
+            assert cfg.sliding_window is not None
+    # base configs unmodified for other shapes
+    cfg, ok, _ = config_for_shape("granite-8b", "decode_32k")
+    assert ok and cfg.sliding_window is None
+
+
+def test_reduced_configs_valid():
+    for name in ASSIGNED:
+        small = get_config(name).reduced()
+        assert small.num_layers <= 3
+        assert small.d_model <= 512
+        if small.family == "moe":
+            assert small.num_experts <= 4
+        small.validate()
+
+
+def test_shapes_registry():
+    assert get_shape("train_4k").global_batch == 256
+    assert get_shape("long_500k").seq_len == 524_288
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    with pytest.raises(KeyError):
+        get_shape("nope")

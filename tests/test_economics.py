@@ -1,0 +1,63 @@
+"""The ten-day rule + cost model (paper §II-C, Eq. 1)."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.economics import (H100, RTX4090, SAMSUNG_9100_PRO, PM9A3,
+                                  break_even_interval_days, cost_ratio_per_access,
+                                  kv_mb_per_gpu_second, load_cost, prefill_cost)
+
+
+def test_ten_day_rule_headline():
+    """H100 + 9100 Pro + LLaMA-70B ~ paper's 'ten-day rule' (~11.6 days)."""
+    cfg = get_config("llama-3.1-70b")
+    # paper's worked example: 1,024 tokens -> ~250MB in ~500ms => ~500MB/s.
+    # With our analytical kv_bytes (335MB fp16) the rate is the same order.
+    days = break_even_interval_days(H100, SAMSUNG_9100_PRO,
+                                    cfg.kv_bytes_per_token(2))
+    assert 5 <= days <= 20, days
+
+
+def test_kv_rate_order_of_magnitude():
+    cfg = get_config("llama-3.1-70b")
+    rate = kv_mb_per_gpu_second(cfg.kv_bytes_per_token(2),
+                                H100.prefill_tokens_per_s)
+    assert 300 <= rate <= 1000  # paper: ~500 MB/s
+
+
+def test_hourly_access_cost_ratio():
+    """Paper: 1 access/hour -> MatKV ~100x more cost-efficient."""
+    cfg = get_config("llama-3.1-70b")
+    r = cost_ratio_per_access(H100, SAMSUNG_9100_PRO,
+                              cfg.kv_bytes_per_token(2), 1024, 3600.0)
+    assert 30 <= r <= 300, r
+
+
+def test_prefill_vs_load_energy():
+    """Paper §III-D: SSD load is orders of magnitude more energy-efficient."""
+    cfg = get_config("llama-3.1-70b")
+    _, j_gpu = prefill_cost(H100, 1024)
+    _, j_ssd = load_cost(SAMSUNG_9100_PRO, cfg.kv_bytes_per_token(2) * 1024)
+    assert j_gpu / j_ssd > 500
+
+
+def test_smaller_model_longer_break_even():
+    """Less KV compute per byte -> recompute is relatively cheaper -> the
+    break-even interval SHORTENS for bigger models (more benefit)."""
+    small = get_config("llama-3.2-3b")
+    big = get_config("llama-3.1-70b")
+    d_small = break_even_interval_days(H100, SAMSUNG_9100_PRO,
+                                       small.kv_bytes_per_token(2))
+    d_big = break_even_interval_days(H100, SAMSUNG_9100_PRO,
+                                     big.kv_bytes_per_token(2))
+    assert d_small > d_big
+
+
+def test_low_end_gpu_changes_economics():
+    cfg = get_config("llama-3.1-8b")
+    d_h100 = break_even_interval_days(H100, SAMSUNG_9100_PRO,
+                                      cfg.kv_bytes_per_token(2))
+    d_4090 = break_even_interval_days(RTX4090, SAMSUNG_9100_PRO,
+                                      cfg.kv_bytes_per_token(2))
+    # cheap GPU => recompute cheaper => storage justified only at higher rates
+    assert d_4090 < d_h100

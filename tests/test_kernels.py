@@ -1,0 +1,145 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import quantize_kv
+from repro.kernels import ref
+from repro.kernels.chunked_decode import chunked_decode
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.kv_dequant import kv_dequant
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.ops import (chunked_decode_op, flash_prefill_op,
+                               kv_dequant_op, mamba_scan_op)
+
+TOLS = {jnp.float32: dict(rtol=3e-5, atol=3e-5),
+        jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+@pytest.mark.parametrize("b,h,kv,s,hd", [
+    (1, 4, 2, 256, 64),
+    (2, 8, 8, 128, 32),   # MHA
+    (1, 9, 3, 128, 64),   # smollm-style GQA (odd heads)
+    (1, 4, 1, 256, 128),  # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_sweep(rng_key, b, h, kv, s, hd, dtype):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, s, hd), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, hd), dtype)
+    out = flash_prefill(q, k, v, block_q=64, block_k=64, interpret=True)
+    expect = ref.flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("window", [None, 64])
+def test_flash_prefill_window(rng_key, window):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 32))
+    k = jax.random.normal(ks[1], (1, 2, 256, 32))
+    v = jax.random.normal(ks[2], (1, 2, 256, 32))
+    out = flash_prefill(q, k, v, window=window, block_q=64, block_k=64)
+    expect = ref.flash_prefill_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("b,h,kv,s,hd,clen,win", [
+    (2, 8, 2, 512, 64, 300, None),
+    (1, 4, 4, 1024, 32, 1024, None),   # cache exactly full
+    (1, 4, 4, 1024, 32, 700, 256),     # windowed
+    (2, 2, 1, 256, 128, 1, None),      # nearly-empty cache
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunked_decode_sweep(rng_key, b, h, kv, s, hd, clen, win, dtype):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    k = jax.random.normal(ks[1], (b, kv, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, kv, s, hd), dtype)
+    out = chunked_decode(q, k, v, clen, window=win, block_k=128)
+    expect = ref.chunked_decode_ref(q, k, v, clen, window=win)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("n,hd", [(256, 64), (512, 128), (1024, 32)])
+@pytest.mark.parametrize("out_dtype", [jnp.bfloat16, jnp.float32])
+def test_kv_dequant_sweep(rng_key, n, hd, out_dtype):
+    x = jax.random.normal(rng_key, (n, hd)) * 3.0
+    q8, sc = quantize_kv(x)
+    out = kv_dequant(np.asarray(q8), np.asarray(sc), out_dtype=out_dtype,
+                     block_rows=128)
+    expect = ref.kv_dequant_ref(q8, sc, out_dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("b,s,din,st,bd,bt", [
+    (1, 128, 64, 16, 32, 32),
+    (2, 256, 128, 8, 64, 128),
+    (1, 64, 256, 16, 256, 64),
+])
+def test_mamba_scan_sweep(rng_key, b, s, din, st, bd, bt):
+    ks = jax.random.split(rng_key, 6)
+    x = jax.random.normal(ks[0], (b, s, din))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, din)) * 0.5 - 1.0)
+    bm = jax.random.normal(ks[2], (b, s, st))
+    cm = jax.random.normal(ks[3], (b, s, st))
+    alog = jnp.log(jnp.abs(jax.random.normal(ks[4], (din, st))) + 0.5)
+    h0 = jax.random.normal(ks[5], (b, din, st))
+    y, h = mamba_scan(x, dt, bm, cm, alog, h0, block_d=bd, block_t=bt)
+    ye, he = ref.mamba_scan_ref(x, dt, bm, cm, alog, jnp.zeros((din,)), h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(he),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba_scan_state_chaining(rng_key):
+    """Chunked execution with carried state == one long scan (the MatKV
+    prefix-state property for SSMs)."""
+    ks = jax.random.split(rng_key, 6)
+    b, s, din, st = 1, 128, 64, 8
+    x = jax.random.normal(ks[0], (b, s, din))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, din)) * 0.3)
+    bm = jax.random.normal(ks[2], (b, s, st))
+    cm = jax.random.normal(ks[3], (b, s, st))
+    alog = jnp.log(jnp.abs(jax.random.normal(ks[4], (din, st))) + 0.5)
+    h0 = jnp.zeros((b, din, st))
+    _, h_full = mamba_scan(x, dt, bm, cm, alog, h0, block_d=64, block_t=32)
+    half = s // 2
+    _, h1 = mamba_scan(x[:, :half], dt[:, :half], bm[:, :half], cm[:, :half],
+                       alog, h0, block_d=64, block_t=32)
+    _, h2 = mamba_scan(x[:, half:], dt[:, half:], bm[:, half:], cm[:, half:],
+                       alog, h1, block_d=64, block_t=32)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ops_wrappers_model_layout(rng_key):
+    """ops.py layout adapters agree with the model-layout jnp paths."""
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 32))     # (B,S,H,hd)
+    k = jax.random.normal(ks[1], (2, 64, 2, 32))
+    v = jax.random.normal(ks[2], (2, 64, 2, 32))
+    out = flash_prefill_op(q, k, v, interpret=True)
+    expect = ref.flash_prefill_ref(q.transpose(0, 2, 1, 3),
+                                   k.transpose(0, 2, 1, 3),
+                                   v.transpose(0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(expect.transpose(0, 2, 1, 3)),
+                               rtol=3e-5, atol=3e-5)
+
+    qd = jax.random.normal(ks[0], (2, 1, 4, 32))
+    cache_k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    cache_v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    out = chunked_decode_op(qd, cache_k, cache_v, 100, interpret=True)
+    expect = ref.chunked_decode_ref(qd[:, 0], cache_k.transpose(0, 2, 1, 3),
+                                    cache_v.transpose(0, 2, 1, 3), 100)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)

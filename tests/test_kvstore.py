@@ -1,0 +1,132 @@
+"""Flash store / serialization / tiers / async loading."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.economics import SsdSpec
+from repro.kvstore import (AsyncKvLoader, FlashKVStore, LruBytesCache,
+                           PrefetchPipeline, SimulatedReader, TieredStore,
+                           deserialize, serialize)
+
+
+def test_serialize_roundtrip_mixed_dtypes():
+    import ml_dtypes
+    tensors = {
+        "k": np.random.randn(3, 5, 2, 8).astype(ml_dtypes.bfloat16),
+        "v": np.random.randn(3, 5, 2, 8).astype(np.float32),
+        "q8": np.random.randint(-127, 127, (4, 4), dtype=np.int8),
+        "ids": np.arange(7, dtype=np.int32),
+    }
+    data = serialize(tensors, {"n_tokens": 5, "arch": "x"})
+    out, meta = deserialize(data)
+    assert meta == {"n_tokens": 5, "arch": "x"}
+    for name, a in tensors.items():
+        assert out[name].dtype == a.dtype
+        np.testing.assert_array_equal(np.asarray(out[name], np.float32),
+                                      np.asarray(a, np.float32))
+
+
+def test_serialize_rejects_bad_magic():
+    with pytest.raises(ValueError):
+        deserialize(b"XXXXgarbage")
+
+
+def test_store_put_get_delete(tmp_path):
+    store = FlashKVStore(tmp_path)
+    store.put("abc123", b"payload")
+    assert store.get("abc123") == b"payload"
+    assert store.exists("abc123")
+    assert store.list_ids() == ["abc123"]
+    assert store.total_bytes() == 7
+    assert store.delete("abc123")
+    assert not store.exists("abc123")
+    assert not store.delete("abc123")  # idempotent
+    assert store.stats.puts == 1 and store.stats.gets == 1
+
+
+def test_store_rejects_path_traversal(tmp_path):
+    store = FlashKVStore(tmp_path)
+    with pytest.raises(ValueError):
+        store.put("../evil", b"x")
+
+
+def test_lru_eviction_order():
+    c = LruBytesCache(capacity_bytes=30)
+    c.put("a", b"x" * 10)
+    c.put("b", b"x" * 10)
+    c.put("c", b"x" * 10)
+    assert c.get("a") is not None      # refresh a
+    c.put("d", b"x" * 10)              # evicts b (LRU)
+    assert c.get("b") is None
+    assert c.get("a") is not None and c.get("c") is not None
+    assert c.size_bytes <= 30
+
+
+def test_lru_oversize_item_not_cached():
+    c = LruBytesCache(capacity_bytes=5)
+    c.put("big", b"x" * 10)
+    assert c.get("big") is None
+
+
+def test_tiered_store_hits_dram(tmp_path):
+    flash = FlashKVStore(tmp_path)
+    tiered = TieredStore(flash, dram_capacity_bytes=1 << 20)
+    tiered.put("k1", b"data")
+    flash_reads_before = flash.stats.gets
+    assert tiered.get("k1") == b"data"       # served from DRAM
+    assert flash.stats.gets == flash_reads_before
+    tiered.delete("k1")
+    assert tiered.dram.get("k1") is None
+
+
+def test_simulated_reader_enforces_bandwidth(tmp_path):
+    store = FlashKVStore(tmp_path)
+    store.put("c", b"x" * 1_000_000)
+    slow = SimulatedReader(store, SsdSpec("slow", 0.1, 0.01, 5.0))  # 10 MB/s
+    t0 = time.perf_counter()
+    slow.get("c")
+    elapsed = time.perf_counter() - t0
+    assert elapsed >= 0.09  # 1MB / 10MB/s = 0.1s
+    assert slow.total_simulated_s >= 0.09
+    assert slow.energy_joules() > 0
+
+
+def test_async_loader_parallel(tmp_path):
+    store = FlashKVStore(tmp_path)
+    for i in range(8):
+        store.put(f"c{i}", bytes([i]) * 100)
+    loader = AsyncKvLoader(store, n_workers=4)
+    fut = loader.load_many([f"c{i}" for i in range(8)])
+    payloads = fut.result(timeout=5)
+    assert [p[0] for p in payloads] == list(range(8))
+    loader.shutdown()
+
+
+def test_prefetch_pipeline_overlaps():
+    """Loads for item i+1 must start before item i finishes consuming."""
+    events = []
+    lock = threading.Lock()
+
+    def load(item):
+        with lock:
+            events.append(("load_start", item))
+        time.sleep(0.05)
+        with lock:
+            events.append(("load_end", item))
+        return item * 10
+
+    pipe = PrefetchPipeline([1, 2, 3], load, depth=1)
+    results = []
+    for item, payload in pipe:
+        with lock:
+            events.append(("consume", item))
+        time.sleep(0.05)  # simulate decode
+        results.append(payload)
+    assert results == [10, 20, 30]
+    # item 2's load must start before item 1 is consumed -> overlap happened
+    i_load2 = events.index(("load_start", 2))
+    i_consume1 = events.index(("consume", 1))
+    assert i_load2 < i_consume1, events

@@ -1,0 +1,174 @@
+"""MatKV core invariants: materialize -> store -> load -> compose -> decode."""
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (Materializer, chunk_document, compose_attn_cache,
+                        load_artifact)
+from repro.core.blend import blend, hkvd_select
+from repro.core.chunking import chunk_id_for
+from repro.core.quantize import quantization_error, quantize_kv, dequantize_kv
+from repro.kvstore import FlashKVStore
+from repro.models import build_model
+from repro.models.cache import AttnCache, write_kv
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = get_config("smollm-135m").reduced(vocab_size=300)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    return cfg, model, params
+
+
+def test_chunking_dedupes_and_hashes():
+    toks = np.arange(100, dtype=np.int32)
+    chunks = chunk_document("d", toks, chunk_tokens=32)
+    assert [len(c) for c in chunks] == [32, 32, 32, 4]
+    assert chunks[0].chunk_id == chunk_id_for(toks[:32])
+    assert chunks[0].chunk_id != chunks[1].chunk_id
+
+
+def test_materialize_store_load_roundtrip(dense_setup):
+    cfg, model, params = dense_setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        mat = Materializer(model, params, store)
+        chunk = chunk_document("doc", np.arange(40) % 300, chunk_tokens=64)[0]
+        nbytes = mat.ingest(chunk)
+        assert store.exists(chunk.chunk_id)
+        assert store.size_bytes(chunk.chunk_id) == nbytes
+        art, meta = load_artifact(cfg, store.get(chunk.chunk_id))
+        k, v = art
+        assert k.shape == (cfg.num_layers, 1, 40, cfg.num_kv_heads,
+                           cfg.head_dim)
+        assert meta["n_tokens"] == 40
+        # artifact equals direct prefill output
+        _, (k2, v2) = model.prefill(
+            params, {"tokens": jnp.asarray(chunk.tokens)[None]})
+        np.testing.assert_allclose(np.asarray(k, np.float32),
+                                   np.asarray(k2, np.float32),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_compose_equals_vanilla_single_doc(dense_setup):
+    """THE core invariant: one doc composed from the store == full prefill."""
+    cfg, model, params = dense_setup
+    toks = jnp.asarray(np.random.default_rng(0).integers(0, 300, 48))[None]
+    logits_full, (k, v), = model.prefill(params, {"tokens": toks})
+    cache = compose_attn_cache(cfg, [(k, v)], buf_size=64)
+    assert int(cache.length) == 48
+    # decode the next token both ways
+    nxt = jnp.asarray([[5]], jnp.int32)
+    lg_m, _ = model.decode_step(params, cache, nxt)
+    # vanilla: forward over 49 tokens
+    lg_full, _, _ = model.forward(
+        params, {"tokens": jnp.concatenate([toks, nxt], axis=1)})
+    np.testing.assert_allclose(np.asarray(lg_m[:, 0], np.float32),
+                               np.asarray(lg_full[:, -1], np.float32),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_compose_multi_doc_restart_positions(dense_setup):
+    """Paper-faithful mode: doc KVs keep per-chunk positions; slots are global;
+    docs must NOT attend to each other (their KVs are frozen)."""
+    cfg, model, params = dense_setup
+    rng = np.random.default_rng(1)
+    d1 = jnp.asarray(rng.integers(0, 300, 32))[None]
+    d2 = jnp.asarray(rng.integers(0, 300, 32))[None]
+    _, a1 = model.prefill(params, {"tokens": d1})
+    _, a2 = model.prefill(params, {"tokens": d2})
+    cache = compose_attn_cache(cfg, [a1, a2], buf_size=96)
+    assert int(cache.length) == 64
+    # swapping doc order changes only slot order, not each doc's stored KV
+    cache_swapped = compose_attn_cache(cfg, [a2, a1], buf_size=96)
+    np.testing.assert_allclose(
+        np.asarray(cache.k[:, :, :32], np.float32),
+        np.asarray(cache_swapped.k[:, :, 32:64], np.float32), atol=1e-6)
+
+
+def test_compose_rerotate_matches_global_positions(dense_setup):
+    """Re-rotated compose == KVs as if the chunk had been prefilled at its
+    global offset (RoPE rotation composition)."""
+    cfg, model, params = dense_setup
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, 300, 32))[None]
+    _, art = model.prefill(params, {"tokens": toks})
+    cache = compose_attn_cache(cfg, [art, art], buf_size=64, rerotate=True)
+    # chunk 2's keys should equal prefill at positions 32..63
+    _, art_off = model.prefill(params, {"tokens": toks},
+                               positions=jnp.arange(32, 64))
+    np.testing.assert_allclose(np.asarray(cache.k[:, :, 32:64], np.float32),
+                               np.asarray(art_off[0], np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_quantize_roundtrip_error_small(rng_key):
+    x = jax.random.normal(rng_key, (4, 64, 2, 32))
+    assert quantization_error(x) < 0.01
+    q, s = quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float16
+    back = dequantize_kv(q, s, jnp.float32)
+    assert float(jnp.max(jnp.abs(back - x))) < 0.05
+
+
+def test_quantized_artifact_roundtrip(dense_setup):
+    cfg, model, params = dense_setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        mat_q = Materializer(model, params, store, quantized=True)
+        chunk = chunk_document("doc", np.arange(32) % 300, chunk_tokens=32)[0]
+        n_q = mat_q.ingest(chunk)
+        art_q, meta = load_artifact(cfg, store.get(chunk.chunk_id))
+        assert meta["quantized"]
+        _, (k_true, _) = model.prefill(
+            params, {"tokens": jnp.asarray(chunk.tokens)[None]})
+        rel = (jnp.linalg.norm(art_q[0].astype(jnp.float32)
+                               - k_true.astype(jnp.float32))
+               / jnp.linalg.norm(k_true.astype(jnp.float32)))
+        assert float(rel) < 0.05
+        # storage saving vs bf16
+        mat_f = Materializer(model, params, store, quantized=False)
+        chunk2 = dataclasses.replace(chunk, chunk_id="other")
+        n_f = mat_f.ingest(chunk2)
+        assert n_q < 0.65 * n_f
+
+
+def test_cacheblend_blends_toward_vanilla(dense_setup):
+    """Blending with ratio=1.0 must exactly reproduce vanilla full-attention KV."""
+    cfg, model, params = dense_setup
+    rng = np.random.default_rng(3)
+    d1 = jnp.asarray(rng.integers(0, 300, 24))[None]
+    d2 = jnp.asarray(rng.integers(0, 300, 24))[None]
+    _, a1 = model.prefill(params, {"tokens": d1})
+    _, a2 = model.prefill(params, {"tokens": d2})
+    cache = compose_attn_cache(cfg, [a1, a2], buf_size=48)
+    full = jnp.concatenate([d1, d2], axis=1)
+    blended, sel = blend(cfg, params, full, cache, ratio=1.0)
+    assert sel.shape == (48,)
+    _, (k_true, v_true) = model.prefill(params, {"tokens": full})
+    np.testing.assert_allclose(np.asarray(blended.k[:, :, :48], np.float32),
+                               np.asarray(k_true, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_hkvd_selects_cross_chunk_tokens(dense_setup):
+    """Tokens in chunk 2 (whose cached KV lacks cross-chunk context) should
+    dominate the HKVD selection over chunk-1 tokens (which are exact)."""
+    cfg, model, params = dense_setup
+    rng = np.random.default_rng(4)
+    d1 = jnp.asarray(rng.integers(0, 300, 24))[None]
+    d2 = jnp.asarray(rng.integers(0, 300, 24))[None]
+    _, a1 = model.prefill(params, {"tokens": d1})
+    _, a2 = model.prefill(params, {"tokens": d2})
+    cache = compose_attn_cache(cfg, [a1, a2], buf_size=48)
+    sel = hkvd_select(cfg, params, jnp.concatenate([d1, d2], axis=1), cache,
+                      ratio=0.25)
+    frac_chunk2 = float(np.mean(np.asarray(sel) >= 24))
+    assert frac_chunk2 >= 0.5

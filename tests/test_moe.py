@@ -1,0 +1,90 @@
+"""MoE routing / dispatch invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.moe import _capacity, init_moe, moe_ffn
+
+
+@pytest.fixture(scope="module")
+def moe_cfg():
+    return get_config("deepseek-moe-16b").reduced(num_experts=4, moe_top_k=2)
+
+
+def test_moe_output_shape_and_finite(moe_cfg, rng_key):
+    p = init_moe(moe_cfg, rng_key)
+    x = jax.random.normal(rng_key, (2, 16, moe_cfg.d_model),
+                          jnp.dtype(moe_cfg.activation_dtype))
+    out, aux = moe_ffn(moe_cfg, p, x)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+    assert float(aux) >= 0.0
+
+
+def test_moe_grad_flows_to_router_and_experts(moe_cfg, rng_key):
+    p = init_moe(moe_cfg, rng_key)
+    x = jax.random.normal(rng_key, (2, 8, moe_cfg.d_model))
+
+    def loss(p):
+        out, aux = moe_ffn(moe_cfg, p, x)
+        return jnp.sum(out.astype(jnp.float32) ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.max(jnp.abs(g["router"]))) > 0
+    assert float(jnp.max(jnp.abs(g["w_gate"].astype(jnp.float32)))) > 0
+
+
+def test_capacity_no_drop_when_uniform(moe_cfg, rng_key):
+    """With capacity_factor >> 1 nothing drops: each token's output is a convex
+    combination of expert outputs; with identical experts the result must equal
+    running any single expert."""
+    cfg = dataclasses.replace(moe_cfg, capacity_factor=8.0,
+                              num_shared_experts=0)
+    p = init_moe(cfg, rng_key)
+    # make all experts identical
+    for n in ("w_gate", "w_up", "w_down"):
+        p[n] = jnp.broadcast_to(p[n][:1], p[n].shape)
+    x = jax.random.normal(rng_key, (1, 16, cfg.d_model))
+    out, _ = moe_ffn(cfg, p, x)
+    act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+    single = (act(x @ p["w_gate"][0]) * (x @ p["w_up"][0])) @ p["w_down"][0]
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(single, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_capacity_drops_overflow(moe_cfg, rng_key):
+    """With capacity 0 < c << needed, overflow tokens produce zero output."""
+    cfg = dataclasses.replace(moe_cfg, capacity_factor=1e-6,
+                              num_shared_experts=0)
+    p = init_moe(cfg, rng_key)
+    x = jax.random.normal(rng_key, (1, 64, cfg.d_model))
+    out, _ = moe_ffn(cfg, p, x)
+    norms = jnp.linalg.norm(out.astype(jnp.float32), axis=-1)[0]
+    assert float(jnp.sum(norms == 0.0)) > 0  # some tokens dropped
+
+
+def test_capacity_rounding():
+    cfg = get_config("deepseek-moe-16b")
+    c = _capacity(1_000_000, cfg)
+    assert c % 2048 == 0
+    assert c >= 1_000_000 * cfg.moe_top_k / cfg.num_experts
+
+
+def test_shared_experts_always_active(moe_cfg, rng_key):
+    """Zeroing all routed experts leaves exactly the shared-expert output."""
+    p = init_moe(moe_cfg, rng_key)
+    p0 = dict(p)
+    p0["w_down"] = jnp.zeros_like(p["w_down"])
+    x = jax.random.normal(rng_key, (1, 8, moe_cfg.d_model))
+    out, _ = moe_ffn(moe_cfg, p0, x)
+    from repro.models.mlp import mlp
+    expect = mlp(moe_cfg, p["shared"], x)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=2e-2, atol=2e-2)

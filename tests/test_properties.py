@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunking import chunk_document
+from repro.core.economics import (GpuSpec, SsdSpec, break_even_interval_s)
+from repro.core.quantize import dequantize_kv, quantize_kv
+from repro.kvstore import LruBytesCache, deserialize, serialize
+from repro.models.attention import position_mask
+
+import jax.numpy as jnp
+
+_DTYPES = [np.float32, np.float16, np.int8, np.int32]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    shapes=st.lists(
+        st.tuples(st.integers(1, 4), st.integers(1, 8), st.integers(1, 8)),
+        min_size=1, max_size=4),
+    dt_idx=st.integers(0, len(_DTYPES) - 1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_serialization_roundtrip_property(shapes, dt_idx, seed):
+    rng = np.random.default_rng(seed)
+    dt = _DTYPES[dt_idx]
+    tensors = {}
+    for i, shp in enumerate(shapes):
+        a = rng.standard_normal(shp) * 100
+        tensors[f"t{i}"] = a.astype(dt)
+    out, _ = deserialize(serialize(tensors, {"s": seed}))
+    for k, a in tensors.items():
+        np.testing.assert_array_equal(out[k], a)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-3, 1e3),
+       n=st.integers(1, 64))
+def test_quantize_bounded_error_property(seed, scale, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((n, 16)) * scale, jnp.float32)
+    q, s = quantize_kv(x)
+    back = dequantize_kv(q, s, jnp.float32)
+    # per-vector error bounded by scale/2 = amax/254
+    amax = np.maximum(np.abs(np.asarray(x)).max(axis=-1, keepdims=True), 1e-8)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert (err <= amax / 127.0 + 1e-6).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(doc_len=st.integers(1, 300), chunk=st.integers(1, 64))
+def test_chunking_partitions_document(doc_len, chunk):
+    toks = np.arange(doc_len, dtype=np.int32)
+    chunks = chunk_document("d", toks, chunk_tokens=chunk)
+    recon = np.concatenate([c.tokens for c in chunks])
+    np.testing.assert_array_equal(recon, toks)
+    assert all(len(c) <= chunk for c in chunks)
+    assert [c.index for c in chunks] == list(range(len(chunks)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["put", "get"]), st.integers(0, 9),
+              st.integers(1, 20)),
+    max_size=60), cap=st.integers(10, 100))
+def test_lru_capacity_invariant(ops, cap):
+    c = LruBytesCache(cap)
+    for op, key, size in ops:
+        if op == "put":
+            c.put(str(key), b"x" * size)
+        else:
+            v = c.get(str(key))
+            assert v is None or set(v) == {ord("x")}
+        assert c.size_bytes <= cap
+
+
+@settings(max_examples=25, deadline=None)
+@given(sq=st.integers(1, 16), sk=st.integers(1, 32),
+       window=st.one_of(st.none(), st.integers(1, 16)),
+       offset=st.integers(0, 16))
+def test_position_mask_properties(sq, sk, window, offset):
+    q_pos = jnp.arange(offset, offset + sq, dtype=jnp.int32)
+    k_pos = jnp.arange(sk, dtype=jnp.int32)
+    m = np.asarray(position_mask(q_pos, k_pos, window, True))
+    assert m.shape == (sq, sk)
+    # causality: no attention to the future
+    for i in range(sq):
+        for j in range(sk):
+            if j > offset + i:
+                assert not m[i, j]
+            if window is not None and j <= offset + i - window:
+                assert not m[i, j]
+    # monotone: if (i, j) visible then (i+1, j) visible for no-window masks
+    if window is None:
+        for i in range(sq - 1):
+            assert (~m[i] | m[i + 1]).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(gpu_price=st.floats(1e3, 1e6), kv_rate=st.floats(1.0, 1e4),
+       ssd_price=st.floats(0.01, 10.0))
+def test_break_even_monotonicity(gpu_price, kv_rate, ssd_price):
+    """Pricier GPU -> longer break-even; pricier storage -> shorter."""
+    gpu = GpuSpec("g", gpu_price, 300, kv_rate, 30)
+    ssd = SsdSpec("s", ssd_price, 10.0, 7.0)
+    t = break_even_interval_s(gpu, ssd, kv_bytes_per_token=1_000_000)
+    gpu2 = GpuSpec("g", gpu_price * 2, 300, kv_rate, 30)
+    ssd2 = SsdSpec("s", ssd_price * 2, 10.0, 7.0)
+    assert break_even_interval_s(gpu2, ssd, 1_000_000) > t * 1.5
+    assert break_even_interval_s(gpu, ssd2, 1_000_000) < t

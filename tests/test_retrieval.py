@@ -1,0 +1,53 @@
+"""Vector DB + embedder."""
+
+import numpy as np
+
+from repro.retrieval import EMBED_DIM, HashingEmbedder, VectorDB
+
+
+def test_embedder_deterministic_and_normalized():
+    e = HashingEmbedder()
+    toks = np.asarray([4, 8, 15, 16, 23, 42])
+    v1 = e.embed_tokens(toks)
+    v2 = e.embed_tokens(toks)
+    np.testing.assert_array_equal(v1, v2)
+    assert abs(np.linalg.norm(v1) - 1.0) < 1e-5
+
+
+def test_similar_docs_rank_higher():
+    e = HashingEmbedder()
+    db = VectorDB(e.dim)
+    a = np.asarray(list(range(50)))
+    b = np.asarray(list(range(1000, 1050)))
+    db.add("a", e.embed_tokens(a))
+    db.add("b", e.embed_tokens(b))
+    # query shares tokens with doc a
+    hits = db.search(e.embed_tokens(a[:25]), top_k=2)
+    assert hits[0][0] == "a"
+    assert hits[0][1] > hits[1][1]
+
+
+def test_topk_and_delete_with_kv_store(tmp_path):
+    from repro.kvstore import FlashKVStore
+    e = HashingEmbedder()
+    db = VectorDB(e.dim)
+    store = FlashKVStore(tmp_path)
+    for i in range(10):
+        cid = f"c{i}"
+        db.add(cid, e.embed_tokens(np.asarray([i, i + 1, i + 2])))
+        store.put(cid, b"kv")
+    assert len(db.search(e.embed_tokens(np.asarray([3, 4, 5])), top_k=3)) == 3
+    assert db.delete("c3", kv_store=store)
+    assert not store.exists("c3")          # stale KV removed with embedding
+    assert len(db) == 9
+    assert all(cid != "c3" for cid, _ in
+               db.search(e.embed_tokens(np.asarray([3, 4, 5])), top_k=9))
+
+
+def test_duplicate_add_ignored():
+    e = HashingEmbedder()
+    db = VectorDB(e.dim)
+    v = e.embed_tokens(np.asarray([1, 2, 3]))
+    db.add("x", v)
+    db.add("x", v)
+    assert len(db) == 1

@@ -1,0 +1,144 @@
+"""Selective materialization + eviction (paper §III-E): admission by the
+per-object ten-day rule, capacity-bounded eviction, TCO-ordered victims."""
+
+import pytest
+
+from repro.core.economics import GpuSpec, SsdSpec
+from repro.core.tiering import (AlwaysAdmit, CostAwarePolicy, LfuPolicy,
+                                LruPolicy, TenDayAdmission, TieredStore)
+
+
+class MemStore:
+    def __init__(self):
+        self.d = {}
+
+    def put(self, cid, payload):
+        self.d[cid] = payload
+
+    def get(self, cid):
+        return self.d[cid]
+
+    def delete(self, cid):
+        self.d.pop(cid, None)
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def make(capacity=100, admission=None, eviction=None, clock=None):
+    clock = clock or Clock()
+    ts = TieredStore(MemStore(), capacity, admission=admission,
+                     eviction=eviction, now_fn=clock)
+    return ts, clock
+
+
+def test_always_admit_stores_and_hits():
+    ts, _ = make()
+    assert ts.offer("a", b"x" * 10)
+    assert ts.get("a") == b"x" * 10
+    assert ts.stats.hits == 1 and ts.stats.admissions == 1
+
+
+def test_miss_returns_none_and_counts():
+    ts, _ = make()
+    assert ts.get("nope") is None
+    assert ts.stats.misses == 1
+
+
+def test_capacity_forces_eviction_lru():
+    ts, clock = make(capacity=25, eviction=LruPolicy())
+    ts.offer("a", b"x" * 10)
+    clock.t = 1.0
+    ts.offer("b", b"x" * 10)
+    clock.t = 2.0
+    ts.get("a")                       # refresh a; b becomes LRU
+    clock.t = 3.0
+    ts.offer("c", b"x" * 10)          # must evict b
+    assert "a" in ts and "c" in ts and "b" not in ts
+    assert ts.stats.evictions == 1
+    assert ts.used_bytes == 20
+
+
+def test_lfu_prefers_dropping_cold():
+    ts, clock = make(capacity=25, eviction=LfuPolicy())
+    ts.offer("hot", b"x" * 10)
+    ts.offer("cold", b"x" * 10)
+    for i in range(5):
+        clock.t += 1
+        ts.get("hot")
+    clock.t += 1
+    ts.offer("new", b"x" * 10)
+    assert "hot" in ts and "cold" not in ts
+
+
+def test_cost_aware_evicts_lowest_value_per_byte():
+    clock = Clock()
+    ts, _ = make(capacity=30, eviction=CostAwarePolicy(now_fn=clock),
+                 clock=clock)
+    ts.offer("big_cold", b"x" * 20)   # 20 bytes, will get 1 hit
+    ts.offer("small_hot", b"x" * 5)   # 5 bytes, many hits
+    clock.t = 1.0
+    ts.get("big_cold")
+    for i in range(6):
+        clock.t += 1
+        ts.get("small_hot")
+    ts.offer("next", b"x" * 10)       # over budget -> evict big_cold
+    assert "small_hot" in ts and "big_cold" not in ts
+
+
+def test_ten_day_admission_requires_reaccess_within_interval():
+    # tiny GPU/SSD constants -> break-even interval = $1 / (1MB/s * $1e-6/MB)
+    gpu = GpuSpec("toy", 1.0, 1.0, prefill_tokens_per_s=1.0,
+                  decode_tokens_per_s=1.0)
+    ssd = SsdSpec("toy", 1e-3, 1.0, 1.0)   # $/GB -> $1e-6/MB
+    adm = TenDayAdmission(gpu, ssd, kv_bytes_per_token=1_000_000)
+    T = adm.break_even_s
+    assert not adm.on_access("a", 0.0)          # first access: cold start
+    assert adm.on_access("a", T * 0.5)          # re-access inside T: admit
+    assert not adm.on_access("b", 0.0)
+    assert not adm.on_access("b", T * 2.0)      # outside T: still cold
+
+
+def test_tiered_store_with_admission_gate():
+    gpu = GpuSpec("toy", 1.0, 1.0, 1.0, 1.0)
+    ssd = SsdSpec("toy", 1e-3, 1.0, 1.0)
+    clock = Clock()
+    ts, _ = make(capacity=1000,
+                 admission=TenDayAdmission(gpu, ssd, 1_000_000), clock=clock)
+    assert not ts.offer("a", b"kv")             # first offer rejected (cold)
+    assert ts.stats.rejections == 1
+    clock.t = 1.0
+    assert ts.offer("a", b"kv")                 # hot now -> admitted
+    assert ts.get("a") == b"kv"
+
+
+def test_zipf_workload_hit_rate_improves_with_cost_aware():
+    """Under a skewed workload with a tight budget, CostAware >= LRU."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    ids = [f"c{i}" for i in range(50)]
+    probs = 1.0 / np.arange(1, 51)
+    probs /= probs.sum()
+    accesses = rng.choice(50, size=2000, p=probs)
+
+    def run(policy_cls):
+        clock = Clock()
+        policy = (policy_cls(now_fn=clock) if policy_cls is CostAwarePolicy
+                  else policy_cls())
+        ts, _ = make(capacity=10 * 8, eviction=policy, clock=clock)
+        for step, i in enumerate(accesses):
+            clock.t = float(step + 1)
+            cid = ids[i]
+            if ts.get(cid) is None:
+                ts.offer(cid, b"x" * 8)         # recompute + offer
+        return ts.stats.hit_rate
+
+    lru = run(LruPolicy)
+    cost = run(CostAwarePolicy)
+    assert lru > 0.3                            # skew makes caching worthwhile
+    assert cost >= lru - 0.05                   # cost-aware not worse
