@@ -8,9 +8,18 @@ subset; default runs everything. The roofline table is produced separately by
 from __future__ import annotations
 
 import argparse
+import pathlib
 import sys
 import time
 import traceback
+
+# make `python benchmarks/run.py` work from anywhere: the suite modules
+# import as `benchmarks.bench_*` (needs the repo root importable) and pull in
+# `repro` (which lives under src/)
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
 
 SUITES = {
     "fig2_access_skew": "benchmarks.bench_access_skew",
@@ -31,13 +40,21 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="substring filter over suite names")
+                    help="substring filter over suite names (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print available suite names and exit")
     args = ap.parse_args()
+    if args.list:
+        print("\n".join(SUITES))
+        return
+    selected = {n: m for n, m in SUITES.items()
+                if not args.only or args.only in n}
+    if not selected:
+        sys.exit(f"error: no benchmark suite matches --only {args.only!r}; "
+                 f"available: {', '.join(SUITES)}")
     print("name,us_per_call,derived")
     failures = 0
-    for name, modpath in SUITES.items():
-        if args.only and args.only not in name:
-            continue
+    for name, modpath in selected.items():
         t0 = time.perf_counter()
         try:
             import importlib

@@ -1,0 +1,131 @@
+"""Version shims for the small set of new-JAX surface this repo uses.
+
+The codebase targets the modern distribution API (``jax.make_mesh`` with
+``axis_types``, ``jax.sharding.AxisType``, top-level ``jax.shard_map`` with
+``check_vma``). Older JAX releases (<= 0.4.x) ship the same functionality
+under earlier names:
+
+  * ``jax.sharding.AxisType``       -> absent (all mesh axes are "auto")
+  * ``jax.make_mesh(axis_types=..)`` -> no ``axis_types`` kwarg
+  * ``jax.shard_map(check_vma=..)``  -> ``jax.experimental.shard_map.shard_map``
+                                        with ``check_rep``
+
+Importing :mod:`repro.dist` installs forward-compatible aliases for whichever
+of these are missing, so the one source tree runs on both API generations.
+Each shim is a no-op when the installed JAX already provides the name, and
+installation is idempotent. No behaviour changes on new JAX.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        """Stand-in for jax.sharding.AxisType on releases that predate it.
+
+        Pre-AxisType JAX treats every mesh axis as what was later named
+        ``Auto`` (GSPMD-propagated sharding), which is the only mode this
+        repo uses — the values exist so call sites type-check, and
+        ``axis_types`` arguments are dropped by the make_mesh shim below.
+        """
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh() -> None:
+    if not hasattr(jax, "make_mesh"):
+        # releases that predate jax.make_mesh entirely: synthesize it from
+        # mesh_utils + Mesh
+        from jax.experimental import mesh_utils
+
+        def make_mesh(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None):
+            del axis_types
+            devs = mesh_utils.create_device_mesh(tuple(axis_shapes),
+                                                 devices=devices)
+            return jax.sharding.Mesh(devs, tuple(axis_names))
+
+        jax.make_mesh = make_mesh
+        return
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" in params:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kwargs):
+        del axis_types  # pre-AxisType JAX: every axis is implicitly Auto
+        return orig(axis_shapes, axis_names, **kwargs)
+
+    jax.make_mesh = make_mesh
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        sig = inspect.signature(jax.shard_map).parameters
+        if "check_vma" in sig or "check_rep" not in sig:
+            return
+        orig_new = jax.shard_map
+
+        @functools.wraps(orig_new)
+        def shard_map_kw(f, **kwargs):
+            if "check_vma" in kwargs:
+                kwargs["check_rep"] = kwargs.pop("check_vma")
+            return orig_new(f, **kwargs)
+
+        jax.shard_map = shard_map_kw
+        return
+
+    from jax.experimental.shard_map import shard_map as orig
+
+    @functools.wraps(orig)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kwargs):
+        # old spelling: check_rep; vma (varying-manual-axes) checking is the
+        # renamed successor of replication checking
+        return orig(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=check_vma, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _install_cost_analysis() -> None:
+    """New JAX: ``Compiled.cost_analysis()`` returns one dict. Old JAX
+    returned a one-element list of dicts. Normalize to the new shape."""
+    from jax._src import stages
+
+    orig = stages.Compiled.cost_analysis
+    if getattr(orig, "_repro_dist_shim", False):
+        return
+
+    @functools.wraps(orig)
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, list) and len(out) == 1 and isinstance(out[0], dict):
+            return out[0]
+        return out
+
+    cost_analysis._repro_dist_shim = True
+    stages.Compiled.cost_analysis = cost_analysis
+
+
+def install() -> None:
+    _install_axis_type()
+    _install_make_mesh()
+    _install_shard_map()
+    _install_cost_analysis()
+
+
+install()

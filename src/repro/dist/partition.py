@@ -1,0 +1,251 @@
+"""PartitionSpec trees for whole pytrees: params, batches, caches, optimizer.
+
+``param_specs`` walks a parameter pytree (real arrays or eval_shape
+ShapeDtypeStructs) and assigns every leaf a PartitionSpec from the leaf's
+*name* — the same nested-dict keys the model init functions use — via the
+table below, resolved through :mod:`repro.dist.sharding`'s divisibility-aware
+rules. Leading stack dimensions (vmapped layer stacks: leaves shaped
+(L, ...)) are detected by rank and stay replicated.
+
+The table is deliberately STRICT: an unrecognized parameter name raises
+instead of silently replicating. Silent replication is exactly the failure
+mode the partial-rule merge regression guards against (26 GiB of parameter
+replicas per chip — see tests/test_dist.py), so new parameters must be added
+here explicitly.
+
+Conventions (Megatron-style tensor parallelism; DESIGN.md §6):
+  * column-parallel into the hidden axis (wq / wi_* / in_proj / in_x: output
+    dim sharded over "model"), row-parallel back out (wo / out_proj /
+    x_proj: input dim sharded) — activations between them carry the sharded
+    hidden axis, the residual stream stays replicated over "model" unless
+    act_seq sequence parallelism is on.
+  * the d_model axis ("embed") is never sharded: it is the contraction axis
+    of every layer-boundary matmul.
+  * MoE expert stacks shard their leading expert axis ("expert"); the router
+    is replicated (it is tiny and every device routes its own tokens).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import Rules, _spec_merged, merge_rules
+
+# Logical names for the TRAILING dims of each named parameter leaf.
+# Extra leading dims (layer stacks) are padded with None.
+_PARAM_TRAILING: Dict[str, tuple] = {
+    # embedding / head / frontend
+    "embed": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    "projector": ("embed", "embed"),
+    "frontend_proj": ("embed", "embed"),
+    "enc_pos": (None, "embed"),
+    "dec_pos": (None, "embed"),
+    # norms (1-D gains / biases, incl. enc-dec LayerNorm {"w","b"} dicts)
+    "final_norm": ("embed",),
+    "ln1": ("embed",), "ln2": ("embed",), "ln3": ("embed",),
+    "w": ("embed",), "b": ("embed",),
+    "q_norm": (None,), "k_norm": (None,),
+    # attention
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv_heads"),
+    "wv": ("embed", "kv_heads"),
+    # mlp
+    "wi_gate": ("embed", "ffn"),
+    "wi_up": ("embed", "ffn"),
+    "wi": ("embed", "ffn"),
+    # "wo" is context-dependent (attention vs mlp) — see _trailing_names
+    # moe
+    "router": ("embed", None),
+    "w_gate": ("expert", "embed", "ffn"),
+    "w_up": ("expert", "embed", "ffn"),
+    "w_down": ("expert", "ffn", "embed"),
+    # mamba
+    "in_proj": ("embed", "inner"),
+    "conv_w": (None, "inner"),
+    "conv_b": ("inner",),
+    "x_proj": ("inner", None),
+    "dt_proj_w": (None, "inner"),
+    "dt_proj_b": ("inner",),
+    "A_log": ("inner", None),
+    "D": ("inner",),
+    "out_proj": ("inner", "embed"),
+    # rg-lru
+    "in_x": ("embed", "inner"),
+    "in_gate": ("embed", "inner"),
+    "w_r": (None, "inner"),
+    "w_i": (None, "inner"),
+    "lam": ("inner",),
+}
+
+_ATTN_PARENTS = frozenset({"attn", "self_attn", "cross_attn"})
+
+
+def _path_names(path) -> list:
+    """String keys along a key path (dict keys / dataclass fields; list
+    indices are skipped)."""
+    names = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            names.append(str(entry.name))
+    return names
+
+
+def _trailing_names(path) -> tuple:
+    names = _path_names(path)
+    if not names:
+        raise ValueError(f"param leaf without a name at path {path!r}")
+    leaf = names[-1]
+    if leaf == "wo":
+        # attention out-projection (qd, D) vs mlp down-projection (d_ff, D):
+        # both row-parallel, under different logical names
+        parent = names[-2] if len(names) > 1 else ""
+        return ("heads", "embed") if parent in _ATTN_PARENTS \
+            else ("ffn", "embed")
+    try:
+        return _PARAM_TRAILING[leaf]
+    except KeyError:
+        raise ValueError(
+            f"param_specs: no sharding entry for parameter "
+            f"{'.'.join(names)!r} — add it to repro.dist.partition."
+            f"_PARAM_TRAILING (unnamed params silently replicate, which is "
+            f"the regression this strictness prevents)") from None
+
+
+def _leaf_spec(mesh, path, leaf, merged: Rules) -> P:
+    trailing = _trailing_names(path)
+    ndim = len(leaf.shape)
+    if ndim < len(trailing):
+        raise ValueError(
+            f"param {'.'.join(_path_names(path))!r}: rank {ndim} below the "
+            f"{len(trailing)} trailing dims its table entry names")
+    names = (None,) * (ndim - len(trailing)) + tuple(trailing)
+    return _spec_merged(mesh, leaf.shape, names, merged)
+
+
+def param_specs(mesh, params, rules: Optional[Rules] = None):
+    """PartitionSpec tree matching ``params`` (arrays or SDS)."""
+    merged = merge_rules(rules)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [_leaf_spec(mesh, path, leaf, merged) for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def batch_specs(mesh, batch, rules: Optional[Rules] = None):
+    """Specs for step inputs (tokens / labels / loss_mask (B, S), frontend
+    embeddings (B, T, D)): batch-axis data parallelism, sequence axis under
+    the ``act_seq`` rule (off by default, "model" under train/prefill
+    rules), feature dims replicated."""
+    merged = merge_rules(rules)
+
+    def one(leaf):
+        ndim = len(leaf.shape)
+        names = ("batch", "act_seq") + (None,) * max(0, ndim - 2)
+        return _spec_merged(mesh, leaf.shape, names[:ndim], merged)
+
+    return jax.tree.map(one, batch)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+# Trailing logical names per cache field; chosen by (name, rank) so the same
+# field name across cache flavours (SSMCache.h is (L,B,din,st), HybridCache.h
+# is (L,B,width)) maps correctly.
+_CACHE_NAMES: Dict[tuple, tuple] = {
+    # KV buffers (L, B, S_buf, KV, hd): sequence-sharded (cache_seq)
+    ("k", 5): (None, "batch", "cache_seq", "kv_heads", None),
+    ("v", 5): (None, "batch", "cache_seq", "kv_heads", None),
+    ("cross_k", 5): (None, "batch", "cache_seq", "kv_heads", None),
+    ("cross_v", 5): (None, "batch", "cache_seq", "kv_heads", None),
+    # recurrent state
+    ("conv", 4): (None, "batch", None, "inner"),
+    ("h", 4): (None, "batch", "inner", None),
+    ("h", 3): (None, "batch", "inner"),
+    # bookkeeping (replicated)
+    ("slot_pos", 1): (None,),
+    ("length", 0): (),
+}
+
+
+def cache_specs(mesh, cache, rules: Optional[Rules] = None):
+    """Specs for a decode cache pytree (AttnCache / SSMCache / HybridCache /
+    EncDecCache, real or eval_shape)."""
+    merged = merge_rules(rules)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    specs = []
+    for path, leaf in flat:
+        names = _path_names(path)
+        field = names[-1] if names else ""
+        ndim = len(leaf.shape)
+        try:
+            logical = _CACHE_NAMES[(field, ndim)]
+        except KeyError:
+            raise ValueError(
+                f"cache_specs: no entry for cache field "
+                f"{'.'.join(names)!r} of rank {ndim}") from None
+        specs.append(_spec_merged(mesh, leaf.shape, logical, merged))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 optimizer-state sharding
+# ---------------------------------------------------------------------------
+
+def zero1_specs(mesh, params, p_specs, rules: Optional[Rules] = None):
+    """Optimizer-moment specs: the param spec plus data-axis sharding of the
+    first replicated, divisible dimension (ZeRO-1).
+
+    AdamW's m/v are f32 shadows of the (often bf16) params — at production
+    scale they dominate optimizer memory. Each moment leaf inherits its
+    param's tensor-parallel spec and is additionally sharded over whichever
+    of (pod, data) the param spec leaves unused, on the first dimension
+    they divide; params with no eligible dimension keep the param spec
+    (replicated moments, e.g. tiny norm gains)."""
+    del rules  # moments follow the already-resolved param specs
+
+    def one(leaf, spec):
+        entries = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        used = set()
+        for e in entries:
+            if isinstance(e, str):
+                used.add(e)
+            elif e:
+                used.update(e)
+        avail = tuple(a for a in ("pod", "data")
+                      if a in mesh.shape and a not in used)
+        for i, e in enumerate(entries):
+            if e is not None:
+                continue
+            for j in range(len(avail), 0, -1):
+                extent = math.prod(mesh.shape[a] for a in avail[:j])
+                if extent > 1 and leaf.shape[i] % extent == 0:
+                    entries[i] = avail[0] if j == 1 else avail[:j]
+                    return P(*entries)
+        return P(*entries)
+
+    return jax.tree.map(one, params, p_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# specs -> shardings
+# ---------------------------------------------------------------------------
+
+def to_shardings(mesh, specs):
+    """Map every PartitionSpec leaf to a NamedSharding on ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,204 @@
+"""Logical-axis sharding rules + the runtime mesh context (DESIGN.md §6).
+
+Every tensor dimension in the model code is named with a *logical axis*
+("batch", "heads", "ffn", ...); a **rule set** maps each logical axis to the
+tuple of mesh axes it may shard over. The model layers never mention mesh
+axes directly — they call ``shard(x, *logical_names)`` and the active
+(mesh, rules) pair decides the physical layout. This is what lets one model
+definition serve a single CPU device, the (data, model) trainer mesh, and
+the 512-chip (pod, data, model) dry-run without edits.
+
+Three pieces:
+
+* ``DEFAULT_RULES`` — the baseline logical->mesh mapping covering every
+  parameter / activation / cache axis used by all five families.
+* ``resolve`` / ``spec_for`` — divisibility-aware rule application. A rule
+  naming several mesh axes falls back to the longest prefix whose combined
+  extent divides the dimension; a dimension no prefix divides stays
+  replicated. Partial rule dicts MERGE ONTO the defaults (override
+  semantics) — treating an override as the complete rule set silently
+  replicates every axis it doesn't mention (EXPERIMENTS.md §Perf iter 4).
+* ``mesh_context`` / ``current_mesh`` / ``shard`` — the runtime side: a
+  context manager installs (mesh, merged rules); ``shard`` constrains a
+  value to the spec its logical names resolve to, and is a no-op when no
+  mesh is active (single-device paths, init, smoke tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import _compat  # noqa: F401  (installs jax version shims)
+
+Rule = Tuple[str, ...]
+Rules = Dict[str, Rule]
+Resolved = Union[None, str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# default logical-axis rules (documented in DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+DEFAULT_RULES: Rules = {
+    # -- activations --------------------------------------------------------
+    # global batch: data parallelism over the pod and data axes
+    "batch": ("pod", "data"),
+    # residual-stream sequence axis. OFF by default — shape_rules enables
+    # Megatron sequence parallelism ({"act_seq": ("model",)}) for
+    # train/prefill shapes; decode and single-device paths leave it ()
+    "act_seq": (),
+    # attention-head axis of (B, S, H, hd) activations: tensor parallelism
+    "heads": ("model",),
+    # KV-head axis (GQA): same model axis, usually left to the sequence rule
+    "kv_heads": ("model",),
+    # FFN hidden axis (Megatron column/row-parallel MLP)
+    "ffn": ("model",),
+    # vocab axis of logits / embedding tables (the matmul-natural layout)
+    "vocab": ("model",),
+    # mamba d_inner / RG-LRU width: the recurrent channel axis
+    "inner": ("model",),
+    # d_model (residual) axis: never sharded — it is the contraction axis of
+    # every layer boundary matmul
+    "embed": (),
+    # -- caches / artifacts -------------------------------------------------
+    # sequence axis of KV caches and materialized artifacts. Sequence-sharded
+    # by default so the collected prefill artifact and the decode cache never
+    # replicate over the model axis (EXPERIMENTS.md §Perf); long_500k's
+    # batch-1 override widens this to ("pod", "data", "model")
+    "cache_seq": ("model",),
+    # -- MoE ----------------------------------------------------------------
+    # expert axis of routed expert weights (expert parallelism)
+    "expert": ("model",),
+    # per-expert capacity buffers inside the dispatch
+    "expert_cap": ("pod", "data"),
+}
+
+
+def merge_rules(rules: Optional[Rules] = None) -> Rules:
+    """Overrides MERGE ONTO the defaults; an explicit ``{"name": ()}`` entry
+    is how a caller turns a default rule off."""
+    if not rules:
+        return dict(DEFAULT_RULES)
+    return {**DEFAULT_RULES, **rules}
+
+
+# ---------------------------------------------------------------------------
+# divisibility-aware resolution
+# ---------------------------------------------------------------------------
+
+def _resolve_merged(mesh, dim: int, name: Optional[str], merged: Rules,
+                    used: frozenset = frozenset()) -> Resolved:
+    """Resolve one dimension against already-merged rules.
+
+    Mesh axes absent from ``mesh`` (e.g. "pod" on a 2-axis debug mesh) and
+    axes already consumed by an earlier dimension of the same spec are
+    skipped; the longest remaining prefix whose product divides ``dim``
+    wins; no divisible prefix -> None (replicated).
+    """
+    if name is None:
+        return None
+    try:
+        axes = merged[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown logical axis {name!r}; known: {sorted(merged)}"
+        ) from None
+    axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+    for i in range(len(axes), 0, -1):
+        extent = math.prod(mesh.shape[a] for a in axes[:i])
+        if dim % extent == 0:
+            return axes[0] if i == 1 else axes[:i]
+    return None
+
+
+def resolve(mesh, dim: int, name: Optional[str],
+            rules: Optional[Rules] = None) -> Resolved:
+    """Mesh axis (str), axis tuple, or None for one dimension of size ``dim``.
+
+    ``rules`` is a partial override dict merged onto ``DEFAULT_RULES``.
+    """
+    return _resolve_merged(mesh, dim, name, merge_rules(rules))
+
+
+def _spec_merged(mesh, dims, names, merged: Rules) -> P:
+    """spec_for against already-merged rules, tracking used mesh axes so a
+    PartitionSpec never names one mesh axis twice."""
+    used: set = set()
+    entries = []
+    for dim, name in zip(dims, names):
+        r = _resolve_merged(mesh, dim, name, merged, frozenset(used))
+        if isinstance(r, str):
+            used.add(r)
+        elif r:
+            used.update(r)
+        entries.append(r)
+    return P(*entries)
+
+
+def spec_for(mesh, dims, names, rules: Optional[Rules] = None) -> P:
+    """PartitionSpec for a shape ``dims`` whose dimensions carry logical
+    ``names`` (None entries stay replicated)."""
+    if len(dims) != len(names):
+        raise ValueError(f"spec_for: {len(dims)} dims vs {len(names)} names")
+    return _spec_merged(mesh, dims, names, merge_rules(rules))
+
+
+# ---------------------------------------------------------------------------
+# runtime context: the active (mesh, rules) pair
+# ---------------------------------------------------------------------------
+
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dist_active", default=None)
+
+
+def current_mesh():
+    """The mesh installed by the innermost ``mesh_context``, or None."""
+    active = _ACTIVE.get()
+    return active[0] if active is not None else None
+
+
+def current_rules() -> Rules:
+    """The merged rules of the innermost ``mesh_context`` (defaults if none)."""
+    active = _ACTIVE.get()
+    return active[1] if active is not None else dict(DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh, rules: Optional[Rules] = None):
+    """Install (mesh, rules merged onto defaults) for ``shard`` /
+    ``current_mesh`` within the block. Reentrant; the inner context wins."""
+    token = _ACTIVE.set((mesh, merge_rules(rules)))
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.reset(token)
+
+
+def shard(x, *names):
+    """Constrain ``x`` to the layout its logical ``names`` resolve to.
+
+    One name per dimension; None names — and names whose rule is (), absent
+    from the mesh, or indivisible — leave that dimension replicated. The
+    constraint is *complete*: dimensions that resolve to None are pinned
+    replicated, which is what callers rely on to force a gather (e.g. the
+    flash-attention scan constrains its K operand replicated so GSPMD never
+    gathers per block). Outside any ``mesh_context`` this is the identity.
+    """
+    if len(names) != x.ndim:
+        # checked before the no-mesh early-out so single-device test runs
+        # catch arity bugs too, not just the production mesh paths
+        raise ValueError(
+            f"shard: got {len(names)} names for rank-{x.ndim} value")
+    active = _ACTIVE.get()
+    if active is None:
+        return x
+    mesh, merged = active
+    spec = _spec_merged(mesh, x.shape, names, merged)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

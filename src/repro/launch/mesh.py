@@ -5,6 +5,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist import _compat  # noqa: F401  (AxisType/make_mesh shims)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (v5e pod).

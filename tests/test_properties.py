@@ -1,7 +1,11 @@
 """Property-based tests (hypothesis) over the system's invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.chunking import chunk_document
 from repro.core.economics import (GpuSpec, SsdSpec, break_even_interval_s)

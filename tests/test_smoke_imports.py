@@ -1,0 +1,58 @@
+"""Whole-tree import smoke test + quickstart end-to-end.
+
+The seed's failure mode was an entire test suite dead at collection because
+one module (`repro.dist`) didn't exist. This test imports EVERY module under
+``src/repro`` so the next missing-module (or syntax/import-cycle) regression
+is caught at one glance, and runs ``examples/quickstart.py`` — the full
+materialize -> store -> compose -> decode pipeline under a reduced config —
+as a subprocess.
+"""
+
+import importlib
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def _all_modules():
+    for py in sorted((SRC / "repro").rglob("*.py")):
+        rel = py.relative_to(SRC).with_suffix("")
+        parts = list(rel.parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        yield ".".join(parts)
+
+
+def test_every_repro_module_imports():
+    # repro.launch.dryrun mutates XLA_FLAGS at import (it must run before
+    # jax init in its own process); keep this test side-effect free for the
+    # other subprocess-spawning tests.
+    saved = os.environ.get("XLA_FLAGS")
+    mods = list(_all_modules())
+    assert len(mods) > 50, "src/repro tree looks truncated"
+    try:
+        for mod in mods:
+            importlib.import_module(mod)
+    finally:
+        if saved is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = saved
+
+
+def test_quickstart_runs_reduced():
+    existing = os.environ.get("PYTHONPATH")
+    env = {**os.environ,
+           "PYTHONPATH": "src" + (os.pathsep + existing if existing else "")}
+    env.pop("XLA_FLAGS", None)  # single CPU device, whatever ran before
+    proc = subprocess.run(
+        [sys.executable, "examples/quickstart.py"],
+        capture_output=True, text=True, timeout=900, cwd=REPO, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = proc.stdout
+    for needle in ("[matkv", "[vanilla", "[cacheblend", "ten-day rule"):
+        assert needle in out, f"missing {needle!r} in quickstart output:\n{out}"
