@@ -1,0 +1,107 @@
+"""Continuous vs fixed batching under Poisson arrivals (beyond-paper;
+KV-offloading bottleneck analysis in PAPERS.md motivates per-request
+admission).
+
+An open-loop arrival process with mixed per-request decode lengths is served
+two ways:
+
+  fixed       ``BatchScheduler(overlap=True)`` behind an arrival-aware batch
+              former: a batch launches once ``batch_size`` requests have
+              arrived (or the stream ends), and every row decodes the batch
+              max ``max_new_tokens`` (the fixed-geometry constraint).
+  continuous  ``ContinuousScheduler``: per-request admission, EOS /
+              per-request-length eviction, slot backfill, per-request KV
+              prefetch.
+
+Reported per scheduler: useful tokens/sec and p50/p95 request latency
+(arrival -> answer). Useful tokens = tokens actually kept per request, so the
+fixed scheduler's dead-air decode steps hurt its tokens/sec, exactly the
+effect continuous batching removes.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import QUESTIONS, make_engine, row
+from repro.serving import BatchScheduler, ContinuousScheduler
+
+MAX_NEW_CHOICES = (2, 4, 8, 16)
+
+
+def _workload(n_requests: int, seed: int, mean_gap_s: float):
+    rng = np.random.default_rng(seed)
+    qs = [QUESTIONS[int(rng.integers(len(QUESTIONS)))]
+          for _ in range(n_requests)]
+    max_new = [int(rng.choice(MAX_NEW_CHOICES)) for _ in range(n_requests)]
+    arrivals = np.cumsum(rng.exponential(mean_gap_s, n_requests)).tolist()
+    return qs, max_new, arrivals
+
+
+def _serve_fixed(engine, qs, max_new, arrivals, batch_size: int):
+    """Arrival-aware fixed batching: wait for a full batch (requests are
+    invisible before their arrival time), then run the overlapped
+    BatchScheduler on it at the batch-max decode length."""
+    sched = BatchScheduler(engine, batch_size=batch_size, overlap=True)
+    t0 = time.perf_counter()
+    latencies, n_useful = [], 0
+    for i in range(0, len(qs), batch_size):
+        j = min(i + batch_size, len(qs))
+        # the batch can't form before its last member arrives
+        gate = arrivals[j - 1]
+        wait = gate - (time.perf_counter() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        sched.run(qs[i:j], max_new_tokens=max(max_new[i:j]))
+        done = time.perf_counter() - t0
+        for r in range(i, j):
+            latencies.append(done - arrivals[r])
+            # credit the full per-request budget (generous to fixed: EOS
+            # tails count as useful); the dead-air penalty it pays is the
+            # extra decode steps up to the batch max
+            n_useful += max_new[r]
+    wall = time.perf_counter() - t0
+    return wall, n_useful, latencies
+
+
+def run(n_requests: int = 16, batch_size: int = 4, seed: int = 0,
+        mean_gap_s: float = 0.05):
+    out = []
+    qs, max_new, arrivals = _workload(n_requests, seed, mean_gap_s)
+    with tempfile.TemporaryDirectory() as d:
+        eng = make_engine("matkv", d + "/m")
+
+        cont = ContinuousScheduler(eng, max_slots=batch_size)
+        # warm every shape the timed pass will hit (each distinct prompt
+        # length retraces the batch=1 sub-prefill; buf is workload-bucketed)
+        cont.run(qs, max_new_tokens=max_new)
+        _, m = cont.run(qs, max_new_tokens=max_new, arrivals_s=arrivals)
+        cont.shutdown()
+        out.append(row("continuous/tokens_per_s", m.tokens_per_s,
+                       f"n={n_requests};slots={batch_size}"))
+        out.append(row("continuous/p50_latency_us", m.p50_latency_s * 1e6))
+        out.append(row("continuous/p95_latency_us", m.p95_latency_s * 1e6))
+
+        _serve_fixed(eng, qs, max_new, [0.0] * n_requests,
+                     batch_size)                               # warm jit
+        wall, n_useful, lats = _serve_fixed(eng, qs, max_new, arrivals,
+                                            batch_size)
+        fixed_tps = n_useful / wall if wall else 0.0
+        out.append(row("fixed_overlap/tokens_per_s", fixed_tps,
+                       f"n={n_requests};bs={batch_size}"))
+        out.append(row("fixed_overlap/p50_latency_us",
+                       float(np.quantile(lats, 0.5)) * 1e6))
+        out.append(row("fixed_overlap/p95_latency_us",
+                       float(np.quantile(lats, 0.95)) * 1e6))
+        out.append(row(
+            "continuous_vs_fixed/speedup",
+            m.tokens_per_s / fixed_tps if fixed_tps else 0.0,
+            f"p95_ratio={np.quantile(lats, 0.95) / max(m.p95_latency_s, 1e-9):.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -26,6 +26,7 @@ SUITES = {
     "fig5_single_request": "benchmarks.bench_single_request",
     "table3_storage_tiers": "benchmarks.bench_storage_tiers",
     "fig6_batching": "benchmarks.bench_batching",
+    "continuous_batching": "benchmarks.bench_continuous",
     "fig7_overlap": "benchmarks.bench_overlap",
     "table45_power": "benchmarks.bench_power",
     "fig8_lengths": "benchmarks.bench_lengths",

@@ -22,8 +22,8 @@ from typing import List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.cache import (AttnCache, EncDecCache, HybridCache, SSMCache,
-                                init_attn_cache)
+from repro.models.cache import (AttnCache, EncDecCache, HybridCache,
+                                RowAttnCache, SSMCache, init_attn_cache)
 from repro.models.rope import rerotate_keys
 
 
@@ -64,6 +64,70 @@ def compose_attn_cache(cfg, artifacts: Sequence[Tuple[jnp.ndarray, jnp.ndarray]]
         pos = jnp.concatenate([pos, jnp.full((pad,), -1, jnp.int32)])
     return AttnCache(k=k_all, v=v_all, slot_pos=pos,
                      length=jnp.asarray(total, jnp.int32))
+
+
+def compose_attn_cache_rows(cfg, row_artifacts, buf_size: int,
+                            rerotate: bool = False, dtype=None
+                            ) -> RowAttnCache:
+    """Variable-geometry batch composition for continuous batching.
+
+    ``row_artifacts``: one list of (k, v) chunk artifacts per batch row — rows
+    may carry different chunk counts (``top_k``), different chunk lengths
+    (short final chunks), or no chunks at all (query-only row after empty
+    retrieval). Every row is composed exactly like ``compose_attn_cache``
+    (retrieval-order concat, optional re-rotation), right-padded to
+    ``buf_size`` with -1 slot positions, and stacked into one batched
+    ``RowAttnCache`` with per-row lengths.
+    """
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    n_layers = None
+    for arts in row_artifacts:
+        if arts:
+            n_layers = arts[0][0].shape[0]
+            break
+    if n_layers is None:
+        n_layers = cfg.num_layers
+    kv_tail = (cfg.num_kv_heads, cfg.head_dim)
+
+    row_ks, row_vs, row_pos, row_len = [], [], [], []
+    for arts in row_artifacts:
+        ks, vs, offset = [], [], 0
+        for (k, v) in arts:
+            if rerotate and cfg.use_rope and offset:
+                k = jax.vmap(lambda kl, off=offset: rerotate_keys(
+                    kl, off, cfg.rope_theta))(k)
+            ks.append(k.astype(dtype))
+            vs.append(v.astype(dtype))
+            offset += k.shape[2]
+        if ks:
+            k_all = jnp.concatenate(ks, axis=2)
+            v_all = jnp.concatenate(vs, axis=2)
+        else:
+            k_all = jnp.zeros((n_layers, 1, 0) + kv_tail, dtype)
+            v_all = jnp.zeros((n_layers, 1, 0) + kv_tail, dtype)
+        total = k_all.shape[2]
+        if total > buf_size:
+            k_all = k_all[:, :, -buf_size:]
+            v_all = v_all[:, :, -buf_size:]
+            pos = jnp.arange(total, dtype=jnp.int32)[-buf_size:]
+        else:
+            pos = jnp.arange(total, dtype=jnp.int32)
+        pad = buf_size - k_all.shape[2]
+        if pad:
+            zeros = jnp.zeros(k_all.shape[:2] + (pad,) + k_all.shape[3:],
+                              dtype)
+            k_all = jnp.concatenate([k_all, zeros], axis=2)
+            v_all = jnp.concatenate([v_all, zeros], axis=2)
+            pos = jnp.concatenate([pos, jnp.full((pad,), -1, jnp.int32)])
+        row_ks.append(k_all)
+        row_vs.append(v_all)
+        row_pos.append(pos)
+        row_len.append(total)
+    return RowAttnCache(
+        k=jnp.concatenate(row_ks, axis=1),
+        v=jnp.concatenate(row_vs, axis=1),
+        slot_pos=jnp.stack(row_pos),
+        length=jnp.asarray(row_len, jnp.int32))
 
 
 def compose_ssm_cache(cfg, artifact, n_tokens: int) -> SSMCache:

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import threading
-from typing import Callable, Iterable, Iterator, List, Optional, Sequence
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence
 
 
 class AsyncKvLoader:
@@ -24,12 +24,40 @@ class AsyncKvLoader:
         return self.pool.submit(self.reader.get, chunk_id)
 
     def load_many(self, chunk_ids: Sequence[str]) -> "cf.Future[List[bytes]]":
+        """Fan out per-chunk loads; the returned future completes when all do.
+
+        The gather is driven by done-callbacks on the per-chunk futures — it
+        never occupies a pool worker. (Submitting a blocking gather closure to
+        the *same* pool as the loads deadlocks once gathers hold every worker
+        while the loads they wait on sit in the queue behind them.)
+        """
         futures = [self.load(c) for c in chunk_ids]
+        out: "cf.Future[List[bytes]]" = cf.Future()
+        out.set_running_or_notify_cancel()
+        if not futures:
+            out.set_result([])
+            return out
+        pending = len(futures)
+        lock = threading.Lock()
 
-        def gather():
-            return [f.result() for f in futures]
+        def on_done(_f: cf.Future) -> None:
+            nonlocal pending
+            with lock:
+                pending -= 1
+                if pending:
+                    return
+            results = []
+            for f in futures:
+                exc = f.exception()
+                if exc is not None:
+                    out.set_exception(exc)
+                    return
+                results.append(f.result())
+            out.set_result(results)
 
-        return self.pool.submit(gather)
+        for f in futures:
+            f.add_done_callback(on_done)
+        return out
 
     def shutdown(self):
         self.pool.shutdown(wait=True)
@@ -37,7 +65,12 @@ class AsyncKvLoader:
 
 class PrefetchPipeline:
     """Iterate work items; each item's payload loads while the previous item is
-    being consumed (decoded). ``load_fn`` runs in a worker thread."""
+    being consumed (decoded). ``load_fn`` runs in a worker thread.
+
+    Consumed futures are dropped as soon as their payload is handed out, so
+    live payload bytes stay bounded by the pipeline depth instead of growing
+    with the run length; early exit cancels whatever is still queued.
+    """
 
     def __init__(self, items: Iterable, load_fn: Callable, depth: int = 1,
                  n_workers: int = 2):
@@ -48,22 +81,26 @@ class PrefetchPipeline:
                                            thread_name_prefix="prefetch")
 
     def __iter__(self) -> Iterator:
-        inflight: List[cf.Future] = []
+        inflight: Dict[int, cf.Future] = {}
         idx = 0
         try:
             while idx < len(self._items) and len(inflight) <= self._depth:
-                inflight.append(self._pool.submit(self._load_fn, self._items[idx]))
+                inflight[idx] = self._pool.submit(self._load_fn,
+                                                  self._items[idx])
                 idx += 1
             pos = 0
             while pos < len(self._items):
                 item = self._items[pos]
-                payload = inflight[pos].result()
+                payload = inflight.pop(pos).result()
                 # top up the pipeline before yielding (overlap with consumption)
                 while idx < len(self._items) and idx - pos <= self._depth:
-                    inflight.append(self._pool.submit(self._load_fn,
-                                                      self._items[idx]))
+                    inflight[idx] = self._pool.submit(self._load_fn,
+                                                      self._items[idx])
                     idx += 1
                 yield item, payload
+                del payload          # release before blocking on the next load
                 pos += 1
         finally:
-            self._pool.shutdown(wait=False)
+            for f in inflight.values():
+                f.cancel()
+            self._pool.shutdown(wait=False, cancel_futures=True)

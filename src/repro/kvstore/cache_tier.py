@@ -28,10 +28,14 @@ class LruBytesCache:
 
     def put(self, key: str, value: bytes) -> None:
         with self._lock:
+            if len(value) > self.capacity:
+                # reject before touching the map: evicting the key's existing
+                # entry first and then dropping the insert silently deletes
+                # cached data (values are immutable per chunk_id, so keeping
+                # the resident entry is always safe)
+                return
             if key in self._data:
                 self._bytes -= len(self._data.pop(key))
-            if len(value) > self.capacity:
-                return
             self._data[key] = value
             self._bytes += len(value)
             while self._bytes > self.capacity and self._data:

@@ -93,6 +93,21 @@ def position_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
     return m
 
 
+def position_mask_rows(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                       window: Optional[int], causal: bool) -> jnp.ndarray:
+    """Per-row masks: q_pos (B,Sq), k_pos (B,Sk) -> (B,Sq,Sk). Same semantics
+    as ``position_mask`` but every batch row carries its own position maps
+    (row-slotted caches: rows are at different decode offsets)."""
+    qp = q_pos[:, :, None].astype(jnp.int32)
+    kp = k_pos[:, None, :].astype(jnp.int32)
+    m = kp >= 0
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    return m
+
+
 # ---------------------------------------------------------------------------
 # blockwise flash attention with custom VJP
 # ---------------------------------------------------------------------------
@@ -358,6 +373,62 @@ def attn_into_cache(cfg, p, x, rope_pos, order_pos, pk, pv, slot_pos, start,
     out = flash_attention(q, pk, pv, order_pos.astype(jnp.int32),
                           slot_pos.astype(jnp.int32),
                           window if window else cfg.sliding_window, True)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
+    return out @ p["wo"], pk, pv
+
+
+def attention_rows(q, k, v, q_pos, k_pos, window: Optional[int],
+                   causal: bool) -> jnp.ndarray:
+    """Row-masked attention: q (B,Sq,H,hd), k/v (B,Sk,KV,hd), q_pos (B,Sq),
+    k_pos (B,Sk). One full-K pass with a (B,Sq,Sk) mask — serving-side only
+    (decode Sq is tiny and row prefills run at batch=1), so no blockwise scan
+    or custom VJP. Numerics match ``flash_attention``'s small-Sq path exactly:
+    masked slots contribute an exact 0.0 after the exp, so rows are invariant
+    to each other and to trailing empty slots.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = hd ** -0.5
+    qr = q.reshape(b, sq, kvh, g, hd)
+    s = _scores(qr, k, scale)                           # (B,KV,G,Sq,Sk)
+    mask = position_mask_rows(q_pos, k_pos, window, causal)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e29)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bcgqs,bscd->bqcgd", p / jnp.maximum(l, 1e-30), v,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype).reshape(b, sq, h, hd)
+
+
+def attn_into_cache_rows(cfg, p, x, rope_pos, order_pos, pk, pv, slot_pos,
+                         start, window: Optional[int] = None):
+    """Per-row write-then-attend decode over a row-slotted cache.
+
+    Like ``attn_into_cache`` but every row owns its slot map: ``rope_pos`` /
+    ``order_pos`` are (B,Sq), ``slot_pos`` (B,S_buf) must already include the
+    new tokens, and ``start`` (B,) is each row's ``length % buf``. Rows at
+    different decode offsets (continuous batching) write into different slots
+    of the same batched buffers.
+
+    Returns (out (B,Sq,D), pk, pv) with the updated buffers.
+    """
+    q = project_q(cfg, p, x)
+    k_new, v_new = project_kv(cfg, p, x)
+    if cfg.use_rope:
+        q, k_new = rope_q_k(q, k_new, rope_pos, cfg.rope_theta)
+
+    def write(buf, new, st):
+        zero = jnp.zeros((), jnp.int32)
+        return jax.lax.dynamic_update_slice(
+            buf, new.astype(buf.dtype), (st, zero, zero))
+
+    pk = jax.vmap(write)(pk, k_new, start)
+    pv = jax.vmap(write)(pv, v_new, start)
+    out = attention_rows(q, pk, pv, order_pos.astype(jnp.int32),
+                         slot_pos.astype(jnp.int32),
+                         window if window else cfg.sliding_window, True)
     out = out.reshape(x.shape[0], x.shape[1], cfg.q_dim)
     return out @ p["wo"], pk, pv
 

@@ -40,6 +40,34 @@ _register(AttnCache, ["k", "v", "slot_pos", "length"])
 
 
 @dataclass
+class RowAttnCache:
+    """Row-slotted attention cache: each batch row owns its slot map.
+
+    Unlike ``AttnCache`` (one ``slot_pos``/``length`` shared by every row —
+    fixed-geometry batches only), rows here carry independent composed-prefix
+    lengths and decode offsets, so a continuous-batching scheduler can admit
+    and evict rows out of phase: a freshly backfilled row at position 3 decodes
+    next to a row 40 tokens into its answer, and rows with different ``top_k``
+    or a short final chunk just leave their tail slots at -1.
+    """
+    k: jnp.ndarray          # (L, B, S_buf, KV, hd)
+    v: jnp.ndarray          # (L, B, S_buf, KV, hd)
+    slot_pos: jnp.ndarray   # (B, S_buf) int32, -1 = empty
+    length: jnp.ndarray     # (B,) int32: per-row tokens seen
+
+    @property
+    def buf_size(self) -> int:
+        return self.k.shape[2]
+
+    @property
+    def batch(self) -> int:
+        return self.k.shape[1]
+
+
+_register(RowAttnCache, ["k", "v", "slot_pos", "length"])
+
+
+@dataclass
 class SSMCache:
     conv: jnp.ndarray       # (L, B, conv_w-1, d_inner)
     h: jnp.ndarray          # (L, B, d_inner, ssm_state) f32
@@ -108,6 +136,20 @@ def init_attn_cache(cfg, batch: int, seq_len: int, n_layers: Optional[int] = Non
         length=jnp.zeros((), jnp.int32))
 
 
+def init_row_attn_cache(cfg, batch: int, buf_size: int,
+                        n_layers: Optional[int] = None,
+                        dtype=None) -> RowAttnCache:
+    """Empty row-slotted cache. ``buf_size`` is taken literally (the scheduler
+    sizes it for the worst-case row, not per sequence)."""
+    n_layers = n_layers or cfg.num_layers
+    dtype = dtype or jnp.dtype(cfg.activation_dtype)
+    shape = (n_layers, batch, buf_size, cfg.num_kv_heads, cfg.head_dim)
+    return RowAttnCache(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        slot_pos=jnp.full((batch, buf_size), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
 def init_ssm_cache(cfg, batch: int, dtype=None) -> SSMCache:
     dtype = dtype or jnp.dtype(cfg.activation_dtype)
     return SSMCache(
@@ -168,3 +210,20 @@ def write_kv(k_buf, v_buf, slot_pos, length, k_new, v_new, positions=None):
     slot_pos = jax.lax.dynamic_update_slice(
         slot_pos, positions.astype(jnp.int32), (start,))
     return k_buf, v_buf, slot_pos, length + sq
+
+
+def insert_cache_row(cache: RowAttnCache, row_idx: int,
+                     row: RowAttnCache) -> RowAttnCache:
+    """Overwrite batch row ``row_idx`` of a row-slotted cache with the single
+    row of ``row`` (batch=1) — the continuous scheduler's admit/backfill step.
+    Buffer sizes must match; the whole row (including stale slots from the
+    evicted occupant) is replaced.
+    """
+    if row.buf_size != cache.buf_size:
+        raise ValueError(f"insert_cache_row: buf_size mismatch "
+                         f"{row.buf_size} != {cache.buf_size}")
+    return RowAttnCache(
+        k=cache.k.at[:, row_idx].set(row.k[:, 0]),
+        v=cache.v.at[:, row_idx].set(row.v[:, 0]),
+        slot_pos=cache.slot_pos.at[row_idx].set(row.slot_pos[0]),
+        length=cache.length.at[row_idx].set(row.length[0]))

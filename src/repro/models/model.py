@@ -142,6 +142,18 @@ class Model:
             return encdec.decode_step(self.cfg, params, cache, tokens, positions)
         return transformer.decode_step(self.cfg, params, cache, tokens, positions)
 
+    # -- row-slotted serve path (continuous batching) -------------------------
+    def init_row_cache(self, batch: int, buf_size: int, dtype=None):
+        if self.is_encdec or self.cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError("row-slotted caches require an attention-KV "
+                             f"family, got {self.cfg.family}")
+        return cache_lib.init_row_attn_cache(self.cfg, batch, buf_size,
+                                             dtype=dtype)
+
+    def decode_step_rows(self, params, cache, tokens, positions=None):
+        return transformer.decode_step_rows(self.cfg, params, cache, tokens,
+                                            positions)
+
 
 def build_model(cfg) -> Model:
     return Model(cfg)

@@ -24,9 +24,11 @@ import jax.numpy as jnp
 from repro.configs.base import ATTENTION, RECURRENT
 from repro.dist.sharding import shard
 from repro.models import cache as cache_lib
-from repro.models.attention import (attn_into_cache, attn_self,
-                                    attn_with_prefix, init_attention)
-from repro.models.cache import (AttnCache, HybridCache, SSMCache, write_kv)
+from repro.models.attention import (attn_into_cache, attn_into_cache_rows,
+                                    attn_self, attn_with_prefix,
+                                    init_attention)
+from repro.models.cache import (AttnCache, HybridCache, RowAttnCache, SSMCache,
+                                write_kv)
 from repro.models.mamba import init_mamba, mamba_fwd
 from repro.models.mlp import init_mlp, mlp
 from repro.models.moe import init_moe, moe_ffn
@@ -463,5 +465,69 @@ def decode_step(cfg, params, cache, tokens, positions=None):
     else:
         raise ValueError(f"decode_step: unsupported family {fam}")
 
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), new_cache
+
+
+def decode_step_rows(cfg, params, cache: RowAttnCache, tokens, positions=None):
+    """Row-slotted decode: tokens (B,Sq) against a ``RowAttnCache`` whose rows
+    sit at independent lengths/slot maps (continuous batching). Attention-KV
+    families only — recurrent state composition has no slot structure to
+    stagger (DESIGN.md §4).
+
+    ``positions`` (B,Sq) overrides RoPE positions (MatKV restart-mode
+    sub-prefill); order masking always runs against each row's slot positions.
+    Returns (logits (B,Sq,V), new cache).
+    """
+    fam = cfg.family
+    if fam not in ("dense", "vlm", "moe"):
+        raise ValueError(f"decode_step_rows: attention-KV families only, "
+                         f"got {fam}")
+    x = embed_inputs(cfg, params, tokens)
+    sq = x.shape[1]
+    order_pos = cache.length[:, None] + jnp.arange(sq, dtype=jnp.int32)[None]
+    if positions is None:
+        positions = order_pos
+    start = (cache.length % cache.buf_size).astype(jnp.int32)      # (B,)
+    spos = jax.vmap(
+        lambda sp, op, st: jax.lax.dynamic_update_slice(
+            sp, op.astype(jnp.int32), (st,)))(
+        cache.slot_pos, order_pos, start)
+
+    def attend(lp, x, pk, pv):
+        a, pk, pv = attn_into_cache_rows(
+            cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+            positions, order_pos, pk, pv, spos, start)
+        return x + a, pk, pv
+
+    if fam in ("dense", "vlm"):
+        def scan_body(x, xs):
+            lp, pk, pv = xs
+            x, pk, pv = attend(lp, x, pk, pv)
+            x = x + mlp(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x, (pk, pv)
+        x, (k, v) = scan_layers(scan_body, x,
+                                (params["layers"], cache.k, cache.v))
+    else:  # moe
+        n_pre = cfg.first_dense_layers
+        new_ks, new_vs = [], []
+        for i, lp in enumerate(params["prefix_layers"]):
+            x, pk_i, pv_i = attend(lp, x, cache.k[i], cache.v[i])
+            x = x + mlp(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            new_ks.append(pk_i); new_vs.append(pv_i)
+        def scan_body(x, xs):
+            lp, pk, pv = xs
+            x, pk, pv = attend(lp, x, pk, pv)
+            m, _ = moe_ffn(cfg, lp["moe"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x + m, (pk, pv)
+        x, (ks, vs) = scan_layers(
+            scan_body, x, (params["layers"], cache.k[n_pre:], cache.v[n_pre:]))
+        k = ks if not new_ks else jnp.concatenate([jnp.stack(new_ks), ks],
+                                                  axis=0)
+        v = vs if not new_vs else jnp.concatenate([jnp.stack(new_vs), vs],
+                                                  axis=0)
+
+    new_cache = RowAttnCache(k=k, v=v, slot_pos=spos,
+                             length=cache.length + sq)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return unembed(cfg, params, x), new_cache

@@ -1,6 +1,9 @@
-from repro.serving.engine import PhaseTimings, RagEngine
+from repro.serving.continuous import (ContinuousScheduler, RequestRecord,
+                                      ServeMetrics)
+from repro.serving.engine import PhaseTimings, RagEngine, RowRequest
 from repro.serving.sampling import greedy, temperature_sample
 from repro.serving.scheduler import BatchScheduler
 
-__all__ = ["PhaseTimings", "RagEngine", "greedy", "temperature_sample",
-           "BatchScheduler"]
+__all__ = ["ContinuousScheduler", "RequestRecord", "ServeMetrics",
+           "PhaseTimings", "RagEngine", "RowRequest", "greedy",
+           "temperature_sample", "BatchScheduler"]

@@ -1,0 +1,238 @@
+"""Continuous-batching serving core (beyond-paper; motivated by the
+KV-offloading bottleneck analysis in PAPERS.md).
+
+``BatchScheduler`` overlaps flash loads with decode at *batch* granularity:
+every row shares one composed-cache geometry, the batch stalls on its slowest
+load, and finished rows decode dead air until the whole batch drains.
+``ContinuousScheduler`` replaces that with per-request admission over a
+row-slotted cache (``RowAttnCache``):
+
+  arrive   retrieval runs immediately; the request's KV payloads start
+           loading on ``AsyncKvLoader`` worker threads (per-request prefetch —
+           loads overlap with whatever is currently decoding)
+  admit    when a decode slot is free and the payloads have landed, the row is
+           composed + sub-prefilled at batch=1 and inserted into the slot
+  step     one fixed-shape batched decode step advances every occupied slot;
+           rows sit at independent lengths/positions (per-row slot maps)
+  evict    a row leaves at EOS or its own ``max_new_tokens``; the freed slot
+           is backfilled from the pending queue on the next loop turn
+
+Idle slots keep stepping on a dummy token into their stale row (masked-out,
+ignored, fully overwritten at the next admit) so the decode step keeps one
+compiled shape. Per-row results are bit-identical to the single-request
+``RagEngine.answer`` path: masked slots contribute exact zeros, so a row never
+sees its neighbours or the buffer tail.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures as cf
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import EOS
+from repro.kvstore.async_loader import AsyncKvLoader
+from repro.models.cache import insert_cache_row
+from repro.serving.engine import RagEngine, RowRequest
+from repro.serving.sampling import greedy
+
+
+@dataclass
+class RequestRecord:
+    """Per-request lifecycle state + latency bookkeeping (offsets from run
+    start, seconds)."""
+    question: str
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    req: Optional[RowRequest] = None
+    future: object = None                  # payloads future (AsyncKvLoader)
+    tokens: List[int] = field(default_factory=list)
+    answer: Optional[str] = None
+    admit_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    n_doc_tokens: int = 0
+
+    @property
+    def latency_s(self) -> float:
+        return (self.finish_s or 0.0) - self.arrival_s
+
+
+@dataclass
+class ServeMetrics:
+    wall_s: float = 0.0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    n_requests: int = 0
+    n_new_tokens: int = 0
+    kv_bytes_loaded: int = 0
+    latencies_s: List[float] = field(default_factory=list)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.n_new_tokens / self.wall_s if self.wall_s else 0.0
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.quantile(np.asarray(self.latencies_s), q))
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.latency_quantile(0.50)
+
+    @property
+    def p95_latency_s(self) -> float:
+        return self.latency_quantile(0.95)
+
+
+class ContinuousScheduler:
+    """Admit requests into decode slots as they arrive; evict at EOS or each
+    row's ``max_new_tokens``; backfill freed slots from the pending queue whose
+    KV loads were prefetched while earlier rows were decoding."""
+
+    def __init__(self, engine: RagEngine, max_slots: int = 4,
+                 buf_size: Optional[int] = None, n_load_workers: int = 4):
+        if engine.cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError("ContinuousScheduler requires an attention-KV "
+                             "family")
+        if engine.mode != "matkv":
+            # vanilla stores no artifacts (admit would crash mid-run) and
+            # cacheblend's selective recompute has no row-level equivalent yet
+            raise ValueError("ContinuousScheduler requires a matkv-mode "
+                             f"engine, got mode={engine.mode!r}")
+        self.engine = engine
+        self.max_slots = max_slots
+        self.buf_size = buf_size
+        self.loader = AsyncKvLoader(engine.reader, n_workers=n_load_workers)
+
+    def shutdown(self):
+        self.loader.shutdown()
+
+    # -- sizing ----------------------------------------------------------------
+    def _buf_for(self, records: Sequence[RequestRecord]) -> int:
+        """One buffer geometry for the whole run: worst-case composed prefix +
+        prompt + per-request decode budget (rows smaller than this just leave
+        tail slots empty)."""
+        if self.buf_size is not None:
+            return self.buf_size
+        eng = self.engine
+        worst = 0
+        for r in records:
+            worst = max(worst, eng.top_k * eng.chunk_tokens
+                        + len(eng._prompt(r.question)) + r.max_new_tokens + 8)
+        # bucket to a multiple of 64 so successive runs with slightly
+        # different workloads reuse the compiled decode step
+        return (worst + 63) // 64 * 64
+
+    # -- top-level run ---------------------------------------------------------
+    def run(self, questions: Sequence[str],
+            max_new_tokens: Union[int, Sequence[int]] = 20,
+            arrivals_s: Optional[Sequence[float]] = None
+            ) -> Tuple[List[str], ServeMetrics]:
+        """Serve ``questions``; ``max_new_tokens`` may be per-request.
+        ``arrivals_s`` (offsets from run start) simulates an open-loop arrival
+        process — requests are invisible to the scheduler before their arrival
+        time. Returns (answers in input order, metrics)."""
+        n = len(questions)
+        if isinstance(max_new_tokens, int):
+            max_new_tokens = [max_new_tokens] * n
+        if arrivals_s is None:
+            arrivals_s = [0.0] * n
+        records = [RequestRecord(q, m, a) for q, m, a
+                   in zip(questions, max_new_tokens, arrivals_s)]
+        order = {id(r): i for i, r in enumerate(records)}
+        metrics = ServeMetrics(n_requests=n)
+
+        eng = self.engine
+        buf = self._buf_for(records)
+        cache = eng.model.init_row_cache(self.max_slots, buf)
+        cur = np.zeros((self.max_slots,), np.int32)
+        upcoming = deque(sorted(records, key=lambda r: r.arrival_s))
+        pending: deque = deque()           # arrived, payloads prefetching
+        active: Dict[int, RequestRecord] = {}
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0
+
+        def poll_arrivals():
+            while upcoming and upcoming[0].arrival_s <= now():
+                r = upcoming.popleft()
+                r.req = eng.prepare_request(r.question, r.max_new_tokens)
+                # start the flash reads immediately: they overlap with the
+                # decode steps below (per-request load/decode overlap)
+                r.future = self.loader.load_many(r.req.chunk_ids)
+                pending.append(r)
+
+        def finish(r: RequestRecord):
+            ids = r.tokens
+            if EOS in ids:
+                ids = ids[:ids.index(EOS)]
+            r.answer = eng.tok.decode(ids)
+            r.finish_s = now()
+            metrics.n_new_tokens += len(r.tokens)
+            metrics.latencies_s.append(r.latency_s)
+
+        def admit(r: RequestRecord, slot: int) -> bool:
+            """Compose + sub-prefill one row into ``slot``. Returns False if
+            the request finished at its first token (slot stays free)."""
+            nonlocal cache
+            r.req.payloads = r.future.result()
+            t_adm = time.perf_counter()
+            row, n_doc, nbytes = eng.compose_row(r.req, buf)
+            first, row = eng.prefill_row(row, r.req.prompt)
+            metrics.prefill_s += time.perf_counter() - t_adm
+            metrics.kv_bytes_loaded += nbytes
+            r.n_doc_tokens = n_doc
+            r.admit_s = now()
+            r.tokens = [int(first[0])]
+            if r.tokens[0] == EOS or r.max_new_tokens <= 1:
+                finish(r)
+                return False
+            cache = insert_cache_row(cache, slot, row)
+            cur[slot] = r.tokens[0]
+            active[slot] = r
+            return True
+
+        while upcoming or pending or active:
+            poll_arrivals()
+            # backfill free slots with loaded requests (FIFO, skip-ahead only
+            # past requests whose loads are still in flight)
+            free = [s for s in range(self.max_slots) if s not in active]
+            for slot in free:
+                ready = next((r for r in pending if r.future.done()), None)
+                if ready is None:
+                    break
+                pending.remove(ready)
+                admit(ready, slot)
+            if not active:
+                if pending:
+                    # nothing decoding: wait for the FIRST load to land (not
+                    # the oldest — a tiny chunk behind a huge one must not
+                    # stall), briefly so arrivals keep being polled
+                    cf.wait([r.future for r in pending], timeout=0.01,
+                            return_when=cf.FIRST_COMPLETED)
+                elif upcoming:
+                    time.sleep(max(0.0, min(
+                        upcoming[0].arrival_s - now(), 0.01)))
+                continue
+            t_dec = time.perf_counter()
+            logits, cache = eng.step_rows(cache, jnp.asarray(cur)[:, None])
+            nxt = np.asarray(greedy(logits[:, -1]))
+            metrics.decode_s += time.perf_counter() - t_dec
+            for slot, r in list(active.items()):
+                tok = int(nxt[slot])
+                r.tokens.append(tok)
+                cur[slot] = tok
+                if tok == EOS or len(r.tokens) >= r.max_new_tokens:
+                    finish(r)
+                    del active[slot]
+
+        metrics.wall_s = now()
+        answers = [None] * n
+        for r in records:
+            answers[order[id(r)]] = r.answer
+        return answers, metrics

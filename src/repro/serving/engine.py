@@ -15,6 +15,7 @@ recompute of later chunks (DESIGN.md §4).
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -24,11 +25,12 @@ import numpy as np
 
 from repro.core.blend import blend
 from repro.core.chunking import Chunk, chunk_document
-from repro.core.compose import (compose_attn_cache, compose_hybrid_cache,
-                                compose_ssm_cache)
+from repro.core.compose import (compose_attn_cache, compose_attn_cache_rows,
+                                compose_hybrid_cache, compose_ssm_cache)
 from repro.core.materialize import Materializer, load_artifact
 from repro.data.tokenizer import EOS, SEP, ByteTokenizer
-from repro.models.cache import AttnCache, write_kv
+from repro.models.cache import (AttnCache, RowAttnCache, init_attn_cache,
+                                init_hybrid_cache, init_ssm_cache, write_kv)
 from repro.retrieval.embed import HashingEmbedder
 from repro.retrieval.vectordb import VectorDB
 from repro.serving.sampling import greedy
@@ -46,6 +48,18 @@ class PhaseTimings:
     @property
     def total_s(self) -> float:
         return self.load_s + self.prefill_s + self.decode_s
+
+
+@dataclass
+class RowRequest:
+    """One serving request in row-level form: retrieval done, KV artifacts not
+    necessarily loaded yet (a prefetcher fills ``payloads`` asynchronously).
+    ``chunk_ids == []`` is a legal query-only request (empty retrieval)."""
+    question: str
+    max_new_tokens: int
+    chunk_ids: List[str]
+    prompt: np.ndarray
+    payloads: Optional[List[bytes]] = None
 
 
 class RagEngine:
@@ -74,6 +88,9 @@ class RagEngine:
             lambda p, c, t: self.model.decode_step(p, c, t))
         self._subprefill_fns = {}
         self._vanilla_fns = {}
+        # row-slotted step (continuous batching); jit retraces per shape
+        self._row_step_fn = jax.jit(
+            lambda p, c, t: self.model.decode_step_rows(p, c, t))
 
     # -- ingest ------------------------------------------------------------------
     def ingest(self, doc_id: str, text: str) -> List[str]:
@@ -126,7 +143,23 @@ class RagEngine:
     # -- load + compose (the MatKV read path) ---------------------------------------
     def load_and_compose(self, chunk_ids: Sequence[str], buf_size: int,
                          batch_rows: int = 1):
-        """Returns (cache, n_doc_tokens, bytes_loaded). One row; rows replicate."""
+        """Returns (cache, n_doc_tokens, bytes_loaded). One row; rows replicate.
+
+        ``chunk_ids == []`` (empty retrieval) yields an empty cache: the query
+        is then served with no document prefix instead of crashing on a
+        zero-artifact compose.
+        """
+        fam = self.cfg.family
+        if not chunk_ids:
+            if fam in ("dense", "vlm", "moe"):
+                cache = init_attn_cache(self.cfg, batch_rows, buf_size)
+            elif fam == "ssm":
+                cache = init_ssm_cache(self.cfg, batch_rows)
+            elif fam == "hybrid":
+                cache = init_hybrid_cache(self.cfg, batch_rows, buf_size)
+            else:
+                raise ValueError(f"engine: unsupported family {fam}")
+            return cache, 0, 0
         t_bytes = 0
         artifacts, metas = [], []
         for cid in chunk_ids:
@@ -135,7 +168,6 @@ class RagEngine:
             art, meta = load_artifact(self.cfg, payload)
             artifacts.append(art)
             metas.append(meta)
-        fam = self.cfg.family
         if fam in ("dense", "vlm", "moe"):
             if batch_rows > 1:
                 artifacts = [jax.tree.map(
@@ -164,12 +196,75 @@ class RagEngine:
             raise ValueError(f"engine: unsupported family {fam}")
         return cache, n_doc, t_bytes
 
+    # -- row-level request API (shared by both schedulers) -----------------------------
+    #
+    # The lifecycle a scheduler drives:
+    #   req  = engine.prepare_request(q, max_new)        # retrieval only
+    #   ...payloads prefetched into req.payloads (AsyncKvLoader) or fetched
+    #      synchronously via engine.fetch_payloads(req)...
+    #   row, n_doc, nbytes = engine.compose_row(req, buf_size)
+    #   first, row = engine.prefill_row(row, req.prompt)  # admit
+    #   logits, cache = engine.step_rows(cache, tokens)   # batched decode
+    #
+    # compose/prefill run at batch=1 (ragged prompt lengths); step_rows runs
+    # the whole slot table in one fixed-shape call.
+
+    def prepare_request(self, question: str, max_new_tokens: int = 20,
+                        chunk_ids: Optional[Sequence[str]] = None
+                        ) -> RowRequest:
+        """Retrieve for one request; no KV bytes are read yet."""
+        cids = list(self.retrieve(question) if chunk_ids is None
+                    else chunk_ids)
+        if not cids:
+            warnings.warn(f"retrieval returned no chunks for {question!r}; "
+                          f"serving query-only")
+        return RowRequest(question=question, max_new_tokens=max_new_tokens,
+                          chunk_ids=cids, prompt=self._prompt(question))
+
+    def fetch_payloads(self, req: RowRequest) -> int:
+        """Synchronously read the request's KV payloads (the non-overlapped
+        path); returns bytes read. No-op if a prefetcher already filled them."""
+        if req.payloads is None:
+            req.payloads = [self.reader.get(c) for c in req.chunk_ids]
+        return sum(len(p) for p in req.payloads)
+
+    def compose_row(self, req: RowRequest, buf_size: int
+                    ) -> Tuple[RowAttnCache, int, int]:
+        """Deserialize + compose one request's artifacts into a batch=1
+        row-slotted cache. Returns (row_cache, n_doc_tokens, bytes_loaded).
+        Empty retrieval composes an empty row (query-only)."""
+        if self.cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError("row-slotted serving requires an attention-KV "
+                             f"family, got {self.cfg.family}")
+        nbytes = self.fetch_payloads(req)
+        arts = [load_artifact(self.cfg, p)[0] for p in req.payloads]
+        cache = compose_attn_cache_rows(self.cfg, [arts], buf_size,
+                                        rerotate=self.rerotate)
+        return cache, int(cache.length[0]), nbytes
+
+    def prefill_row(self, row_cache: RowAttnCache, prompt: np.ndarray
+                    ) -> Tuple[jnp.ndarray, RowAttnCache]:
+        """Sub-prefill one row's prompt over its composed prefix (batch=1).
+        Returns (first_token (1,), updated row_cache)."""
+        logits, row_cache = self._row_step_fn(
+            self.params, row_cache, jnp.asarray(prompt)[None])
+        return greedy(logits[:, -1]), row_cache
+
+    def step_rows(self, cache: RowAttnCache, tokens: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, RowAttnCache]:
+        """One batched decode step over the whole slot table: tokens (B,Sq)."""
+        return self._row_step_fn(self.params, cache, tokens)
+
     # -- request paths -----------------------------------------------------------------
     def answer(self, question: str, max_new_tokens: int = 20,
                chunk_ids: Optional[Sequence[str]] = None
                ) -> Tuple[str, PhaseTimings]:
         timings = PhaseTimings()
-        chunk_ids = list(chunk_ids or self.retrieve(question))
+        chunk_ids = list(self.retrieve(question) if chunk_ids is None
+                         else chunk_ids)
+        if not chunk_ids:
+            warnings.warn(f"retrieval returned no chunks for {question!r}; "
+                          f"answering query-only")
         prompt = self._prompt(question)
 
         if self.mode == "vanilla":
@@ -183,15 +278,18 @@ class RagEngine:
             timings.prefill_s = time.perf_counter() - t0
             first = greedy(logits[:, -1])
         else:
-            buf = timings.n_doc_tokens = len(chunk_ids) * self.chunk_tokens
+            buf = len(chunk_ids) * self.chunk_tokens
             t0 = time.perf_counter()
             cache, n_doc, nbytes = self.load_and_compose(
                 chunk_ids, buf + len(prompt) + max_new_tokens + 8)
             jax.block_until_ready(cache.k if hasattr(cache, "k") else cache.h)
             timings.load_s = time.perf_counter() - t0
+            # the composed cache knows the true token count (short final
+            # chunks); the old ``len(chunk_ids) * chunk_tokens`` over-reported
+            timings.n_doc_tokens = n_doc
             timings.kv_bytes_loaded = nbytes
             t0 = time.perf_counter()
-            if self.mode == "cacheblend":
+            if self.mode == "cacheblend" and chunk_ids:
                 doc_concat = jnp.asarray(np.concatenate(
                     [self._pad_chunk(self._chunks[c].tokens)
                      for c in chunk_ids])[None])

@@ -50,6 +50,11 @@ class BatchScheduler:
         nbytes = 0
         for q in questions:
             cids = eng.retrieve(q)
+            if not cids:
+                # empty retrieval: no chunk to replicate into the fixed
+                # geometry — mark the row for the query-only fallback path
+                rows.append(None)
+                continue
             # fixed geometry: exactly top_k chunks per row
             while len(cids) < eng.top_k:
                 cids.append(cids[-1])
@@ -90,6 +95,27 @@ class BatchScheduler:
     # -- decode stage -----------------------------------------------------------
     def _serve_batch(self, questions, rows, timings: PhaseTimings,
                      max_new_tokens: int) -> List[str]:
+        answers: List[Optional[str]] = [None] * len(questions)
+        empty = [i for i, r in enumerate(rows) if r is None]
+        if empty:
+            # query-only fallback for empty-retrieval rows; the rest of the
+            # batch keeps its fixed geometry
+            eng = self.engine
+            for i in empty:
+                ans, t = eng.answer(questions[i], max_new_tokens=max_new_tokens,
+                                    chunk_ids=[])
+                timings.prefill_s += t.prefill_s
+                timings.decode_s += t.decode_s
+                timings.n_new_tokens += t.n_new_tokens
+                answers[i] = ans
+            keep = [i for i in range(len(questions)) if rows[i] is not None]
+            if not keep:
+                return answers
+            for i, ans in zip(keep, self._serve_batch(
+                    [questions[i] for i in keep], [rows[i] for i in keep],
+                    timings, max_new_tokens)):
+                answers[i] = ans
+            return answers
         eng = self.engine
         t0 = time.perf_counter()
         cache = self._compose_batch(rows)

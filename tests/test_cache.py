@@ -10,7 +10,9 @@ import pytest
 from repro.configs import get_config
 from repro.core.compose import compose_hybrid_cache, compose_ssm_cache
 from repro.models import build_model
-from repro.models.cache import AttnCache, write_kv, init_attn_cache
+from repro.models.cache import (AttnCache, init_attn_cache,
+                                init_row_attn_cache, insert_cache_row,
+                                write_kv)
 
 
 def _rand_tokens(key, b, s, v):
@@ -170,3 +172,47 @@ def test_write_kv_wraps_ring(rng_key):
     np.testing.assert_array_equal(np.asarray(sp), [4, 5, 2, 3])
     assert int(ln) == 6
     assert float(k[0, 0, 1, 0, 0]) == 6.0  # token 5 written at slot 1
+
+
+def test_row_cache_staggered_decode_matches_per_row(rng_key):
+    """Rows of a RowAttnCache at staggered lengths decode identically to the
+    same rows run alone at batch=1 (the per-row write/mask contract)."""
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    toks = _rand_tokens(rng_key, 2, 8, cfg.vocab_size)
+    big = init_row_attn_cache(cfg, 2, 12)
+    # stagger: row 0 prefills 5 tokens, row 1 prefills 2
+    rows = []
+    for r, n in enumerate((5, 2)):
+        row = init_row_attn_cache(cfg, 1, 12)
+        _, row = model.decode_step_rows(params, row, toks[r:r + 1, :n])
+        big = insert_cache_row(big, r, row)
+        rows.append(row)
+    for t in range(3):
+        step = jnp.stack([toks[0, 5 + t], toks[1, 2 + t]])[:, None]
+        lg, big = model.decode_step_rows(params, big, step)
+        for r in range(2):
+            lr, rows[r] = model.decode_step_rows(params, rows[r],
+                                                 step[r:r + 1])
+            np.testing.assert_allclose(np.asarray(lg[r], np.float32),
+                                       np.asarray(lr[0], np.float32),
+                                       rtol=2e-3, atol=2e-3)
+    np.testing.assert_array_equal(np.asarray(big.length), [8, 5])
+
+
+def test_insert_cache_row_replaces_one_row(rng_key):
+    cfg = get_config("smollm-135m").reduced()
+    big = init_row_attn_cache(cfg, 2, 4)
+    row = init_row_attn_cache(cfg, 1, 4)
+    row = dataclasses.replace(
+        row, k=row.k + 7.0, slot_pos=row.slot_pos.at[0, :2].set(
+            jnp.arange(2, dtype=jnp.int32)),
+        length=jnp.asarray([2], jnp.int32))
+    out = insert_cache_row(big, 1, row)
+    assert float(out.k[0, 0, 0, 0, 0]) == 0.0           # row 0 untouched
+    assert float(out.k[0, 1, 0, 0, 0]) == 7.0
+    np.testing.assert_array_equal(np.asarray(out.length), [0, 2])
+    np.testing.assert_array_equal(np.asarray(out.slot_pos[1, :3]), [0, 1, -1])
+    with pytest.raises(ValueError):
+        insert_cache_row(big, 0, init_row_attn_cache(cfg, 1, 8))

@@ -1,7 +1,9 @@
 """Flash store / serialization / tiers / async loading."""
 
+import gc
 import threading
 import time
+import weakref
 
 import numpy as np
 import pytest
@@ -103,6 +105,127 @@ def test_async_loader_parallel(tmp_path):
     payloads = fut.result(timeout=5)
     assert [p[0] for p in payloads] == list(range(8))
     loader.shutdown()
+
+
+def test_lru_oversized_overwrite_keeps_existing_entry():
+    """put() of an oversized value used to first evict the key's resident
+    entry and then drop the insert — silent data loss. The resident entry
+    must survive (values are immutable per chunk_id)."""
+    c = LruBytesCache(capacity_bytes=10)
+    c.put("k", b"x" * 8)
+    c.put("k", b"y" * 20)                    # oversized: must be a no-op
+    assert c.get("k") == b"x" * 8
+    assert c.size_bytes == 8
+
+
+def test_async_loader_gather_consumes_no_pool_worker(tmp_path):
+    """Regression for the load_many self-deadlock: the gather used to be a
+    closure submitted to the same pool as the per-chunk loads (blocking a
+    worker per in-flight load_many). It must now be callback-driven: exactly
+    one pool submission per chunk, none for the gather."""
+    store = FlashKVStore(tmp_path)
+    for i in range(3):
+        store.put(f"c{i}", bytes([i]) * 10)
+    loader = AsyncKvLoader(store, n_workers=1)
+    submitted = []
+    orig_submit = loader.pool.submit
+
+    def counting_submit(fn, *a, **kw):
+        submitted.append(fn)
+        return orig_submit(fn, *a, **kw)
+
+    loader.pool.submit = counting_submit
+    fut = loader.load_many(["c0", "c1", "c2"])
+    assert fut.result(timeout=5) == [bytes([i]) * 10 for i in range(3)]
+    assert len(submitted) == 3               # loads only, no gather task
+    assert all(f == store.get for f in submitted)
+    loader.shutdown()
+
+
+def test_async_loader_many_concurrent_gathers_single_worker(tmp_path):
+    """The issue scenario: >= n_workers concurrent load_many calls on a slow
+    reader must all complete with n_workers=1 (no gather wedging the pool)."""
+    store = FlashKVStore(tmp_path)
+    for i in range(4):
+        store.put(f"c{i}", bytes([i]) * 50)
+
+    class SlowReader:
+        def get(self, cid):
+            time.sleep(0.02)
+            return store.get(cid)
+
+    loader = AsyncKvLoader(SlowReader(), n_workers=1)
+    results, errs = {}, []
+
+    def call(i):
+        try:
+            results[i] = loader.load_many(
+                [f"c{j}" for j in range(4)]).result(timeout=10)
+        except Exception as e:               # pragma: no cover - fail path
+            errs.append(e)
+
+    threads = [threading.Thread(target=call, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=15)
+    assert not errs and len(results) == 4
+    assert all(v == [bytes([j]) * 50 for j in range(4)]
+               for v in results.values())
+    loader.shutdown()
+
+
+def test_async_loader_load_many_empty_and_error(tmp_path):
+    store = FlashKVStore(tmp_path)
+    loader = AsyncKvLoader(store, n_workers=1)
+    assert loader.load_many([]).result(timeout=2) == []
+    with pytest.raises(FileNotFoundError):
+        loader.load_many(["missing"]).result(timeout=5)
+    loader.shutdown()
+
+
+def test_prefetch_pipeline_releases_consumed_payloads():
+    """Completed futures used to stay in ``inflight`` for the whole run,
+    pinning every payload in memory. Live payloads must stay bounded by the
+    pipeline depth."""
+
+    class Payload:                           # weakref-able payload stand-in
+        def __init__(self, i):
+            self.data = bytes([i % 256]) * 1000
+
+    live = weakref.WeakSet()
+
+    def load(i):
+        p = Payload(i)
+        live.add(p)
+        return p
+
+    pipe = PrefetchPipeline(list(range(12)), load, depth=1)
+    seen = 0
+    for item, payload in pipe:
+        del payload
+        gc.collect()
+        seen += 1
+        # current inflight window only: depth + 1 loading + 1 slack
+        assert len(live) <= 3, f"{len(live)} payloads alive at item {item}"
+    assert seen == 12
+
+
+def test_prefetch_pipeline_early_exit_shuts_down_pool():
+    started = []
+
+    def load(i):
+        started.append(i)
+        time.sleep(0.01)
+        return i
+
+    pipe = PrefetchPipeline(list(range(50)), load, depth=1)
+    it = iter(pipe)
+    next(it)
+    it.close()                               # early exit -> cancel + shutdown
+    with pytest.raises(RuntimeError):
+        pipe._pool.submit(load, 99)          # pool must be shut down
+    assert len(started) < 50                 # queued tail was cancelled
 
 
 def test_prefetch_pipeline_overlaps():

@@ -1,0 +1,261 @@
+"""Continuous-batching serving core + the serving/IO bug-cluster regressions.
+
+Prompt lengths in CORPUS are deliberately equal (24 bytes per question) so the
+fixed BatchScheduler's right-padding is a no-op and fixed-vs-continuous answer
+parity is exact.
+"""
+
+import tempfile
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.materialize import load_artifact
+from repro.data.tokenizer import EOS
+from repro.kvstore import FlashKVStore
+from repro.models import build_model
+from repro.serving import BatchScheduler, ContinuousScheduler, RagEngine
+
+CORPUS = {
+    "d1": "the amber gate stands in hall nine beyond the long stair. " * 4,
+    "d2": "the cedar door opens with a brass song at dusk hour. " * 4,
+    "d3": "the brass lamp hums beside the tall window all night. " * 4,
+}
+QUESTIONS = ["where is the amber gate?", "where is the cedar door?",
+             "where is the brass lamp?"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-135m").reduced(vocab_size=300)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    return cfg, model, params
+
+
+def _engine(model, params, store, **kw):
+    kw.setdefault("top_k", 2)
+    eng = RagEngine(model, params, store, chunk_tokens=48, **kw)
+    for d, text in CORPUS.items():
+        eng.ingest(d, text)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# continuous scheduler behaviour
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_single_request_answers(setup):
+    """Per-row answers under continuous batching must be identical to the
+    single-request RagEngine.answer path (the acceptance bar)."""
+    cfg, model, params = setup
+    qs = [QUESTIONS[i % 3] for i in range(5)]
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        refs = [eng.answer(q, max_new_tokens=6)[0] for q in qs]
+        cont = ContinuousScheduler(eng, max_slots=2)
+        ans, m = cont.run(qs, max_new_tokens=6)
+        cont.shutdown()
+        assert ans == refs
+        assert m.n_requests == 5 and len(m.latencies_s) == 5
+        assert m.kv_bytes_loaded > 0
+
+
+def test_continuous_fixed_parity_and_mixed_lengths(setup):
+    """Fixed and continuous scheduling agree (equal-length prompts), with
+    per-request decode budgets under continuous matching per-request
+    single-engine runs."""
+    cfg, model, params = setup
+    qs = list(QUESTIONS)
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        fixed = BatchScheduler(eng, batch_size=3, overlap=True)
+        a_fixed, _ = fixed.run(qs, max_new_tokens=5)
+        cont = ContinuousScheduler(eng, max_slots=3)
+        a_cont, _ = cont.run(qs, max_new_tokens=5)
+        assert a_cont == a_fixed
+        # mixed per-request budgets: each row matches its own reference
+        mixed = [3, 7, 5]
+        refs = [eng.answer(q, max_new_tokens=n)[0]
+                for q, n in zip(qs, mixed)]
+        ans, _ = cont.run(qs, max_new_tokens=mixed,
+                          arrivals_s=[0.0, 0.005, 0.01])
+        cont.shutdown()
+        assert ans == refs
+
+
+def test_continuous_mixed_final_chunk_lengths_one_batch(setup):
+    """Rows whose retrieval includes a short final chunk coexist in one
+    row-slotted batch with full-chunk rows and still answer exactly."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng = _engine(model, params, store, mode="matkv")
+        # a short doc whose tail chunk is ragged (68 tokens -> 48 + 20)
+        tail_cids = eng.ingest(
+            "tail", "the zinc helm waits under the ninth arch today.  "
+                    "only the zinc helm.")
+        q_tail = "where is the zinc helm today?"
+        orig = eng.retrieve
+        eng.retrieve = lambda q: (list(tail_cids) if "zinc" in q else orig(q))
+        lens = [load_artifact(cfg, store.get(c))[1]["n_tokens"]
+                for c in tail_cids]
+        assert any(l < 48 for l in lens), f"setup: no short chunk in {lens}"
+        qs = [q_tail, QUESTIONS[0]]
+        refs = [eng.answer(q, max_new_tokens=5)[0] for q in qs]
+        cont = ContinuousScheduler(eng, max_slots=2)
+        ans, _ = cont.run(qs, max_new_tokens=5)
+        cont.shutdown()
+        assert ans == refs
+
+
+def test_continuous_eos_early_eviction_frees_slot(setup):
+    """A row forced to EOS mid-stream is evicted early (truncated answer) and
+    neighbouring full-length rows are unaffected."""
+    cfg, model, params = setup
+    qs = [QUESTIONS[0], QUESTIONS[1]]
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        refs = [eng.answer(q, max_new_tokens=8)[0] for q in qs]
+        # reference token stream for row 0 (to predict the truncated answer)
+        req = eng.prepare_request(qs[0], 8)
+        row, _, _ = eng.compose_row(req, 160)
+        from repro.serving.sampling import greedy
+        first, row = eng.prefill_row(row, req.prompt)
+        toks = [int(first[0])]
+        cur = first
+        for _ in range(7):
+            lg, row = eng.step_rows(row, cur[:, None])
+            cur = greedy(lg[:, -1])
+            toks.append(int(cur[0]))
+        expect_row0 = eng.tok.decode(toks[:2])   # EOS forced as 3rd token
+
+        orig_step = eng.step_rows
+        calls = {"n": 0}
+
+        def forced(cache, tokens):
+            logits, cache = orig_step(cache, tokens)
+            calls["n"] += 1
+            if calls["n"] >= 2:                  # from the 2nd decode step on
+                logits = jnp.asarray(np.asarray(logits))
+                logits = logits.at[0, :, EOS].set(1e9)  # slot 0 -> EOS
+            return logits, cache
+        eng.step_rows = forced
+        try:
+            cont = ContinuousScheduler(eng, max_slots=2)
+            ans, m = cont.run(qs, max_new_tokens=8)
+            cont.shutdown()
+        finally:
+            eng.step_rows = orig_step
+        assert ans[0] == expect_row0             # truncated at forced EOS
+        assert ans[1] == refs[1]                 # neighbour unaffected
+        # early eviction: row 0 emitted 3 tokens (incl. EOS), row 1 all 8
+        assert m.n_new_tokens == 3 + 8
+
+
+def test_continuous_backfills_freed_slots(setup):
+    """More requests than slots: later requests are admitted as earlier rows
+    finish, and every answer still matches its single-request reference."""
+    cfg, model, params = setup
+    qs = [QUESTIONS[i % 3] for i in range(6)]
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        refs = [eng.answer(q, max_new_tokens=4)[0] for q in qs]
+        cont = ContinuousScheduler(eng, max_slots=2)
+        ans, m = cont.run(qs, max_new_tokens=4)
+        cont.shutdown()
+        assert ans == refs
+        assert m.n_new_tokens == 4 * 6
+
+
+# ---------------------------------------------------------------------------
+# bug-cluster regressions: empty retrieval
+# ---------------------------------------------------------------------------
+
+def test_engine_answer_empty_retrieval_matkv(setup):
+    """matkv-mode answer() with chunk_ids == [] serves query-only instead of
+    crashing in compose."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        with pytest.warns(UserWarning, match="no chunks"):
+            ans, t = eng.answer("where is the amber gate?", chunk_ids=[],
+                                max_new_tokens=4)
+        assert isinstance(ans, str)
+        assert t.n_doc_tokens == 0 and t.kv_bytes_loaded == 0
+
+
+def test_batch_scheduler_empty_retrieval_no_crash(setup):
+    """Empty retrieval used to IndexError in _load_batch (cids[-1] on []);
+    now those rows fall back to query-only answers."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        # no documents ingested -> every retrieval is empty
+        eng = RagEngine(model, params, FlashKVStore(d), mode="matkv",
+                        chunk_tokens=48, top_k=2)
+        sched = BatchScheduler(eng, batch_size=2, overlap=False)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", UserWarning)
+            ans, _ = sched.run(["anything?", "else gone?"], max_new_tokens=3)
+        assert len(ans) == 2 and all(isinstance(a, str) for a in ans)
+
+
+def test_batch_scheduler_mixed_empty_and_real_rows(setup):
+    """One empty-retrieval row inside an otherwise loadable batch: the real
+    rows keep the fixed-geometry path and match their solo answers."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        orig = eng.retrieve
+        eng.retrieve = lambda q: [] if "nothing" in q else orig(q)
+        ref, _ = eng.answer(QUESTIONS[0], max_new_tokens=3)
+        sched = BatchScheduler(eng, batch_size=2, overlap=True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", UserWarning)
+            ans, t = sched.run(["where is nothing here??", QUESTIONS[0]],
+                               max_new_tokens=3)
+        assert all(isinstance(a, str) for a in ans)
+        assert ans[1] == ref
+        assert t.kv_bytes_loaded > 0
+
+
+def test_continuous_empty_retrieval_row(setup):
+    """Query-only rows (empty retrieval) serve alongside loaded rows under
+    the continuous scheduler."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        orig = eng.retrieve
+        eng.retrieve = lambda q: [] if "nothing" in q else orig(q)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", UserWarning)
+            ref_empty, _ = eng.answer("where is nothing here??",
+                                      chunk_ids=[], max_new_tokens=4)
+            ref_full, _ = eng.answer(QUESTIONS[1], max_new_tokens=4)
+            cont = ContinuousScheduler(eng, max_slots=2)
+            ans, _ = cont.run(["where is nothing here??", QUESTIONS[1]],
+                              max_new_tokens=4)
+            cont.shutdown()
+        assert ans == [ref_empty, ref_full]
+
+
+# ---------------------------------------------------------------------------
+# bug-cluster regressions: n_doc_tokens over-report
+# ---------------------------------------------------------------------------
+
+def test_answer_reports_true_doc_tokens_for_short_final_chunk(setup):
+    """matkv answer() used to report len(chunk_ids) * chunk_tokens, silently
+    over-counting short final chunks; it must report the composed length."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng = RagEngine(model, params, store, mode="matkv",
+                        chunk_tokens=48, top_k=2)
+        cids = eng.ingest("short", "x" * 60)     # chunks of 48 + 12 tokens
+        assert len(cids) == 2
+        _, t = eng.answer("where is x?", chunk_ids=cids, max_new_tokens=3)
+        assert t.n_doc_tokens == 60              # not 2 * 48 = 96
