@@ -27,6 +27,7 @@ SUITES = {
     "table3_storage_tiers": "benchmarks.bench_storage_tiers",
     "fig6_batching": "benchmarks.bench_batching",
     "continuous_batching": "benchmarks.bench_continuous",
+    "paged_sharing": "benchmarks.bench_paged_sharing",
     "fig7_overlap": "benchmarks.bench_overlap",
     "table45_power": "benchmarks.bench_power",
     "fig8_lengths": "benchmarks.bench_lengths",
@@ -44,6 +45,10 @@ def main() -> None:
                     help="substring filter over suite names (see --list)")
     ap.add_argument("--list", action="store_true",
                     help="print available suite names and exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast path: import + validate every registered "
+                         "suite (catching registration rot), and execute the "
+                         "ones that support run(smoke=True) at reduced size")
     args = ap.parse_args()
     if args.list:
         print("\n".join(SUITES))
@@ -59,11 +64,22 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             import importlib
+            import inspect
             mod = importlib.import_module(modpath)
-            for line in mod.run():
-                print(line, flush=True)
-            print(f"suite/{name},{(time.perf_counter() - t0) * 1e6:.0f},done",
-                  flush=True)
+            if not callable(getattr(mod, "run", None)):
+                raise TypeError(f"suite {name}: module {modpath} has no "
+                                f"callable run()")
+            if args.smoke:
+                if "smoke" in inspect.signature(mod.run).parameters:
+                    for line in mod.run(smoke=True):
+                        print(line, flush=True)
+                status = "smoke-ok"
+            else:
+                for line in mod.run():
+                    print(line, flush=True)
+                status = "done"
+            print(f"suite/{name},{(time.perf_counter() - t0) * 1e6:.0f},"
+                  f"{status}", flush=True)
         except Exception:
             failures += 1
             print(f"suite/{name},0,FAILED", flush=True)

@@ -38,22 +38,32 @@ from repro.core.economics import (GpuSpec, SsdSpec, H100, SAMSUNG_9100_PRO,
 class AlwaysAdmit:
     """The paper's Eager Materialize-All baseline."""
 
-    def on_access(self, chunk_id: str, now: float) -> bool:
+    def on_access(self, chunk_id: str, now: Optional[float] = None) -> bool:
         return True
 
 
 class TenDayAdmission:
     """Materialize once the observed inter-access interval is inside the
     per-object break-even interval T (Eq. 1). One re-access within T is the
-    cheapest sufficient evidence the object is 'hot enough to store'."""
+    cheapest sufficient evidence the object is 'hot enough to store'.
+
+    ``now_fn`` is the injectable clock used when ``on_access`` is called
+    without an explicit timestamp (standalone use); ``TieredStore`` threads
+    its own clock through as the explicit ``now`` so the whole admission +
+    eviction stack runs on one deterministic time source in tests.
+    """
 
     def __init__(self, gpu: GpuSpec = H100, ssd: SsdSpec = SAMSUNG_9100_PRO,
-                 kv_bytes_per_token: int = 250_000):
+                 kv_bytes_per_token: int = 250_000,
+                 now_fn: Callable[[], float] = time.monotonic):
         self.break_even_s = break_even_interval_s(gpu, ssd,
                                                   kv_bytes_per_token)
+        self.now_fn = now_fn
         self._last_seen: Dict[str, float] = {}
 
-    def on_access(self, chunk_id: str, now: float) -> bool:
+    def on_access(self, chunk_id: str, now: Optional[float] = None) -> bool:
+        if now is None:
+            now = self.now_fn()
         prev = self._last_seen.get(chunk_id)
         self._last_seen[chunk_id] = now
         return prev is not None and (now - prev) <= self.break_even_s

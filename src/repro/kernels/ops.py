@@ -17,6 +17,7 @@ from repro.kernels.chunked_decode import chunked_decode
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.kv_dequant import kv_dequant
 from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.paged_decode import paged_decode
 
 
 def _interpret_default() -> bool:
@@ -40,6 +41,17 @@ def chunked_decode_op(q, k, v, cache_len, window=None, interpret=None):
     out = chunked_decode(q[:, 0], k.transpose(0, 2, 1, 3),
                          v.transpose(0, 2, 1, 3), cache_len,
                          window=window, interpret=interpret)
+    return out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_op(q, k_pool, v_pool, block_tables, block_lens,
+                    interpret=None):
+    """Model layout: q (B,1,H,hd) over a paged pool (N,KV,block,hd) with
+    per-row block tables/lens (B,n_max) -> (B,1,H,hd)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    out = paged_decode(q[:, 0], k_pool, v_pool, block_tables, block_lens,
+                       interpret=interpret)
     return out[:, None]
 
 

@@ -50,6 +50,42 @@ def chunked_decode_ref(q, k, v, cache_len, window=None):
     return out.reshape(b, h, hd).astype(q.dtype)
 
 
+def paged_decode_ref(q, k_pool, v_pool, block_tables, block_lens):
+    """One-token decode attention through a page table.
+
+    q (B,H,hd); k/v pool (N,KV,block,hd); block_tables (B,n_max) int32 pool
+    block ids; block_lens (B,n_max) valid tokens per block. Each row attends
+    over the first block_lens[b,i] tokens of each of its blocks, in table
+    order (the logical concat of its shared chunk pages + private tail).
+    """
+    b, h, hd = q.shape
+    n, kv, block = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    g = h // kv
+    n_max = block_tables.shape[1]
+    tbl = jnp.clip(block_tables, 0, n - 1)
+    # (B, n_max, KV, block, hd) -> (B, KV, n_max*block, hd)
+    kr = jnp.take(k_pool, tbl.reshape(-1), axis=0).reshape(
+        b, n_max, kv, block, hd).transpose(0, 2, 1, 3, 4).reshape(
+        b, kv, n_max * block, hd)
+    vr = jnp.take(v_pool, tbl.reshape(-1), axis=0).reshape(
+        b, n_max, kv, block, hd).transpose(0, 2, 1, 3, 4).reshape(
+        b, kv, n_max * block, hd)
+    qr = q.reshape(b, kv, g, hd)
+    scores = jnp.einsum("bcgd,bckd->bcgk", qr, kr,
+                        preferred_element_type=jnp.float32) * hd ** -0.5
+    off = jnp.arange(block)[None, None]
+    mask = (off < block_lens[:, :, None]).reshape(b, 1, 1, n_max * block)
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bcgk,bckd->bcgd", p, vr)
+    # a fully-masked row (all block_lens 0 — a padding row) attends to
+    # nothing and outputs zeros, matching the kernel's l=0 guard (plain
+    # softmax would return the mean of the gathered garbage V instead)
+    any_valid = (block_lens.sum(axis=1) > 0)[:, None, None, None]
+    out = jnp.where(any_valid, out, 0.0)
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
 def kv_dequant_ref(q8, scale, dtype=jnp.bfloat16):
     """int8 (..., hd) x f16 scale (..., 1) -> dtype."""
     return (q8.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)

@@ -11,17 +11,46 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import threading
-from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple)
 
 
 class AsyncKvLoader:
+    """Thread-pool flash reader with in-flight coalescing: concurrent loads
+    of one ``chunk_id`` — whether from one ``load_many`` batch or from
+    independent requests — share a single future and a single flash read.
+    The registry only tracks *in-flight* reads (a done callback drops the
+    entry), so it never grows into a payload cache; persistent reuse is the
+    paged pool's job."""
+
     def __init__(self, reader, n_workers: int = 4):
         self.reader = reader
         self.pool = cf.ThreadPoolExecutor(max_workers=n_workers,
                                           thread_name_prefix="kvload")
+        self._inflight: Dict[str, "cf.Future[bytes]"] = {}
+        self._inflight_lock = threading.Lock()
 
     def load(self, chunk_id: str) -> "cf.Future[bytes]":
-        return self.pool.submit(self.reader.get, chunk_id)
+        return self._load(chunk_id)[0]
+
+    def _load(self, chunk_id: str) -> "Tuple[cf.Future[bytes], bool]":
+        """Returns (future, initiated): ``initiated`` is False when the call
+        coalesced onto a read another caller already has in flight — the
+        flash bytes belong to the initiator, not this caller."""
+        with self._inflight_lock:
+            fut = self._inflight.get(chunk_id)
+            if fut is not None:
+                return fut, False           # coalesce onto the pending read
+            fut = self.pool.submit(self.reader.get, chunk_id)
+            self._inflight[chunk_id] = fut
+
+        def _forget(f: cf.Future) -> None:
+            with self._inflight_lock:
+                if self._inflight.get(chunk_id) is f:
+                    del self._inflight[chunk_id]
+
+        fut.add_done_callback(_forget)
+        return fut, True
 
     def load_many(self, chunk_ids: Sequence[str]) -> "cf.Future[List[bytes]]":
         """Fan out per-chunk loads; the returned future completes when all do.
@@ -30,9 +59,16 @@ class AsyncKvLoader:
         never occupies a pool worker. (Submitting a blocking gather closure to
         the *same* pool as the loads deadlocks once gathers hold every worker
         while the loads they wait on sit in the queue behind them.)
+
+        The returned future carries ``initiated_flags`` (one bool per
+        chunk_id): True where THIS call started the flash read, False where
+        it coalesced onto an in-flight one — callers attribute flash bytes
+        to initiators only.
         """
-        futures = [self.load(c) for c in chunk_ids]
+        loads = [self._load(c) for c in chunk_ids]
+        futures = [f for f, _ in loads]
         out: "cf.Future[List[bytes]]" = cf.Future()
+        out.initiated_flags = [i for _, i in loads]
         out.set_running_or_notify_cancel()
         if not futures:
             out.set_result([])

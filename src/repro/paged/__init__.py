@@ -1,0 +1,10 @@
+# Paged KV subsystem: chunk-shared, ref-counted GPU block pool + page-table
+# decode (DESIGN.md §10). One HBM copy of a chunk's KV serves every
+# concurrent row that retrieved it; only each row's prompt/decode tail is
+# private.
+from repro.paged.pool import PagedKvPool, PoolStats
+from repro.paged.runtime import (PagedRowCache, RowPages, gather_rows,
+                                 scatter_decode_token, scatter_row_range)
+
+__all__ = ["PagedKvPool", "PoolStats", "PagedRowCache", "RowPages",
+           "gather_rows", "scatter_decode_token", "scatter_row_range"]

@@ -1,0 +1,225 @@
+"""Ref-counted, chunk-shared GPU block pool for materialized KV pages.
+
+The serving path before this subsystem reused chunk KVs only on *flash*:
+every in-flight request owned a private GPU copy of each retrieved chunk
+inside its ``RowAttnCache`` row, and N concurrent requests retrieving the
+same hot chunk issued N independent flash reads. The pool extends the
+paper's materialize-once/reuse-many story from flash to HBM:
+
+* KV lives in two flat device arrays ``k`` / ``v`` of shape
+  ``(L, n_blocks * block_size, KV, hd)``. Blocks of ``block_size`` token
+  slots are the allocation unit; the layer axis is folded into the block
+  tensors, so one block id covers a token range across every layer (the
+  page key is logically ``(chunk_id, layer)`` — physically all layers of a
+  token range share the id).
+* A chunk's pages are inserted once (``insert``) and shared by every row
+  that retrieved it (``acquire`` increments the refcount). ``release``
+  decrements; at zero the pages are NOT freed — they move to a reclaim
+  LRU so the next request for a hot chunk is an HBM hit with zero flash
+  bytes. The free-list reclaims LRU pages only under allocation pressure.
+* Private (copy-on-write tail) blocks for a row's prompt/decode tokens are
+  allocated with ``alloc_private`` and returned with ``free_private`` —
+  they are never shared and never enter the LRU.
+
+Host-side control plane is plain Python (deterministic, unit-testable);
+only the block tensors live on device. Single-writer discipline: the
+serving loop owns all mutations (the scheduler admits/evicts on one
+thread), so there is no lock.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PoolStats:
+    chunk_hits: int = 0        # acquire() found the chunk HBM-resident
+    chunk_misses: int = 0      # insert() had to write pages (flash was read)
+    flash_bytes_loaded: int = 0  # payload bytes behind the misses
+    reclaims: int = 0          # refcount-0 entries evicted for new pages
+    peak_used_blocks: int = 0  # allocated (incl. reclaimable LRU pages)
+    peak_pinned_blocks: int = 0  # required working set: refs>0 + private
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.chunk_hits + self.chunk_misses
+        return self.chunk_hits / total if total else 0.0
+
+
+@dataclass
+class _ChunkPages:
+    block_ids: List[int]
+    n_tokens: int
+    nbytes: int = 0            # serialized payload size (compose accounting)
+    refs: int = 0
+
+
+class PagedKvPool:
+    """Fixed-size KV block pool with ref-counted, chunk-keyed shared pages."""
+
+    def __init__(self, cfg, n_blocks: int, block_size: int = 64,
+                 n_layers: Optional[int] = None, dtype=None):
+        if n_blocks <= 0 or block_size <= 0:
+            raise ValueError("PagedKvPool: n_blocks and block_size must be "
+                             "positive")
+        self.cfg = cfg
+        self.block_size = int(block_size)
+        self.n_blocks = int(n_blocks)
+        self.n_layers = n_layers or cfg.num_layers
+        self.dtype = dtype or jnp.dtype(cfg.activation_dtype)
+        shape = (self.n_layers, self.n_blocks * self.block_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, self.dtype)
+        self.v = jnp.zeros(shape, self.dtype)
+        self.stats = PoolStats()
+        self._free: List[int] = list(range(self.n_blocks))
+        self._entries: Dict[str, _ChunkPages] = {}
+        self._lru: "OrderedDict[str, None]" = OrderedDict()  # refs == 0
+        self._pinned_blocks = 0
+
+    # -- sizing ----------------------------------------------------------------
+    @property
+    def bytes_per_block(self) -> int:
+        return (2 * self.n_layers * self.block_size * self.cfg.num_kv_heads
+                * self.cfg.head_dim * self.dtype.itemsize)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    @property
+    def resident_bytes(self) -> int:
+        """HBM KV bytes behind allocated (shared + private) blocks."""
+        return self.used_blocks * self.bytes_per_block
+
+    @property
+    def pinned_blocks(self) -> int:
+        """Blocks the pool cannot reclaim: refs>0 chunk pages + private
+        allocations. Refcount-0 LRU pages are an opportunistic hot-set cache
+        (reclaimed on demand) and don't count against required residency."""
+        return self._pinned_blocks
+
+    @property
+    def pinned_bytes(self) -> int:
+        return self._pinned_blocks * self.bytes_per_block
+
+    def _pin(self, n: int) -> None:
+        self._pinned_blocks += n
+        self.stats.peak_pinned_blocks = max(self.stats.peak_pinned_blocks,
+                                            self._pinned_blocks)
+
+    @property
+    def capacity_bytes(self) -> int:
+        return self.n_blocks * self.bytes_per_block
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    # -- allocation ------------------------------------------------------------
+    def _alloc(self, n: int) -> List[int]:
+        while len(self._free) < n and self._lru:
+            victim, _ = self._lru.popitem(last=False)
+            pages = self._entries.pop(victim)
+            self._free.extend(pages.block_ids)
+            self.stats.reclaims += 1
+        if len(self._free) < n:
+            raise RuntimeError(
+                f"PagedKvPool exhausted: need {n} blocks, "
+                f"{len(self._free)} free of {self.n_blocks} "
+                f"(pinned chunks: "
+                f"{sum(1 for e in self._entries.values() if e.refs)}); "
+                f"size the pool larger")
+        out, self._free = self._free[:n], self._free[n:]
+        self.stats.peak_used_blocks = max(self.stats.peak_used_blocks,
+                                          self.used_blocks)
+        return out
+
+    def alloc_private(self, n_slots: int) -> List[int]:
+        """Allocate private (COW-tail) blocks covering ``n_slots`` tokens."""
+        out = self._alloc(self.blocks_for(max(1, n_slots)))
+        self._pin(len(out))
+        return out
+
+    def free_private(self, block_ids: Sequence[int]) -> None:
+        self._free.extend(block_ids)
+        self._pinned_blocks -= len(block_ids)
+
+    # -- shared chunk pages ------------------------------------------------------
+    def has(self, chunk_id: str) -> bool:
+        return chunk_id in self._entries
+
+    def acquire(self, chunk_id: str) -> Optional[int]:
+        """Pin one more reference to a resident chunk; returns its token
+        count, or None if the chunk has no pages in the pool."""
+        pages = self._entries.get(chunk_id)
+        if pages is None:
+            return None
+        pages.refs += 1
+        if pages.refs == 1:                 # re-pinned out of the LRU
+            self._lru.pop(chunk_id, None)
+            self._pin(len(pages.block_ids))
+        self.stats.chunk_hits += 1
+        return pages.n_tokens
+
+    def insert(self, chunk_id: str, k_art, v_art, nbytes: int = 0) -> int:
+        """Write one chunk's KV artifact (k/v ``(L, 1, S, KV, hd)`` or
+        ``(L, S, KV, hd)``) into freshly allocated pages with refcount 1.
+        Returns the token count. The caller must have checked ``acquire``
+        first — double insert raises."""
+        if chunk_id in self._entries:
+            raise ValueError(f"pool.insert: {chunk_id!r} already resident "
+                             f"(acquire it instead)")
+        if k_art.ndim == 5:
+            k_art, v_art = k_art[:, 0], v_art[:, 0]
+        n_tokens = int(k_art.shape[1])
+        blocks = self._alloc(self.blocks_for(n_tokens))
+        slots = self.token_slot_ids(blocks, n_tokens)
+        self.k = self.k.at[:, slots].set(k_art.astype(self.dtype))
+        self.v = self.v.at[:, slots].set(v_art.astype(self.dtype))
+        self._entries[chunk_id] = _ChunkPages(block_ids=blocks,
+                                              n_tokens=n_tokens,
+                                              nbytes=nbytes, refs=1)
+        self._pin(len(blocks))
+        self.stats.chunk_misses += 1
+        self.stats.flash_bytes_loaded += nbytes
+        return n_tokens
+
+    def release(self, chunk_id: str) -> None:
+        """Drop one reference. At zero the pages stay resident (HBM cache of
+        the hot set) but become reclaimable, LRU-first."""
+        pages = self._entries.get(chunk_id)
+        if pages is None or pages.refs <= 0:
+            raise ValueError(f"pool.release: {chunk_id!r} not acquired")
+        pages.refs -= 1
+        if pages.refs == 0:
+            self._lru[chunk_id] = None
+            self._lru.move_to_end(chunk_id)
+            self._pinned_blocks -= len(pages.block_ids)
+
+    def refcount(self, chunk_id: str) -> int:
+        pages = self._entries.get(chunk_id)
+        return pages.refs if pages is not None else 0
+
+    # -- slot arithmetic -----------------------------------------------------------
+    def token_slot_ids(self, block_ids: Sequence[int],
+                       n_tokens: int) -> np.ndarray:
+        """Flat pool-slot index of each of the first ``n_tokens`` token slots
+        covered by ``block_ids`` (partial final block: trailing slots of the
+        last block are simply never referenced)."""
+        base = np.repeat(np.asarray(block_ids, np.int64), self.block_size)
+        off = np.tile(np.arange(self.block_size, dtype=np.int64),
+                      len(block_ids))
+        return (base * self.block_size + off)[:n_tokens].astype(np.int32)
+
+    def chunk_slot_ids(self, chunk_id: str) -> np.ndarray:
+        pages = self._entries[chunk_id]
+        return self.token_slot_ids(pages.block_ids, pages.n_tokens)
+
+    def chunk_payload_bytes(self, chunk_id: str) -> int:
+        return self._entries[chunk_id].nbytes

@@ -1,0 +1,168 @@
+"""Page-table serving runtime: per-row gather tables over the block pool.
+
+``PagedRowCache`` replaces the dense per-slot ``RowAttnCache`` of the
+continuous scheduler with page-table indirection: each decode slot carries a
+*gather table* ``gather_idx (B, S_buf) int32`` mapping the row's dense
+(logical) slot ``s`` to a flat pool slot. Slots ``[0, n_doc)`` map into the
+shared, ref-counted chunk pages (one HBM copy per chunk, pool-wide); slots
+``[n_doc, ...)`` map into the row's private copy-on-write tail blocks where
+its prompt and generated tokens land.
+
+The decode step is gather → step → scatter:
+
+1. ``gather_rows`` materializes the dense ``RowAttnCache`` *view* of the
+   page table (a device temporary; persistent HBM holds one copy per chunk).
+   Because the gather compacts each row's valid tokens in retrieval order,
+   the view is value-identical to what the row-slotted path would hold —
+   the engine then runs the **same jitted ``decode_step_rows`` executable**
+   on it, which is what makes paged answers bit-identical to the
+   ``RowAttnCache`` path by construction.
+2. ``scatter_decode_token`` writes the step's new K/V (one token per row,
+   at each row's ``length % S_buf`` dense slot) back through the gather
+   table into that row's private tail block. Active rows always land in
+   their own tail; retired rows are remapped to a per-slot scratch block
+   (``scratch_row``) so their dummy decode steps can never touch pages a
+   live request shares.
+
+Sharing chunk pages requires chunk K content to be position-independent,
+i.e. the paper-faithful restarted-positions mode (``rerotate=False``); the
+engine gates paged mode on it.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cache import RowAttnCache
+from repro.paged.pool import PagedKvPool
+
+
+@dataclass
+class RowPages:
+    """Host-side page-table handle for one decode slot."""
+    chunk_refs: List[str] = field(default_factory=list)  # one entry per ref
+    private_blocks: List[int] = field(default_factory=list)
+    n_doc: int = 0
+    tail_slots: Optional[np.ndarray] = None  # pool slots of the private tail
+
+
+class PagedRowCache:
+    """Page-table decode state for ``max_slots`` rows over one shared pool.
+
+    Device state mirrors ``RowAttnCache`` exactly (``slot_pos (B, S_buf)``,
+    ``length (B,)``) plus the gather table; KV bytes live in ``pool.k/v``
+    only. Host state tracks each slot's page handle for release.
+    """
+
+    def __init__(self, pool: PagedKvPool, max_slots: int, buf_size: int):
+        self.pool = pool
+        self.max_slots = max_slots
+        self.buf_size = buf_size
+        self.rows: List[RowPages] = [RowPages() for _ in range(max_slots)]
+        # one permanent scratch block, shared by every slot: the write
+        # target for dummy decode steps into stale (retired) rows. Stale
+        # rows racing on one slot is fine — the values are garbage either
+        # way and are masked by each row's slot_pos; what matters is that
+        # stale writes can never land in pages a live request uses.
+        self._scratch = pool.alloc_private(1)[0]
+        gi = np.stack([self.scratch_row(s) for s in range(max_slots)])
+        self.gather_idx = jnp.asarray(gi)
+        self.slot_pos = jnp.full((max_slots, buf_size), -1, jnp.int32)
+        self.length = jnp.zeros((max_slots,), jnp.int32)
+
+    def scratch_row(self, slot: int) -> np.ndarray:
+        """Gather row mapping every dense slot into the shared scratch block
+        (cyclic): reads see masked garbage, writes land in scratch."""
+        base = self._scratch * self.pool.block_size
+        return (base + np.arange(self.buf_size) % self.pool.block_size
+                ).astype(np.int32)
+
+    # -- admit / retire ----------------------------------------------------------
+    def install_row(self, slot: int, handle: RowPages,
+                    gather_row: np.ndarray) -> None:
+        self.rows[slot] = handle
+        self.gather_idx = self.gather_idx.at[slot].set(
+            jnp.asarray(gather_row))
+
+    def set_row_state(self, slot: int, slot_pos_row, length_row) -> None:
+        """Mirror ``insert_cache_row`` for the slot's position state."""
+        self.slot_pos = self.slot_pos.at[slot].set(slot_pos_row)
+        self.length = self.length.at[slot].set(length_row)
+
+    def release_row(self, slot: int) -> None:
+        """Retire a slot: decref shared chunk pages (pages another request
+        holds stay exactly where they are), free the private tail, and remap
+        the slot's writes to scratch. Position state stays stale (masked) —
+        same lifecycle as the dense row-slotted path."""
+        handle = self.rows[slot]
+        for cid in handle.chunk_refs:
+            self.pool.release(cid)
+        self.pool.free_private(handle.private_blocks)
+        self.rows[slot] = RowPages()
+        self.gather_idx = self.gather_idx.at[slot].set(
+            jnp.asarray(self.scratch_row(slot)))
+
+    # -- dense views ---------------------------------------------------------------
+    def dense_view(self) -> RowAttnCache:
+        k, v = gather_rows(self.pool.k, self.pool.v, self.gather_idx)
+        return RowAttnCache(k=k, v=v, slot_pos=self.slot_pos,
+                            length=self.length)
+
+    def dense_row_view(self, slot: int) -> RowAttnCache:
+        k, v = gather_rows(self.pool.k, self.pool.v,
+                           self.gather_idx[slot][None])
+        return RowAttnCache(k=k, v=v, slot_pos=self.slot_pos[slot][None],
+                            length=self.length[slot][None])
+
+
+# ---------------------------------------------------------------------------
+# jitted gather / scatter
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def gather_rows(pool_k, pool_v, gather_idx):
+    """(L, N_slots, KV, hd) pool + (B, S_buf) table -> (L, B, S_buf, KV, hd)
+    dense view. Table entries are taken literally (callers map padding slots
+    to private/scratch blocks, whose values are masked by slot_pos)."""
+    b, s = gather_idx.shape
+    idx = gather_idx.reshape(-1)
+    k = jnp.take(pool_k, idx, axis=1)
+    v = jnp.take(pool_v, idx, axis=1)
+    shape = (pool_k.shape[0], b, s) + pool_k.shape[2:]
+    return k.reshape(shape), v.reshape(shape)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def scatter_decode_token(pool_k, pool_v, gather_idx, prev_length,
+                         new_k, new_v):
+    """Persist one decode step's new K/V (``new_k/v (L, B, S_buf, KV, hd)``,
+    the dense buffers returned by ``decode_step_rows`` with the new token
+    written at each row's ``prev_length % S_buf``) into the pool through the
+    gather table. Rows write disjoint private slots (scratch for stale rows),
+    so the batched scatter is conflict-free."""
+    buf = gather_idx.shape[1]
+    start = (prev_length % buf).astype(jnp.int32)              # (B,)
+    k_tok = jnp.take_along_axis(
+        new_k, start[None, :, None, None, None], axis=2)[:, :, 0]
+    v_tok = jnp.take_along_axis(
+        new_v, start[None, :, None, None, None], axis=2)[:, :, 0]
+    phys = jnp.take_along_axis(gather_idx, start[:, None], axis=1)[:, 0]
+    return pool_k.at[:, phys].set(k_tok), pool_v.at[:, phys].set(v_tok)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def scatter_row_range(pool_k, pool_v, phys_idx, k_row, v_row, start):
+    """Persist a batch=1 sub-prefill's new K/V: the ``len(phys_idx)`` tokens
+    written at dense slots ``[start, start + n)`` of ``k_row/v_row
+    (L, 1, S_buf, KV, hd)`` go to pool slots ``phys_idx``."""
+    n = phys_idx.shape[0]
+    vals_k = jax.lax.dynamic_slice_in_dim(k_row[:, 0], start, n, axis=1)
+    vals_v = jax.lax.dynamic_slice_in_dim(v_row[:, 0], start, n, axis=1)
+    return (pool_k.at[:, phys_idx].set(vals_k),
+            pool_v.at[:, phys_idx].set(vals_v))

@@ -22,6 +22,17 @@ ignored, fully overwritten at the next admit) so the decode step keeps one
 compiled shape. Per-row results are bit-identical to the single-request
 ``RagEngine.answer`` path: masked slots contribute exact zeros, so a row never
 sees its neighbours or the buffer tail.
+
+``paged=True`` swaps the dense per-slot cache for the page-table runtime
+(``repro.paged``): admit/evict becomes page-table alloc/free over a
+ref-counted block pool, concurrent rows that retrieved the same chunk share
+one GPU-resident copy of its KV pages, chunks already resident (or in
+flight for an earlier queued request) at arrival read zero flash bytes, and
+cold chunks wanted by several queued requests are read from flash exactly
+once (loader dedup + the wanted registry). Eviction of one request only
+drops its own refs — co-resident requests' shared pages are untouched.
+Answers stay bit-identical to the row-slotted path (the paged step runs the
+same jitted decode executable on the gathered dense view).
 """
 
 from __future__ import annotations
@@ -42,10 +53,13 @@ from repro.serving.engine import RagEngine, RowRequest
 from repro.serving.sampling import greedy
 
 
-@dataclass
+@dataclass(eq=False)
 class RequestRecord:
     """Per-request lifecycle state + latency bookkeeping (offsets from run
-    start, seconds)."""
+    start, seconds). Identity equality (``eq=False``): two requests with the
+    same question are distinct lifecycle objects, and field equality would
+    compare the prompt ndarray (ambiguous truth value) when the pending
+    queue is searched past an identical request."""
     question: str
     max_new_tokens: int
     arrival_s: float = 0.0
@@ -56,6 +70,9 @@ class RequestRecord:
     admit_s: Optional[float] = None
     finish_s: Optional[float] = None
     n_doc_tokens: int = 0
+    flash_bytes: int = 0                   # flash bytes THIS request caused
+    to_load: List[str] = field(default_factory=list)  # paged: chunks to read
+    expected: List[str] = field(default_factory=list)  # paged: no load needed
 
     @property
     def latency_s(self) -> float:
@@ -69,8 +86,20 @@ class ServeMetrics:
     decode_s: float = 0.0
     n_requests: int = 0
     n_new_tokens: int = 0
-    kv_bytes_loaded: int = 0
+    kv_bytes_loaded: int = 0               # bytes composed into rows
     latencies_s: List[float] = field(default_factory=list)
+    # load-link accounting (fed by the paged pool's dedup stats; the
+    # row-slotted path reads every chunk per request, so there hits == 0)
+    flash_bytes_loaded: int = 0            # bytes actually read from flash
+    flash_bytes_per_request: List[int] = field(default_factory=list)
+    chunk_hits: int = 0                    # chunk already GPU-resident
+    chunk_misses: int = 0                  # chunk had to be read + inserted
+    hbm_kv_bytes_resident: int = 0         # peak KV bytes resident in HBM
+
+    @property
+    def chunk_hit_rate(self) -> float:
+        total = self.chunk_hits + self.chunk_misses
+        return self.chunk_hits / total if total else 0.0
 
     @property
     def tokens_per_s(self) -> float:
@@ -96,7 +125,9 @@ class ContinuousScheduler:
     KV loads were prefetched while earlier rows were decoding."""
 
     def __init__(self, engine: RagEngine, max_slots: int = 4,
-                 buf_size: Optional[int] = None, n_load_workers: int = 4):
+                 buf_size: Optional[int] = None, n_load_workers: int = 4,
+                 paged: bool = False, block_size: int = 64,
+                 pool_blocks: Optional[int] = None):
         if engine.cfg.family not in ("dense", "vlm", "moe"):
             raise ValueError("ContinuousScheduler requires an attention-KV "
                              "family")
@@ -105,9 +136,15 @@ class ContinuousScheduler:
             # cacheblend's selective recompute has no row-level equivalent yet
             raise ValueError("ContinuousScheduler requires a matkv-mode "
                              f"engine, got mode={engine.mode!r}")
+        if paged and engine.rerotate:
+            raise ValueError("paged=True requires rerotate=False (shared "
+                             "chunk pages must be position-independent)")
         self.engine = engine
         self.max_slots = max_slots
         self.buf_size = buf_size
+        self.paged = paged
+        self.block_size = block_size
+        self.pool_blocks = pool_blocks
         self.loader = AsyncKvLoader(engine.reader, n_workers=n_load_workers)
 
     def shutdown(self):
@@ -150,11 +187,19 @@ class ContinuousScheduler:
 
         eng = self.engine
         buf = self._buf_for(records)
-        cache = eng.model.init_row_cache(self.max_slots, buf)
+        pcache = None
+        cache = None
+        if self.paged:
+            pcache = eng.init_paged_cache(self.max_slots, buf,
+                                          block_size=self.block_size,
+                                          n_blocks=self.pool_blocks)
+        else:
+            cache = eng.model.init_row_cache(self.max_slots, buf)
         cur = np.zeros((self.max_slots,), np.int32)
         upcoming = deque(sorted(records, key=lambda r: r.arrival_s))
         pending: deque = deque()           # arrived, payloads prefetching
         active: Dict[int, RequestRecord] = {}
+        wanted: Dict[str, int] = {}        # paged: chunk -> pending loaders
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0
 
@@ -162,9 +207,34 @@ class ContinuousScheduler:
             while upcoming and upcoming[0].arrival_s <= now():
                 r = upcoming.popleft()
                 r.req = eng.prepare_request(r.question, r.max_new_tokens)
-                # start the flash reads immediately: they overlap with the
-                # decode steps below (per-request load/decode overlap)
-                r.future = self.loader.load_many(r.req.chunk_ids)
+                if self.paged:
+                    # chunks already GPU-resident, or in flight for an
+                    # earlier pending request, are *expected*: no flash read
+                    # is issued, and admit acquires the shared pages (or
+                    # falls back to a synchronous read in the rare case the
+                    # pages were reclaimed while this request queued). Only
+                    # admitted rows pin pages, so queue depth never inflates
+                    # the pinned working set; K queued requests wanting one
+                    # cold chunk still cost exactly one flash read
+                    for cid in r.req.chunk_ids:
+                        if cid in r.to_load:
+                            # within-request duplicate: this request's own
+                            # load serves both occurrences (marking it
+                            # expected would deadlock ready() on a wanted
+                            # count this request itself holds)
+                            continue
+                        if (pcache.pool.has(cid)
+                                or wanted.get(cid, 0) > 0):
+                            r.expected.append(cid)
+                        else:
+                            r.to_load.append(cid)
+                            wanted[cid] = wanted.get(cid, 0) + 1
+                    r.future = self.loader.load_many(r.to_load)
+                else:
+                    # start the flash reads immediately: they overlap with
+                    # the decode steps below (per-request load/decode
+                    # overlap)
+                    r.future = self.loader.load_many(r.req.chunk_ids)
                 pending.append(r)
 
         def finish(r: RequestRecord):
@@ -175,24 +245,47 @@ class ContinuousScheduler:
             r.finish_s = now()
             metrics.n_new_tokens += len(r.tokens)
             metrics.latencies_s.append(r.latency_s)
+            metrics.flash_bytes_per_request.append(r.flash_bytes)
 
         def admit(r: RequestRecord, slot: int) -> bool:
             """Compose + sub-prefill one row into ``slot``. Returns False if
             the request finished at its first token (slot stays free)."""
             nonlocal cache
-            r.req.payloads = r.future.result()
             t_adm = time.perf_counter()
-            row, n_doc, nbytes = eng.compose_row(r.req, buf)
-            first, row = eng.prefill_row(row, r.req.prompt)
+            if self.paged:
+                payloads = dict(zip(r.to_load, r.future.result()))
+                n_doc, flash_bytes, nbytes, hits, misses = \
+                    eng.compose_row_paged(r.req, pcache, slot, payloads)
+                for cid in r.to_load:
+                    wanted[cid] -= 1
+                first = eng.prefill_row_paged(pcache, slot, r.req.prompt)
+                metrics.chunk_hits += hits
+                metrics.chunk_misses += misses
+            else:
+                r.req.payloads = r.future.result()
+                row, n_doc, nbytes = eng.compose_row(r.req, buf)
+                first, row = eng.prefill_row(row, r.req.prompt)
+                # flash bytes are attributed to the request that initiated
+                # each read; coalesced in-flight duplicates cost 0 here
+                flags = getattr(r.future, "initiated_flags",
+                                [True] * len(r.req.payloads))
+                flash_bytes = sum(len(p) for p, owned
+                                  in zip(r.req.payloads, flags) if owned)
+                metrics.chunk_misses += len(r.req.chunk_ids)
             metrics.prefill_s += time.perf_counter() - t_adm
-            metrics.kv_bytes_loaded += nbytes
+            metrics.kv_bytes_loaded += nbytes     # composed into the row
+            metrics.flash_bytes_loaded += flash_bytes  # actually read
+            r.flash_bytes = flash_bytes
             r.n_doc_tokens = n_doc
             r.admit_s = now()
             r.tokens = [int(first[0])]
             if r.tokens[0] == EOS or r.max_new_tokens <= 1:
+                if self.paged:
+                    eng.release_row_paged(pcache, slot)
                 finish(r)
                 return False
-            cache = insert_cache_row(cache, slot, row)
+            if not self.paged:
+                cache = insert_cache_row(cache, slot, row)
             cur[slot] = r.tokens[0]
             active[slot] = r
             return True
@@ -201,13 +294,22 @@ class ContinuousScheduler:
             poll_arrivals()
             # backfill free slots with loaded requests (FIFO, skip-ahead only
             # past requests whose loads are still in flight)
+            def ready(r: RequestRecord) -> bool:
+                if not r.future.done():
+                    return False
+                # paged: a chunk another pending request is loading isn't
+                # admissible until its pages land (wanted drops to 0 once
+                # the loader admits; if the pages were since reclaimed the
+                # compose fallback reads them synchronously)
+                return all(pcache.pool.has(c) or wanted.get(c, 0) == 0
+                           for c in r.expected)
             free = [s for s in range(self.max_slots) if s not in active]
             for slot in free:
-                ready = next((r for r in pending if r.future.done()), None)
-                if ready is None:
+                ready_r = next((r for r in pending if ready(r)), None)
+                if ready_r is None:
                     break
-                pending.remove(ready)
-                admit(ready, slot)
+                pending.remove(ready_r)
+                admit(ready_r, slot)
             if not active:
                 if pending:
                     # nothing decoding: wait for the FIRST load to land (not
@@ -220,7 +322,12 @@ class ContinuousScheduler:
                         upcoming[0].arrival_s - now(), 0.01)))
                 continue
             t_dec = time.perf_counter()
-            logits, cache = eng.step_rows(cache, jnp.asarray(cur)[:, None])
+            if self.paged:
+                logits = eng.step_rows_paged(pcache,
+                                             jnp.asarray(cur)[:, None])
+            else:
+                logits, cache = eng.step_rows(cache,
+                                              jnp.asarray(cur)[:, None])
             nxt = np.asarray(greedy(logits[:, -1]))
             metrics.decode_s += time.perf_counter() - t_dec
             for slot, r in list(active.items()):
@@ -228,10 +335,24 @@ class ContinuousScheduler:
                 r.tokens.append(tok)
                 cur[slot] = tok
                 if tok == EOS or len(r.tokens) >= r.max_new_tokens:
+                    if self.paged:
+                        # eviction only drops THIS row's refs + private
+                        # tail; pages shared with co-resident rows stay put
+                        eng.release_row_paged(pcache, slot)
                     finish(r)
                     del active[slot]
 
         metrics.wall_s = now()
+        if self.paged:
+            # required working set only: refs>0 shared pages + private
+            # tails. Refcount-0 LRU pages are a reclaimable hot-set cache
+            # (the flash-read savings), not required residency.
+            pool = pcache.pool
+            metrics.hbm_kv_bytes_resident = (pool.stats.peak_pinned_blocks
+                                             * pool.bytes_per_block)
+        else:
+            metrics.hbm_kv_bytes_resident = (cache.k.nbytes
+                                             + cache.v.nbytes)
         answers = [None] * n
         for r in records:
             answers[order[id(r)]] = r.answer

@@ -50,11 +50,12 @@ class PhaseTimings:
         return self.load_s + self.prefill_s + self.decode_s
 
 
-@dataclass
+@dataclass(eq=False)
 class RowRequest:
     """One serving request in row-level form: retrieval done, KV artifacts not
     necessarily loaded yet (a prefetcher fills ``payloads`` asynchronously).
-    ``chunk_ids == []`` is a legal query-only request (empty retrieval)."""
+    ``chunk_ids == []`` is a legal query-only request (empty retrieval).
+    Identity equality: lifecycle object holding an ndarray prompt."""
     question: str
     max_new_tokens: int
     chunk_ids: List[str]
@@ -254,6 +255,150 @@ class RagEngine:
                   ) -> Tuple[jnp.ndarray, RowAttnCache]:
         """One batched decode step over the whole slot table: tokens (B,Sq)."""
         return self._row_step_fn(self.params, cache, tokens)
+
+    # -- paged row-level API (page-table serving over a shared block pool) --------------
+    #
+    # Paged counterparts of compose_row / prefill_row / step_rows. KV bytes
+    # live once in a ``PagedKvPool``: rows that retrieved the same chunk
+    # share its pages (ref-counted); only the prompt/decode tail is private.
+    # Every step gathers the dense RowAttnCache *view* through the page
+    # table and runs the SAME jitted ``_row_step_fn`` as the row-slotted
+    # path, so per-row answers are bit-identical by construction
+    # (repro.paged.runtime docstring).
+
+    def init_paged_cache(self, max_slots: int, buf_size: int,
+                         block_size: int = 64,
+                         n_blocks: Optional[int] = None):
+        """Build the pool + page-table cache for ``max_slots`` decode slots.
+
+        Paged mode requires the paper-faithful restarted-positions mode:
+        shared chunk pages must be position-independent, and ``rerotate``
+        bakes the row-specific global offset into K at compose time.
+        """
+        from repro.paged import PagedKvPool, PagedRowCache
+        if self.cfg.family not in ("dense", "vlm", "moe"):
+            raise ValueError("paged serving requires an attention-KV family, "
+                             f"got {self.cfg.family}")
+        if self.rerotate:
+            raise ValueError("paged serving requires rerotate=False: "
+                             "re-rotated keys are position-dependent and "
+                             "cannot be shared across rows")
+        if n_blocks is None:
+            per_row = -(-buf_size // block_size)
+            # scratch + private tail + worst-case unshared chunk pages
+            chunk_blocks = -(-self.chunk_tokens // block_size)
+            n_blocks = max_slots * (1 + per_row
+                                    + self.top_k * chunk_blocks) + 4
+        pool = PagedKvPool(self.cfg, n_blocks=n_blocks,
+                           block_size=block_size)
+        return PagedRowCache(pool, max_slots, buf_size)
+
+    def compose_row_paged(self, req: RowRequest, pcache, slot: int,
+                          payloads: Optional[Dict[str, bytes]] = None
+                          ) -> Tuple[int, int, int, int, int]:
+        """Install one request's page table into ``slot``: acquire (or
+        insert) each chunk's shared pages, allocate the private tail, and
+        build the gather row. ``payloads`` maps chunk_id -> serialized
+        artifact for chunks the caller prefetched; chunks in neither the
+        pool nor ``payloads`` are read synchronously (the fallback for
+        pages reclaimed while the request queued). Returns (n_doc_tokens,
+        flash_bytes_loaded, composed_bytes, chunk_hits, chunk_misses) —
+        composed_bytes counts every chunk serving the row (hits included),
+        comparable to ``compose_row``'s bytes; flash_bytes only the
+        misses actually read."""
+        from repro.paged import RowPages
+        pool = pcache.pool
+        payloads = payloads or {}
+        handle = RowPages()
+        nbytes = composed = hits = misses = 0
+        gather = pcache.scratch_row(slot)
+        pos = 0
+        for cid in req.chunk_ids:
+            if pool.acquire(cid) is not None:
+                hits += 1
+            else:
+                payload = payloads.get(cid)
+                if payload is None:
+                    payload = self.reader.get(cid)
+                art, _ = load_artifact(self.cfg, payload)
+                pool.insert(cid, art[0], art[1], nbytes=len(payload))
+                nbytes += len(payload)
+                misses += 1
+            composed += pool.chunk_payload_bytes(cid)
+            handle.chunk_refs.append(cid)
+            slots = pool.chunk_slot_ids(cid)
+            if pos + len(slots) > pcache.buf_size:
+                raise ValueError(
+                    f"compose_row_paged: composed prefix exceeds buf_size "
+                    f"{pcache.buf_size} (the row-slotted path would wrap "
+                    f"here too — size the buffer for the worst-case row)")
+            gather[pos:pos + len(slots)] = slots
+            pos += len(slots)
+        handle.n_doc = pos
+        need = len(req.prompt) + req.max_new_tokens
+        if pos + need > pcache.buf_size:
+            # the dense path would wrap into the row's own buffer here; a
+            # paged row wrapping would scatter decode tokens into SHARED
+            # chunk pages and corrupt co-resident requests — hard error
+            raise ValueError(
+                f"compose_row_paged: prefix {pos} + prompt/decode {need} "
+                f"exceeds buf_size {pcache.buf_size}; size the buffer for "
+                f"the worst-case row")
+        tail = min(need + 4, pcache.buf_size - pos)
+        handle.private_blocks = pool.alloc_private(max(1, tail))
+        tail_slots = pool.token_slot_ids(handle.private_blocks,
+                                         min(len(handle.private_blocks)
+                                             * pool.block_size,
+                                             pcache.buf_size - pos))
+        handle.tail_slots = tail_slots
+        gather[pos:pos + len(tail_slots)] = tail_slots
+        pcache.install_row(slot, handle, gather)
+        # position state mirrors compose_attn_cache_rows exactly: composed
+        # prefix at slots [0, n_doc), -1 padding, per-row length
+        spos = np.full((pcache.buf_size,), -1, np.int32)
+        spos[:pos] = np.arange(pos, dtype=np.int32)
+        pcache.set_row_state(slot, jnp.asarray(spos),
+                             jnp.asarray(pos, jnp.int32))
+        return pos, nbytes, composed, hits, misses
+
+    def prefill_row_paged(self, pcache, slot: int, prompt: np.ndarray
+                          ) -> jnp.ndarray:
+        """Sub-prefill one admitted slot's prompt over its paged prefix
+        (batch=1): gather the dense row view, run the shared row-step fn,
+        scatter the prompt's new KV into the slot's private tail. Returns
+        the first token (1,)."""
+        from repro.paged import scatter_row_range
+        row = pcache.dense_row_view(slot)
+        n_doc = pcache.rows[slot].n_doc
+        first, row = self.prefill_row(row, prompt)
+        sq = len(prompt)
+        # host-side tail map from compose time — no device round-trip
+        phys = jnp.asarray(pcache.rows[slot].tail_slots[:sq])
+        pool = pcache.pool
+        pool.k, pool.v = scatter_row_range(pool.k, pool.v, phys,
+                                           row.k, row.v,
+                                           jnp.asarray(n_doc, jnp.int32))
+        pcache.set_row_state(slot, row.slot_pos[0], row.length[0])
+        return first
+
+    def step_rows_paged(self, pcache, tokens: jnp.ndarray) -> jnp.ndarray:
+        """One batched decode step over the whole paged slot table:
+        gather -> (shared) step_rows -> scatter. Returns logits (B,Sq,V)."""
+        from repro.paged import scatter_decode_token
+        cache = pcache.dense_view()
+        prev_len = cache.length
+        logits, new_cache = self.step_rows(cache, tokens)
+        pool = pcache.pool
+        pool.k, pool.v = scatter_decode_token(
+            pool.k, pool.v, pcache.gather_idx, prev_len,
+            new_cache.k, new_cache.v)
+        pcache.slot_pos = new_cache.slot_pos
+        pcache.length = new_cache.length
+        return logits
+
+    def release_row_paged(self, pcache, slot: int) -> None:
+        """Retire a slot: decref shared pages, free the private tail."""
+        pcache.release_row(slot)
 
     # -- request paths -----------------------------------------------------------------
     def answer(self, question: str, max_new_tokens: int = 20,

@@ -11,8 +11,9 @@ from repro.kernels.chunked_decode import chunked_decode
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.kv_dequant import kv_dequant
 from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.paged_decode import paged_decode
 from repro.kernels.ops import (chunked_decode_op, flash_prefill_op,
-                               kv_dequant_op, mamba_scan_op)
+                               kv_dequant_op, mamba_scan_op, paged_decode_op)
 
 TOLS = {jnp.float32: dict(rtol=3e-5, atol=3e-5),
         jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
@@ -64,6 +65,93 @@ def test_chunked_decode_sweep(rng_key, b, h, kv, s, hd, clen, win, dtype):
     expect = ref.chunked_decode_ref(q, k, v, clen, window=win)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32), **TOLS[dtype])
+
+
+@pytest.mark.parametrize("b,h,kv,hd,block,n_pool,n_max", [
+    (2, 8, 2, 64, 128, 10, 4),
+    (1, 4, 4, 32, 64, 6, 3),    # MHA
+    (2, 4, 1, 128, 128, 8, 2),  # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_sweep(rng_key, b, h, kv, hd, block, n_pool, n_max,
+                            dtype):
+    """Page-table decode vs the oracle: shared blocks (rows referencing the
+    same pool pages), ragged interior blocks, and empty trailing blocks."""
+    ks = jax.random.split(rng_key, 4)
+    q = jax.random.normal(ks[0], (b, h, hd), dtype)
+    k_pool = jax.random.normal(ks[1], (n_pool, kv, block, hd), dtype)
+    v_pool = jax.random.normal(ks[2], (n_pool, kv, block, hd), dtype)
+    # every row shares block 1 (the "hot chunk"), with a ragged length mid-row
+    tbl = np.zeros((b, n_max), np.int32)
+    lens = np.zeros((b, n_max), np.int32)
+    rng = np.random.default_rng(0)
+    for i in range(b):
+        tbl[i] = rng.permutation(n_pool)[:n_max]
+        tbl[i, 0] = 1
+        lens[i, 0] = block
+        if n_max > 1:
+            lens[i, 1] = block // 2          # ragged interior chunk tail
+        if n_max > 2:
+            lens[i, 2] = block               # full block after the ragged one
+    out = paged_decode(q, k_pool, v_pool, jnp.asarray(tbl), jnp.asarray(lens))
+    expect = ref.paged_decode_ref(q, k_pool, v_pool, jnp.asarray(tbl),
+                                  jnp.asarray(lens))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOLS[dtype])
+
+
+def test_paged_decode_bit_identical_to_chunked_decode(rng_key):
+    """On a block-aligned layout (full blocks then a partial tail — a dense
+    composed cache viewed through a page table) the paged kernel must agree
+    with ``chunked_decode`` bit-for-bit: same per-block op sequence, same
+    running-softmax state."""
+    b, h, kv, hd, block, n_pool, n_max = 2, 8, 2, 64, 128, 10, 4
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    k_pool = jax.random.normal(ks[1], (n_pool, kv, block, hd))
+    v_pool = jax.random.normal(ks[2], (n_pool, kv, block, hd))
+    tbl = jnp.asarray([[3, 1, 4, 0], [7, 2, 0, 0]], jnp.int32)
+    lens = jnp.asarray([[block, block, 44, 0], [block, 77, 0, 0]], jnp.int32)
+    out = paged_decode(q, k_pool, v_pool, tbl, lens)
+    for i in range(b):
+        dense_k = k_pool[tbl[i]].transpose(1, 0, 2, 3).reshape(
+            1, kv, n_max * block, hd)
+        dense_v = v_pool[tbl[i]].transpose(1, 0, 2, 3).reshape(
+            1, kv, n_max * block, hd)
+        out_c = chunked_decode(q[i:i + 1], dense_k, dense_v,
+                               int(lens[i].sum()), block_k=block)
+        np.testing.assert_array_equal(np.asarray(out[i:i + 1]),
+                                      np.asarray(out_c))
+
+
+def test_paged_decode_fully_masked_row_outputs_zeros(rng_key):
+    """A padding row (all block_lens 0) attends to nothing: both kernel and
+    oracle must emit exact zeros, not the mean of the gathered garbage V."""
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (2, 4, 32))
+    k_pool = jax.random.normal(ks[1], (4, 2, 64, 32))
+    v_pool = jax.random.normal(ks[2], (4, 2, 64, 32))
+    tbl = jnp.asarray([[1, 2], [0, 0]], jnp.int32)
+    lens = jnp.asarray([[64, 7], [0, 0]], jnp.int32)   # row 1 fully masked
+    out = paged_decode(q, k_pool, v_pool, tbl, lens)
+    expect = ref.paged_decode_ref(q, k_pool, v_pool, tbl, lens)
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+    np.testing.assert_array_equal(np.asarray(expect[1]), 0.0)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(expect[0]),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_decode_op_model_layout(rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32))
+    k_pool = jax.random.normal(ks[1], (6, 2, 64, 32))
+    v_pool = jax.random.normal(ks[2], (6, 2, 64, 32))
+    tbl = jnp.asarray([[0, 3], [5, 0]], jnp.int32)
+    lens = jnp.asarray([[64, 10], [30, 0]], jnp.int32)
+    out = paged_decode_op(q, k_pool, v_pool, tbl, lens, interpret=True)
+    expect = ref.paged_decode_ref(q[:, 0], k_pool, v_pool, tbl, lens)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
 
 
 @pytest.mark.parametrize("n,hd", [(256, 64), (512, 128), (1024, 32)])

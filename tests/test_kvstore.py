@@ -253,3 +253,47 @@ def test_prefetch_pipeline_overlaps():
     i_load2 = events.index(("load_start", 2))
     i_consume1 = events.index(("consume", 1))
     assert i_load2 < i_consume1, events
+
+
+def test_async_loader_coalesces_duplicate_inflight_loads():
+    """Two concurrent load_many calls (or two requests in one batch) asking
+    for the same chunk_id must share one future / one flash read instead of
+    issuing independent reads."""
+    gate = threading.Event()
+    reads = []
+
+    class CountingReader:
+        def get(self, cid):
+            reads.append(cid)
+            gate.wait(timeout=5)             # keep the read in flight
+            return cid.encode()
+
+    loader = AsyncKvLoader(CountingReader(), n_workers=4)
+    f1 = loader.load_many(["a", "b", "a"])   # duplicate inside one batch
+    f2 = loader.load_many(["a", "b"])        # duplicates across batches
+    f3 = loader.load("a")
+    time.sleep(0.05)                         # let the workers pick them up
+    gate.set()
+    assert f1.result(timeout=5) == [b"a", b"b", b"a"]
+    assert f2.result(timeout=5) == [b"a", b"b"]
+    assert f3.result(timeout=5) == b"a"
+    assert sorted(reads) == ["a", "b"]       # exactly one read per chunk
+    loader.shutdown()
+
+
+def test_async_loader_dedup_is_inflight_only():
+    """The coalescing registry tracks in-flight reads only — once a load
+    completes, a later load for the same chunk issues a fresh read (the
+    paged pool, not the loader, owns persistent reuse)."""
+    reads = []
+
+    class CountingReader:
+        def get(self, cid):
+            reads.append(cid)
+            return cid.encode()
+
+    loader = AsyncKvLoader(CountingReader(), n_workers=2)
+    assert loader.load("a").result(timeout=5) == b"a"
+    assert loader.load("a").result(timeout=5) == b"a"
+    assert reads == ["a", "a"]
+    loader.shutdown()

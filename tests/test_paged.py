@@ -1,0 +1,290 @@
+"""Paged KV subsystem: pool refcount lifecycle, page-table parity with the
+row-slotted continuous path, eviction isolation, and load dedup.
+
+Parity tests reuse the CORPUS/QUESTIONS shape of test_serving_continuous so
+paged answers are compared against the same single-request references.
+"""
+
+import tempfile
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tokenizer import EOS
+from repro.kvstore import FlashKVStore
+from repro.models import build_model
+from repro.models.cache import insert_cache_row
+from repro.paged import PagedKvPool
+from repro.serving import ContinuousScheduler, RagEngine
+from repro.serving.sampling import greedy
+
+CORPUS = {
+    "d1": "the amber gate stands in hall nine beyond the long stair. " * 4,
+    "d2": "the cedar door opens with a brass song at dusk hour. " * 4,
+    "d3": "the brass lamp hums beside the tall window all night. " * 4,
+}
+QUESTIONS = ["where is the amber gate?", "where is the cedar door?",
+             "where is the brass lamp?"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-135m").reduced(vocab_size=300)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    return cfg, model, params
+
+
+def _engine(model, params, store, **kw):
+    kw.setdefault("top_k", 2)
+    eng = RagEngine(model, params, store, chunk_tokens=48, **kw)
+    for d, text in CORPUS.items():
+        eng.ingest(d, text)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# pool: refcounts, reclaim, slot arithmetic
+# ---------------------------------------------------------------------------
+
+def _art(cfg, n_tokens, seed=0):
+    shape = (cfg.num_layers, 1, n_tokens, cfg.num_kv_heads, cfg.head_dim)
+    k = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    return k, k + 1.0
+
+
+def test_pool_refcount_lifecycle(setup):
+    cfg, _, _ = setup
+    pool = PagedKvPool(cfg, n_blocks=8, block_size=16)
+    k, v = _art(cfg, 20)
+    assert pool.acquire("c0") is None
+    assert pool.insert("c0", k, v, nbytes=123) == 20
+    assert pool.refcount("c0") == 1 and pool.used_blocks == 2
+    assert pool.acquire("c0") == 20          # second sharer
+    assert pool.refcount("c0") == 2
+    pool.release("c0")
+    assert pool.refcount("c0") == 1          # zero ONLY after the last row
+    pool.release("c0")
+    assert pool.refcount("c0") == 0
+    assert pool.has("c0")                    # stays resident (HBM cache)
+    assert pool.acquire("c0") == 20          # re-pin without a flash read
+    assert pool.stats.chunk_hits == 2 and pool.stats.chunk_misses == 1
+    assert pool.stats.flash_bytes_loaded == 123
+    with pytest.raises(ValueError):
+        pool.insert("c0", k, v)              # double insert is a bug
+    pool.release("c0")
+    with pytest.raises(ValueError):
+        pool.release("c0")                   # over-release is a bug
+
+
+def test_pool_reclaims_unreferenced_pages_under_pressure(setup):
+    cfg, _, _ = setup
+    pool = PagedKvPool(cfg, n_blocks=4, block_size=16)
+    k, v = _art(cfg, 32)
+    pool.insert("cold", k, v)
+    pool.release("cold")                     # refs 0 -> reclaimable
+    pool.insert("pinned", k, v)              # fills the pool
+    assert pool.has("cold")
+    blocks = pool.alloc_private(20)          # needs 2 -> must reclaim "cold"
+    assert not pool.has("cold") and pool.stats.reclaims == 1
+    pool.free_private(blocks)
+    # pinned pages are never reclaimed: exhaustion raises instead
+    pool.alloc_private(32)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc_private(16)
+
+
+def test_pool_partial_block_slot_ids(setup):
+    cfg, _, _ = setup
+    pool = PagedKvPool(cfg, n_blocks=8, block_size=16)
+    k, v = _art(cfg, 20)                     # 16 + 4 -> ragged final block
+    pool.insert("rag", k, v)
+    slots = pool.chunk_slot_ids("rag")
+    assert len(slots) == 20                  # only valid tokens are mapped
+    b0, b1 = pool._entries["rag"].block_ids
+    expect = np.concatenate([b0 * 16 + np.arange(16), b1 * 16 + np.arange(4)])
+    np.testing.assert_array_equal(slots, expect)
+    np.testing.assert_array_equal(
+        np.asarray(pool.k[:, slots].astype(jnp.float32)),
+        np.asarray(k[:, 0].astype(pool.dtype).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# parity: paged continuous serving == single-request references
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_row_slotted_mixed_workload(setup):
+    """Mixed top_k / ragged final chunk / empty retrieval rows under
+    paged=True match their single-request answers (the acceptance bar)."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng = _engine(model, params, store, mode="matkv")
+        tail_cids = eng.ingest(
+            "tail", "the zinc helm waits under the ninth arch today.  "
+                    "only the zinc helm.")       # ragged final chunk
+        orig = eng.retrieve
+        eng.retrieve = lambda q: (
+            [] if "nothing" in q
+            else list(tail_cids)[:1] if "zinc" in q     # top_k == 1 row
+            else orig(q))
+        qs = ["where is the zinc helm today?", QUESTIONS[0],
+              "where is nothing here??", QUESTIONS[1]]
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", UserWarning)
+            refs = [eng.answer(q, max_new_tokens=5)[0] for q in qs]
+            cont = ContinuousScheduler(eng, max_slots=2, paged=True,
+                                       block_size=32)
+            ans, m = cont.run(qs, max_new_tokens=5)
+            cont.shutdown()
+        assert ans == refs
+        assert m.hbm_kv_bytes_resident > 0
+
+
+def test_paged_step_logits_bit_identical_to_row_slotted(setup):
+    """The paged gather->step->scatter pipeline runs the SAME jitted decode
+    executable as the dense path — logits agree bit-for-bit, not just to
+    tolerance."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        buf = 192
+        reqs = [eng.prepare_request(q, 8) for q in QUESTIONS[:2]]
+
+        cache = eng.model.init_row_cache(2, buf)
+        pcache = eng.init_paged_cache(2, buf, block_size=32)
+        toks = np.zeros((2,), np.int32)
+        for slot, req in enumerate(reqs):
+            row, _, _ = eng.compose_row(req, buf)
+            first, row = eng.prefill_row(row, req.prompt)
+            cache = insert_cache_row(cache, slot, row)
+
+            eng.compose_row_paged(req, pcache, slot)
+            first_p = eng.prefill_row_paged(pcache, slot, req.prompt)
+            np.testing.assert_array_equal(np.asarray(first),
+                                          np.asarray(first_p))
+            toks[slot] = int(first[0])
+        for _ in range(4):
+            t = jnp.asarray(toks)[:, None]
+            logits, cache = eng.step_rows(cache, t)
+            logits_p = eng.step_rows_paged(pcache, t)
+            np.testing.assert_array_equal(np.asarray(logits),
+                                          np.asarray(logits_p))
+            toks = np.asarray(greedy(logits[:, -1]))
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: shared refcounts, eviction isolation, load dedup
+# ---------------------------------------------------------------------------
+
+def test_shared_chunk_refs_drop_only_when_last_row_retires(setup):
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        buf = 192
+        pcache = eng.init_paged_cache(2, buf, block_size=32)
+        req0 = eng.prepare_request(QUESTIONS[0], 8)
+        req1 = eng.prepare_request(QUESTIONS[0], 8)   # same retrieval
+        assert req0.chunk_ids == req1.chunk_ids and req0.chunk_ids
+        eng.compose_row_paged(req0, pcache, 0)
+        eng.compose_row_paged(req1, pcache, 1)
+        cid = req0.chunk_ids[0]
+        assert pcache.pool.refcount(cid) == 2
+        assert pcache.pool.stats.chunk_misses == len(set(req0.chunk_ids))
+        eng.release_row_paged(pcache, 0)
+        assert pcache.pool.refcount(cid) == 1         # still pinned by row 1
+        assert pcache.pool.has(cid)
+        eng.release_row_paged(pcache, 1)
+        assert pcache.pool.refcount(cid) == 0         # last sharer retired
+        assert pcache.pool.has(cid)                   # cached, reclaimable
+
+
+def test_evicting_one_request_never_corrupts_coresident_rows(setup):
+    """Retire row 0 mid-decode and recycle its slot with a new request
+    (forcing its freed private blocks to be reused) — the co-resident row 1,
+    which shares chunk pages with the evicted row, must keep decoding the
+    exact single-request token stream."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        buf = 192
+        # reference stream for row 1's question
+        ref, _ = eng.answer(QUESTIONS[0], max_new_tokens=8)
+
+        pcache = eng.init_paged_cache(2, buf, block_size=32)
+        req0 = eng.prepare_request(QUESTIONS[0], 8)   # same chunks as row 1
+        req1 = eng.prepare_request(QUESTIONS[0], 8)
+        eng.compose_row_paged(req0, pcache, 0)
+        eng.compose_row_paged(req1, pcache, 1)
+        f0 = eng.prefill_row_paged(pcache, 0, req0.prompt)
+        f1 = eng.prefill_row_paged(pcache, 1, req1.prompt)
+        toks = np.asarray([int(f0[0]), int(f1[0])], np.int32)
+        stream1 = [int(f1[0])]
+        for step in range(7):
+            if step == 2:
+                # evict row 0; its private tail blocks return to the free
+                # list and are immediately recycled by a new admit
+                eng.release_row_paged(pcache, 0)
+                req2 = eng.prepare_request(QUESTIONS[2], 8)
+                eng.compose_row_paged(req2, pcache, 0)
+                f2 = eng.prefill_row_paged(pcache, 0, req2.prompt)
+                toks[0] = int(f2[0])
+            logits = eng.step_rows_paged(pcache, jnp.asarray(toks)[:, None])
+            toks = np.array(greedy(logits[:, -1]))
+            stream1.append(int(toks[1]))
+        ids = stream1
+        if EOS in ids:
+            ids = ids[:ids.index(EOS)]
+        assert eng.tok.decode(ids) == ref
+
+
+def test_paged_duplicate_chunk_ids_in_one_request(setup):
+    """A retriever returning the same chunk twice must not deadlock the
+    paged arrival path (the second occurrence used to be marked 'expected'
+    behind a wanted count the request itself held) — and the duplicate
+    occupies two refs / one set of pages."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng = _engine(model, params, store, mode="matkv")
+        cid = eng.retrieve(QUESTIONS[0])[0]
+        orig = eng.retrieve
+        eng.retrieve = lambda q: [cid, cid]
+        try:
+            ref, _ = eng.answer(QUESTIONS[0], max_new_tokens=4)
+            gets0 = store.stats.gets
+            cont = ContinuousScheduler(eng, max_slots=2, paged=True,
+                                       block_size=32)
+            ans, m = cont.run([QUESTIONS[0]], max_new_tokens=4)
+            cont.shutdown()
+        finally:
+            eng.retrieve = orig
+        assert ans == [ref]
+        assert store.stats.gets - gets0 == 1     # one read serves both
+        assert m.chunk_hits == 1 and m.chunk_misses == 1
+
+
+def test_paged_run_reads_each_hot_chunk_once(setup):
+    """N concurrent requests for the same hot chunks: one flash read and one
+    GPU copy per chunk, not one per request."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng = _engine(model, params, store, mode="matkv")
+        qs = [QUESTIONS[0]] * 6                       # all-hot workload
+        refs = [eng.answer(q, max_new_tokens=4)[0] for q in qs]
+        n_unique = len(set(eng.retrieve(qs[0])))
+        gets0 = store.stats.gets
+        cont = ContinuousScheduler(eng, max_slots=3, paged=True,
+                                   block_size=32)
+        ans, m = cont.run(qs, max_new_tokens=4)
+        cont.shutdown()
+        assert ans == refs
+        assert store.stats.gets - gets0 == n_unique
+        assert m.chunk_misses == n_unique
+        assert m.chunk_hits == (6 - 1) * n_unique
+        assert m.flash_bytes_per_request.count(0) == 5

@@ -142,3 +142,27 @@ def test_zipf_workload_hit_rate_improves_with_cost_aware():
     cost = run(CostAwarePolicy)
     assert lru > 0.3                            # skew makes caching worthwhile
     assert cost >= lru - 0.05                   # cost-aware not worse
+
+
+def test_ten_day_admission_injectable_clock():
+    """Standalone use without explicit timestamps runs on the injected
+    now_fn — admission decisions are deterministic, no sleeps."""
+    gpu = GpuSpec("toy", 1.0, 1.0, prefill_tokens_per_s=1.0,
+                  decode_tokens_per_s=1.0)
+    ssd = SsdSpec("toy", 1e-3, 1.0, 1.0)
+    clock = Clock()
+    adm = TenDayAdmission(gpu, ssd, kv_bytes_per_token=1_000_000,
+                          now_fn=clock)
+    assert not adm.on_access("a")               # cold start at t=0
+    clock.t = adm.break_even_s * 0.5
+    assert adm.on_access("a")                   # re-access inside T
+    clock.t = adm.break_even_s * 10
+    assert not adm.on_access("a")               # interval stretched past T
+    # TieredStore threads its own clock through as the explicit timestamp
+    store_clock = Clock()
+    ts = TieredStore(MemStore(), 1000,
+                     admission=TenDayAdmission(gpu, ssd, 1_000_000),
+                     now_fn=store_clock)
+    assert not ts.offer("x", b"kv")
+    store_clock.t = 1.0
+    assert ts.offer("x", b"kv")
