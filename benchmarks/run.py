@@ -28,6 +28,7 @@ SUITES = {
     "fig6_batching": "benchmarks.bench_batching",
     "continuous_batching": "benchmarks.bench_continuous",
     "paged_sharing": "benchmarks.bench_paged_sharing",
+    "quant_residency": "benchmarks.bench_quant_residency",
     "fig7_overlap": "benchmarks.bench_overlap",
     "table45_power": "benchmarks.bench_power",
     "fig8_lengths": "benchmarks.bench_lengths",

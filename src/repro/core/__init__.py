@@ -6,13 +6,19 @@ from repro.core.compose import (compose_attn_cache, compose_encdec_cache,
                                 compose_hybrid_cache, compose_ssm_cache)
 from repro.core.economics import (H100, PM9A3, RAID0_9100_PRO_X4, RTX4090,
                                   SAMSUNG_9100_PRO, break_even_interval_days)
-from repro.core.materialize import Materializer, load_artifact
-from repro.core.quantize import dequantize_kv, quantize_kv
+from repro.core.materialize import (Materializer, load_artifact,
+                                    load_artifact_encoded)
+from repro.core.quantize import (Bf16Codec, EncodedKV, Int8Codec, KvCodec,
+                                 codec_for_meta, dequantize_kv, get_codec,
+                                 quantize_kv)
 
 __all__ = [
     "Chunk", "chunk_corpus", "chunk_document",
     "compose_attn_cache", "compose_encdec_cache", "compose_hybrid_cache",
     "compose_ssm_cache", "Materializer", "load_artifact",
+    "load_artifact_encoded",
+    "KvCodec", "Bf16Codec", "Int8Codec", "EncodedKV", "get_codec",
+    "codec_for_meta",
     "quantize_kv", "dequantize_kv", "break_even_interval_days",
     "H100", "RTX4090", "SAMSUNG_9100_PRO", "RAID0_9100_PRO_X4", "PM9A3",
 ]

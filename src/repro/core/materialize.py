@@ -5,21 +5,30 @@ time), serializes the per-layer KV stacks (or recurrent states / cross-KV,
 per family) and persists them in the flash store keyed by chunk_id. Prefill is
 jitted per padded length bucket so ragged chunks don't trigger recompiles.
 
-Artifacts may be stored quantized (int8 + f16 scales, DESIGN.md §9), halving
-both the flash footprint and the load bytes.
+The storage width of an artifact is owned by a ``KvCodec`` (DESIGN.md §11):
+the materializer encodes KV tensors with it, the serialized header carries
+its id, and the read path either widens on decode (``load_artifact``, the
+dense compose path) or hands the encoded tensors straight through
+(``load_artifact_encoded``, the paged-pool path — int8 stays int8 from flash
+to the decode step).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.chunking import Chunk
-from repro.core.quantize import dequantize_kv, quantize_kv
+from repro.core.quantize import (EncodedKV, KvCodec, codec_for_meta,
+                                 get_codec)
 from repro.kvstore.serialization import deserialize, serialize
+
+# logical tensor names the codec applies to; recurrent states (conv/h) stay
+# at full width — they are O(1) per chunk, not per-token
+KV_TENSORS = ("k", "v", "cross_k", "cross_v")
 
 
 def _bucket(n: int) -> int:
@@ -31,11 +40,12 @@ def _bucket(n: int) -> int:
 
 
 class Materializer:
-    def __init__(self, model, params, store, quantized: bool = False):
+    def __init__(self, model, params, store,
+                 codec: Union[str, KvCodec, None] = None):
         self.model = model
         self.params = params
         self.store = store
-        self.quantized = quantized
+        self.codec = get_codec(codec)
         self.cfg = model.cfg
         self._jitted = {}
 
@@ -93,7 +103,8 @@ class Materializer:
         return self._jitted[key](self.params, jnp.asarray(tokens)[None])
 
     def artifact_tensors(self, artifact) -> Dict[str, np.ndarray]:
-        """Flatten an artifact to named tensors (batch dim squeezed)."""
+        """Flatten an artifact to named tensors (batch dim squeezed), with KV
+        tensors in the codec's wire form."""
         fam = self.cfg.family
         if fam in ("dense", "vlm", "moe"):
             k, v = artifact
@@ -107,18 +118,13 @@ class Materializer:
         else:  # encdec
             ck, cv = artifact
             out = {"cross_k": ck[:, 0], "cross_v": cv[:, 0]}
-        out = {n: np.asarray(a) for n, a in out.items()}
-        if self.quantized:
-            q = {}
-            for n, a in out.items():
-                if n in ("k", "v", "cross_k", "cross_v"):
-                    qv, sc = quantize_kv(jnp.asarray(a))
-                    q[n + ".q8"] = np.asarray(qv)
-                    q[n + ".scale"] = np.asarray(sc)
-                else:
-                    q[n] = a
-            out = q
-        return out
+        encoded = {}
+        for n, a in out.items():
+            if n in KV_TENSORS:
+                encoded.update(self.codec.encode_named(n, a))
+            else:
+                encoded[n] = np.asarray(a)
+        return encoded
 
     def ingest(self, chunk: Chunk) -> int:
         """Materialize one chunk; returns stored payload size in bytes."""
@@ -129,7 +135,7 @@ class Materializer:
         tensors = self.artifact_tensors(artifact)
         meta = {"arch": self.cfg.name, "family": self.cfg.family,
                 "n_tokens": len(chunk), "chunk_id": chunk.chunk_id,
-                "doc_id": chunk.doc_id, "quantized": self.quantized}
+                "doc_id": chunk.doc_id, "codec": self.codec.codec_id}
         payload = serialize(tensors, meta)
         self.store.put(chunk.chunk_id, payload)
         return len(payload)
@@ -141,15 +147,18 @@ class Materializer:
 # -- read path ----------------------------------------------------------------
 
 def load_artifact(cfg, payload: bytes, dtype=None):
-    """bytes -> (family artifact with batch dim restored, meta)."""
+    """bytes -> (family artifact with batch dim restored, meta).
+
+    The *widening* read path: KV tensors are decoded to ``dtype`` via the
+    artifact's codec — what the dense compose paths consume. The paged pool
+    uses ``load_artifact_encoded`` instead and never widens.
+    """
     dtype = dtype or jnp.dtype(cfg.activation_dtype)
     tensors, meta = deserialize(payload)
+    codec = codec_for_meta(meta)
 
     def deq(name):
-        if name + ".q8" in tensors:
-            return dequantize_kv(jnp.asarray(tensors[name + ".q8"]),
-                                 jnp.asarray(tensors[name + ".scale"]), dtype)
-        return jnp.asarray(tensors[name]).astype(dtype)
+        return codec.decode_named(tensors, name, dtype)
 
     fam = meta["family"]
     if fam in ("dense", "vlm", "moe"):
@@ -164,3 +173,30 @@ def load_artifact(cfg, payload: bytes, dtype=None):
     else:  # encdec / audio
         art = (deq("cross_k")[:, None], deq("cross_v")[:, None])
     return art, meta
+
+
+def load_artifact_encoded(cfg, payload: bytes) -> Tuple[EncodedKV, dict]:
+    """bytes -> (EncodedKV in storage dtype, meta) — no widening.
+
+    Attention-KV families only (the paged pool's unit of storage); the
+    tensors keep the artifact codec's representation, so an int8 artifact
+    flows from flash into int8 pool pages without ever becoming bf16.
+    """
+    tensors, meta = deserialize(payload)
+    codec = codec_for_meta(meta)
+    fam = meta["family"]
+    if fam in ("dense", "vlm", "moe"):
+        kn, vn = "k", "v"
+    elif fam in ("encdec", "audio"):
+        kn, vn = "cross_k", "cross_v"
+    else:
+        raise ValueError(f"load_artifact_encoded: family {fam!r} has no "
+                         f"attention-KV artifact")
+    if codec.scale_dtype is None:
+        k, v = tensors[kn], tensors[vn]
+        k_scale = v_scale = None
+    else:
+        k, v = tensors[kn + ".q8"], tensors[vn + ".q8"]
+        k_scale, v_scale = tensors[kn + ".scale"], tensors[vn + ".scale"]
+    return EncodedKV(codec=codec, k=k, v=v, k_scale=k_scale, v_scale=v_scale,
+                     n_tokens=int(meta["n_tokens"])), meta

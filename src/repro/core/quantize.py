@@ -1,17 +1,34 @@
-"""Int8 KV quantization for flash storage (beyond-paper extension, DESIGN.md §9).
+"""KV storage codecs: the dtype of a KV artifact, end to end (DESIGN.md §11).
 
-Symmetric per-(layer, token, head) quantization over the head_dim axis. Halves
-the bytes MatKV stores and loads versus bf16 — which doubles the ten-day-rule
-break-even interval and halves load latency. The Pallas kernel in
-``repro.kernels.kv_dequant`` performs the on-load dequantization on-chip; the
-functions here are the reference implementation and the host-side quantizer.
+MatKV's economics scale linearly with flash bytes, so the *stored* width of a
+KV artifact is a first-class system property, not a leaf feature. A
+``KvCodec`` names one storage representation and owns every conversion in and
+out of it:
+
+* ``Bf16Codec`` — passthrough: artifacts are stored at the model's activation
+  width (the paper's baseline).
+* ``Int8Codec`` — symmetric per-(layer, token, head) int8 over the head_dim
+  axis with f16 scales: ~0.52x the bytes of bf16, which halves flash
+  footprint, load bytes and PCIe traffic, and doubles the Eq.-1 break-even
+  interval.
+
+The codec is threaded through the whole KV path: ``Materializer`` encodes
+with it at ingest, the serialized header carries its id, the host cache tiers
+and loaders account *encoded* bytes, ``PagedKvPool`` stores blocks in the
+codec's layout (so a fixed HBM budget holds ~2x the chunks under int8), and
+the decode step widens on-chip — either in the fused Pallas kernel
+(``kernels.paged_decode_quant``) or in the jitted gather/dequant op
+(``paged.runtime.gather_rows_quant``). ``quantize_kv`` / ``dequantize_kv``
+remain the reference scalar math both sides must match bit-for-bit.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def quantize_kv(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -33,3 +50,149 @@ def quantization_error(x: jnp.ndarray) -> float:
     back = dequantize_kv(q, s, jnp.float32)
     denom = float(jnp.sqrt(jnp.mean(x.astype(jnp.float32) ** 2))) + 1e-12
     return float(jnp.sqrt(jnp.mean((back - x.astype(jnp.float32)) ** 2))) / denom
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EncodedKV:
+    """One chunk's attention-KV artifact in its storage representation:
+    ``k`` / ``v`` (L, S, KV, hd) in the codec's storage dtype, plus the
+    per-vector scale tensors (L, S, KV, 1) for quantizing codecs (None for
+    passthrough). This is what flows from flash into the paged pool without
+    ever being widened."""
+    codec: "KvCodec"
+    k: Any
+    v: Any
+    k_scale: Optional[Any] = None
+    v_scale: Optional[Any] = None
+    n_tokens: int = 0
+
+
+class KvCodec:
+    """One KV storage representation. Subclasses define the value/scale
+    tensors, the wire names, and the byte accounting; everything else in the
+    system dispatches through this interface instead of a boolean flag."""
+
+    codec_id: str = "?"
+    storage_dtype = None          # None -> the model's activation dtype
+    scale_dtype = None            # None -> no scale tensor
+
+    # -- array form (pool / kernels) ---------------------------------------
+    def encode(self, x) -> Tuple[Any, Optional[Any]]:
+        """float (..., hd) -> (stored values, per-vector scales or None)."""
+        raise NotImplementedError
+
+    def decode(self, values, scales, dtype=jnp.bfloat16):
+        """Stored (values, scales) -> float (..., hd) in ``dtype``."""
+        raise NotImplementedError
+
+    # -- wire form (serialization) -----------------------------------------
+    def encode_named(self, name: str, arr) -> Dict[str, np.ndarray]:
+        """One logical tensor -> the flat serialized tensors carrying it."""
+        raise NotImplementedError
+
+    def decode_named(self, tensors: Dict[str, Any], name: str,
+                     dtype=jnp.bfloat16):
+        raise NotImplementedError
+
+    def carries(self, tensors: Dict[str, Any], name: str) -> bool:
+        """Whether ``tensors`` holds ``name`` in this codec's wire form."""
+        raise NotImplementedError
+
+    # -- accounting --------------------------------------------------------
+    def bytes_per_vector(self, head_dim: int, act_itemsize: int = 2) -> int:
+        """Stored bytes of one (token, head) KV vector."""
+        raise NotImplementedError
+
+    def kv_bytes_per_token(self, cfg, act_itemsize: int = 2) -> int:
+        """Encoded flash bytes per token — the codec-aware counterpart of
+        ``ModelConfig.kv_bytes_per_token`` (the quantity Eq. 1 prices)."""
+        widened = cfg.kv_bytes_per_token(act_itemsize)
+        if widened == 0:
+            return 0
+        per_head = cfg.head_dim * act_itemsize
+        n_vectors = widened // per_head        # 2 * n_attn * num_kv_heads
+        return n_vectors * self.bytes_per_vector(cfg.head_dim, act_itemsize)
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}()"
+
+
+class Bf16Codec(KvCodec):
+    """Passthrough: store at activation width (the paper's baseline)."""
+
+    codec_id = "bf16"
+
+    def encode(self, x):
+        return x, None
+
+    def decode(self, values, scales, dtype=jnp.bfloat16):
+        return jnp.asarray(values).astype(dtype)
+
+    def encode_named(self, name, arr):
+        return {name: np.asarray(arr)}
+
+    def decode_named(self, tensors, name, dtype=jnp.bfloat16):
+        return jnp.asarray(tensors[name]).astype(dtype)
+
+    def carries(self, tensors, name):
+        return name in tensors
+
+    def bytes_per_vector(self, head_dim, act_itemsize=2):
+        return head_dim * act_itemsize
+
+
+class Int8Codec(KvCodec):
+    """Symmetric per-(layer, token, head) int8 with f16 scales."""
+
+    codec_id = "int8"
+    storage_dtype = jnp.int8
+    scale_dtype = jnp.float16
+
+    def encode(self, x):
+        return quantize_kv(jnp.asarray(x))
+
+    def decode(self, values, scales, dtype=jnp.bfloat16):
+        return dequantize_kv(jnp.asarray(values), jnp.asarray(scales), dtype)
+
+    def encode_named(self, name, arr):
+        q, s = quantize_kv(jnp.asarray(arr))
+        return {name + ".q8": np.asarray(q), name + ".scale": np.asarray(s)}
+
+    def decode_named(self, tensors, name, dtype=jnp.bfloat16):
+        return dequantize_kv(jnp.asarray(tensors[name + ".q8"]),
+                             jnp.asarray(tensors[name + ".scale"]), dtype)
+
+    def carries(self, tensors, name):
+        return name + ".q8" in tensors
+
+    def bytes_per_vector(self, head_dim, act_itemsize=2):
+        return head_dim + np.dtype(np.float16).itemsize   # int8 values + scale
+
+
+_CODECS: Dict[str, KvCodec] = {c.codec_id: c for c in (Bf16Codec(), Int8Codec())}
+
+
+def get_codec(codec: Union[str, KvCodec, None]) -> KvCodec:
+    """Resolve a codec id / instance / None (-> bf16 passthrough)."""
+    if codec is None:
+        return _CODECS["bf16"]
+    if isinstance(codec, KvCodec):
+        return codec
+    try:
+        return _CODECS[codec]
+    except KeyError:
+        raise ValueError(f"unknown KV codec {codec!r}; "
+                         f"known: {sorted(_CODECS)}") from None
+
+
+def codec_for_meta(meta: Dict[str, Any]) -> KvCodec:
+    """The codec an artifact was written with. Artifacts from before the
+    codec layer carried a ``quantized`` bool instead of a codec id."""
+    cid = meta.get("codec")
+    if cid is None:
+        cid = "int8" if meta.get("quantized") else "bf16"
+    return get_codec(cid)

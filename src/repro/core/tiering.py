@@ -61,6 +61,23 @@ class TenDayAdmission:
         self.now_fn = now_fn
         self._last_seen: Dict[str, float] = {}
 
+    @classmethod
+    def for_config(cls, cfg, codec=None, gpu: GpuSpec = H100,
+                   ssd: SsdSpec = SAMSUNG_9100_PRO,
+                   now_fn: Callable[[], float] = time.monotonic
+                   ) -> "TenDayAdmission":
+        """Admission priced at the *encoded* artifact size (DESIGN.md §11):
+        Eq. 1 trades storage cost against recompute cost per byte actually
+        written, so an int8 codec (~0.52x the bytes) stretches the
+        break-even interval — more chunks clear the bar."""
+        from repro.core.quantize import get_codec
+        per_token = get_codec(codec).kv_bytes_per_token(cfg)
+        if per_token <= 0:
+            raise ValueError(
+                f"{cfg.name} ({cfg.family}): no per-token KV to price — "
+                f"Eq. 1 admission applies to attention-KV families only")
+        return cls(gpu, ssd, kv_bytes_per_token=per_token, now_fn=now_fn)
+
     def on_access(self, chunk_id: str, now: Optional[float] = None) -> bool:
         if now is None:
             now = self.now_fn()

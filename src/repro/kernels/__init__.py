@@ -1,7 +1,8 @@
 # Pallas TPU kernels for the paper's compute hot spots, validated in
 # interpret mode against the pure-jnp oracles in ref.py.
 from repro.kernels.ops import (chunked_decode_op, flash_prefill_op,
-                               kv_dequant_op, mamba_scan_op, paged_decode_op)
+                               kv_dequant_op, mamba_scan_op, paged_decode_op,
+                               paged_decode_quant_op)
 
 __all__ = ["chunked_decode_op", "flash_prefill_op", "kv_dequant_op",
-           "mamba_scan_op", "paged_decode_op"]
+           "mamba_scan_op", "paged_decode_op", "paged_decode_quant_op"]

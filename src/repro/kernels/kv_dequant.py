@@ -26,14 +26,20 @@ def kv_dequant(q8, scale, *, out_dtype=jnp.bfloat16, block_rows: int = 256,
                interpret: bool = True):
     """q8 (N, hd) int8, scale (N, 1) f16 -> (N, hd) out_dtype.
 
-    Callers flatten (L,S,KV) into N; ops.py handles the reshape.
+    Callers flatten (L,S,KV) into N; ops.py handles the reshape. Row counts
+    that don't divide ``block_rows`` (any trimmed ragged chunk, e.g. 300
+    rows) are padded up to the block multiple and the result sliced back —
+    padded rows dequantize zeros, never touching real output rows.
     """
     n, hd = q8.shape
-    block_rows = min(block_rows, n)
-    if n % block_rows:
-        raise ValueError(f"rows {n} must divide block_rows {block_rows}")
-    grid = (n // block_rows,)
-    return pl.pallas_call(
+    block_rows = min(block_rows, max(n, 1))
+    pad = -n % block_rows
+    if pad:
+        q8 = jnp.pad(jnp.asarray(q8), ((0, pad), (0, 0)))
+        scale = jnp.pad(jnp.asarray(scale), ((0, pad), (0, 0)))
+    n_padded = n + pad
+    grid = (n_padded // block_rows,)
+    out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
@@ -41,6 +47,7 @@ def kv_dequant(q8, scale, *, out_dtype=jnp.bfloat16, block_rows: int = 256,
             pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_rows, hd), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, hd), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((n_padded, hd), out_dtype),
         interpret=interpret,
     )(q8, scale)
+    return out[:n] if pad else out

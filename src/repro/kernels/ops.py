@@ -18,6 +18,7 @@ from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.kv_dequant import kv_dequant
 from repro.kernels.mamba_scan import mamba_scan
 from repro.kernels.paged_decode import paged_decode
+from repro.kernels.paged_decode_quant import paged_decode_quant
 
 
 def _interpret_default() -> bool:
@@ -52,6 +53,19 @@ def paged_decode_op(q, k_pool, v_pool, block_tables, block_lens,
     interpret = _interpret_default() if interpret is None else interpret
     out = paged_decode(q[:, 0], k_pool, v_pool, block_tables, block_lens,
                        interpret=interpret)
+    return out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_quant_op(q, k_pool, v_pool, k_scale, v_scale, block_tables,
+                          block_lens, interpret=None):
+    """Model layout: q (B,1,H,hd) over an int8 paged pool (N,KV,block,hd)
+    with f16 per-vector scales (N,KV,block) and per-row block tables/lens
+    (B,n_max) -> (B,1,H,hd). The storage stream stays int8; the widening
+    happens in VMEM inside the kernel."""
+    interpret = _interpret_default() if interpret is None else interpret
+    out = paged_decode_quant(q[:, 0], k_pool, v_pool, k_scale, v_scale,
+                             block_tables, block_lens, interpret=interpret)
     return out[:, None]
 
 

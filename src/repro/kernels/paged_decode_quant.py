@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: single-token decode attention over *int8* pages.
+
+The quantized twin of ``paged_decode`` (DESIGN.md §11): K/V live in the
+shared block pool at storage width — int8 values ``(N, KV, block, hd)`` plus
+per-vector f16 scales ``(N, KV, block)`` — and the widening happens *inside*
+the kernel, in VMEM, one block at a time, immediately before the attention
+dot. The HBM→VMEM stream for a KV block is ``block × (hd + 2)`` bytes
+instead of ``block × 2·hd``: the DMA traffic halves along with the flash
+bytes, which is the whole point of making the codec end-to-end.
+
+Paging machinery is identical to ``paged_decode``: block tables and
+per-block valid-token counts ride in as scalar-prefetch operands
+(``pltpu.PrefetchScalarGridSpec``), grid (batch, kv_head, block) with the
+block dim innermost, and the K/V/scale BlockSpec index maps read
+``tbl[b, i]`` to DMA the right pool block. Flash-decoding running stats
+(m, l, acc) sit in VMEM scratch. The dequantized block is bit-identical to
+host ``dequantize_kv`` of the same page (same f32 multiply), so on shared
+pages the kernel sees exactly the values the dense int8 path composes —
+and ``paged_decode_quant_ref`` (kernels.ref) replays the same op sequence
+block-by-block, so kernel and oracle agree bit-for-bit (asserted in tests
+and in the quantized-residency benchmark).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, blen_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (group, hd)
+    # fused dequant in VMEM, right next to the compute: int8 values widen by
+    # their per-vector scales only here — HBM never holds wide KV
+    k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0].astype(jnp.float32)[:, None]
+    v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0].astype(jnp.float32)[:, None]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = blen_ref[bi, ki]                       # tokens valid in this block
+    off = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(off < valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.maximum(m_new, -1e29)
+    p = jnp.exp(s - m_safe)
+    alpha = jnp.exp(jnp.maximum(m_prev, -1e29) - m_safe)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_quant(q, k_pool, v_pool, k_scale, v_scale, block_tables,
+                       block_lens, *, interpret: bool = True):
+    """q (B,H,hd); int8 k/v pool (N,KV,block,hd); f16 scales (N,KV,block);
+    block_tables (B,n_max) int32 pool-block ids per row (padding rows: any
+    valid id, masked by a 0 len); block_lens (B,n_max) int32 valid tokens
+    per block -> (B,H,hd).
+
+    Each row attends over the first ``block_lens[b, i]`` tokens of block
+    ``block_tables[b, i]``, in table order — the logical concatenation of
+    its (possibly shared, possibly ragged) chunk pages plus private tail.
+    """
+    b, h, hd = q.shape
+    n, kvh, block = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    if block_tables.shape != block_lens.shape or block_tables.shape[0] != b:
+        raise ValueError(f"paged_decode_quant: tables {block_tables.shape} / "
+                         f"lens {block_lens.shape} must be (B={b}, n_max)")
+    if k_scale.shape != (n, kvh, block) or v_scale.shape != (n, kvh, block):
+        raise ValueError(f"paged_decode_quant: scales must be "
+                         f"(N={n}, KV={kvh}, block={block}), got "
+                         f"{k_scale.shape} / {v_scale.shape}")
+    group = h // kvh
+    n_max = block_tables.shape[1]
+    qg = q.reshape(b, kvh, group, hd)
+    tbl = jnp.clip(block_tables, 0, n - 1).astype(jnp.int32)
+    blens = jnp.clip(block_lens, 0, block).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, kvh, n_max),
+            in_specs=[
+                pl.BlockSpec((1, 1, group, hd),
+                             lambda bi, ci, ki, tbl, bl: (bi, ci, 0, 0)),
+                pl.BlockSpec((1, 1, block, hd),
+                             lambda bi, ci, ki, tbl, bl: (tbl[bi, ki], ci, 0, 0)),
+                pl.BlockSpec((1, 1, block, hd),
+                             lambda bi, ci, ki, tbl, bl: (tbl[bi, ki], ci, 0, 0)),
+                pl.BlockSpec((1, 1, block),
+                             lambda bi, ci, ki, tbl, bl: (tbl[bi, ki], ci, 0)),
+                pl.BlockSpec((1, 1, block),
+                             lambda bi, ci, ki, tbl, bl: (tbl[bi, ki], ci, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, hd),
+                                   lambda bi, ci, ki, tbl, bl: (bi, ci, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, group, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, blens, qg, k_pool, v_pool, k_scale, v_scale)
+    return out.reshape(b, h, hd)

@@ -86,6 +86,66 @@ def paged_decode_ref(q, k_pool, v_pool, block_tables, block_lens):
     return out.reshape(b, h, hd).astype(q.dtype)
 
 
+def paged_decode_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
+                           block_tables, block_lens):
+    """One-token decode attention over int8 pages, replaying the kernel's
+    per-block op sequence exactly.
+
+    q (B,H,hd); int8 k/v pool (N,KV,block,hd); f16 scales (N,KV,block);
+    block_tables / block_lens (B,n_max). Unlike the dense-softmax oracles,
+    this one walks blocks with the same flash-decoding running stats
+    (m, l, acc) and the same dequant-then-dot order as the kernel, so in
+    interpret mode the two agree *bit-for-bit* — the oracle pins the fused
+    dequant math, not just the attention semantics.
+
+    Compare against the **jitted** oracle (``jax.jit(paged_decode_quant_ref)``)
+    for bit-equality: under jit XLA contracts ``acc * alpha + dot(...)`` to
+    an FMA exactly as it does inside the kernel, while eager op-by-op
+    evaluation rounds the multiply separately (a 1-ulp difference). Bitwise
+    equality holds for grouped-query shapes (group > 1 — every serving
+    config here); the degenerate group == 1 GEMV lowers through a different
+    XLA path and agrees to fp tolerance instead."""
+    b, h, hd = q.shape
+    n, kv, block = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    g = h // kv
+    n_max = block_tables.shape[1]
+    tbl = jnp.clip(block_tables, 0, n - 1).astype(jnp.int32)
+    blens = jnp.clip(block_lens, 0, block).astype(jnp.int32)
+    qg = q.reshape(b, kv, g, hd)
+    scale = hd ** -0.5
+    out = []
+    for bi in range(b):
+        per_head = []
+        for ci in range(kv):
+            qf = qg[bi, ci].astype(jnp.float32)                # (g, hd)
+            m = jnp.full((g, 1), -1e30, jnp.float32)
+            l = jnp.zeros((g, 1), jnp.float32)
+            acc = jnp.zeros((g, hd), jnp.float32)
+            for ki in range(n_max):
+                blk = tbl[bi, ki]
+                k = (k_pool[blk, ci].astype(jnp.float32)
+                     * k_scale[blk, ci].astype(jnp.float32)[:, None])
+                v = (v_pool[blk, ci].astype(jnp.float32)
+                     * v_scale[blk, ci].astype(jnp.float32)[:, None])
+                s = jax.lax.dot_general(
+                    qf, k, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32) * scale
+                off = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+                s = jnp.where(off < blens[bi, ki], s, -1e30)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+                m_safe = jnp.maximum(m_new, -1e29)
+                p = jnp.exp(s - m_safe)
+                alpha = jnp.exp(jnp.maximum(m, -1e29) - m_safe)
+                l = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+                acc = acc * alpha + jax.lax.dot_general(
+                    p, v, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                m = m_new
+            per_head.append((acc / jnp.maximum(l, 1e-30)).astype(q.dtype))
+        out.append(jnp.stack(per_head))
+    return jnp.stack(out).reshape(b, h, hd)
+
+
 def kv_dequant_ref(q8, scale, dtype=jnp.bfloat16):
     """int8 (..., hd) x f16 scale (..., 1) -> dtype."""
     return (q8.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)

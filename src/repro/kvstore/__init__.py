@@ -1,9 +1,11 @@
-from repro.kvstore.async_loader import AsyncKvLoader, PrefetchPipeline
+from repro.kvstore.async_loader import (AsyncKvLoader, LoaderStats,
+                                        PrefetchPipeline)
 from repro.kvstore.cache_tier import LruBytesCache, TieredStore
-from repro.kvstore.serialization import deserialize, payload_bytes, serialize
+from repro.kvstore.serialization import (deserialize, payload_bytes,
+                                         read_meta, serialize)
 from repro.kvstore.simulated import PROFILES, SimulatedReader
 from repro.kvstore.store import FlashKVStore
 
-__all__ = ["AsyncKvLoader", "PrefetchPipeline", "LruBytesCache", "TieredStore",
-           "deserialize", "payload_bytes", "serialize", "PROFILES",
-           "SimulatedReader", "FlashKVStore"]
+__all__ = ["AsyncKvLoader", "LoaderStats", "PrefetchPipeline", "LruBytesCache",
+           "TieredStore", "deserialize", "payload_bytes", "read_meta",
+           "serialize", "PROFILES", "SimulatedReader", "FlashKVStore"]

@@ -11,8 +11,18 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import threading
+from dataclasses import dataclass
 from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
                     Sequence, Tuple)
+
+
+@dataclass
+class LoaderStats:
+    """Flash-link accounting in *encoded* bytes: payloads cross this layer
+    exactly as they sit on flash (the codec's wire form, DESIGN.md §11), so
+    these counters are the PCIe/flash traffic — never the widened size."""
+    reads: int = 0
+    bytes_loaded: int = 0
 
 
 class AsyncKvLoader:
@@ -27,6 +37,7 @@ class AsyncKvLoader:
         self.reader = reader
         self.pool = cf.ThreadPoolExecutor(max_workers=n_workers,
                                           thread_name_prefix="kvload")
+        self.stats = LoaderStats()
         self._inflight: Dict[str, "cf.Future[bytes]"] = {}
         self._inflight_lock = threading.Lock()
 
@@ -48,6 +59,11 @@ class AsyncKvLoader:
             with self._inflight_lock:
                 if self._inflight.get(chunk_id) is f:
                     del self._inflight[chunk_id]
+                if f.exception() is None:
+                    # one initiated read = one flash transfer of the
+                    # encoded payload (coalesced callers cost nothing)
+                    self.stats.reads += 1
+                    self.stats.bytes_loaded += len(f.result())
 
         fut.add_done_callback(_forget)
         return fut, True

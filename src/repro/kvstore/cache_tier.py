@@ -1,5 +1,10 @@
 """DRAM LRU cache tier in front of the flash store (paper §III-E "hierarchical
-storage"; Table III's DRAM configuration is this tier with capacity=inf)."""
+storage"; Table III's DRAM configuration is this tier with capacity=inf).
+
+Capacity is accounted in *encoded* bytes: payloads are cached exactly as
+serialized (the artifact codec's wire form, DESIGN.md §11), never widened —
+so one DRAM budget holds ~2x the chunks under the int8 codec, the same
+residency doubling the paged HBM pool gets."""
 
 from __future__ import annotations
 
@@ -50,6 +55,12 @@ class LruBytesCache:
     @property
     def size_bytes(self) -> int:
         return self._bytes
+
+    @property
+    def n_entries(self) -> int:
+        """Resident chunk count — the codec-sensitive capacity metric (a
+        fixed byte budget holds ~2x the int8 chunks vs bf16)."""
+        return len(self._data)
 
 
 class TieredStore:

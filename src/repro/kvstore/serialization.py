@@ -16,8 +16,6 @@ import numpy as np
 
 MAGIC = b"MKV1"
 
-_DTYPES = {"bfloat16": 2, "float16": 2, "float32": 4, "int8": 1, "int32": 4}
-
 
 def _np_view(arr) -> np.ndarray:
     """View any array (incl. jax bfloat16) as raw-byte-compatible numpy."""
@@ -49,12 +47,35 @@ def serialize(tensors: Dict[str, Any], meta: Dict[str, Any] | None = None) -> by
     return MAGIC + struct.pack("<I", len(header)) + header + b"".join(payloads)
 
 
-def deserialize(data: bytes) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+def _parse_header(data: bytes) -> Tuple[Dict[str, Any], int]:
+    """Parse the fixed prefix + msgpack header; returns (header, payload
+    offset). ``data`` may be just the header prefix of an artifact."""
     if data[:4] != MAGIC:
         raise ValueError("bad magic: not a MatKV artifact")
+    if len(data) < 8:
+        raise ValueError(f"truncated header: need 8 prefix bytes, "
+                         f"got {len(data)}")
     hlen = struct.unpack("<I", data[4:8])[0]
-    header = msgpack.unpackb(data[8:8 + hlen])
-    out, off = {}, 8 + hlen
+    if len(data) < 8 + hlen:
+        raise ValueError(f"truncated header: need {8 + hlen} bytes, "
+                         f"got {len(data)}")
+    return msgpack.unpackb(data[8:8 + hlen]), 8 + hlen
+
+
+def read_meta(data: bytes) -> Dict[str, Any]:
+    """Header-only inspection: the ``meta`` dict (n_tokens / codec / family /
+    ids) without touching payload bytes. ``data`` may be a prefix of the
+    artifact, as long as it covers the header — schedulers sizing admits or
+    pools can read the first few hundred bytes of a file instead of the
+    whole payload.
+    """
+    header, _ = _parse_header(data)
+    return header["meta"]
+
+
+def deserialize(data: bytes) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    header, off = _parse_header(data)
+    out = {}
     for e in header["tensors"]:
         buf = np.frombuffer(data, dtype=np.uint8, count=e["nbytes"], offset=off)
         out[e["name"]] = _restore(buf, e["dtype"], e["shape"])

@@ -8,10 +8,14 @@ consistent with vector-DB deletions. Stats feed the TCO/economics benchmarks.
 from __future__ import annotations
 
 import os
+import struct
 import threading
+import uuid
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
+
+from repro.kvstore.serialization import read_meta
 
 
 @dataclass
@@ -36,11 +40,29 @@ class FlashKVStore:
         return self.root / f"{chunk_id}.kv"
 
     def put(self, chunk_id: str, payload: bytes) -> None:
+        """Durable atomic write: unique tmp name (concurrent puts of one
+        chunk_id must not race on a shared ``<id>.tmp`` — whichever rename
+        lands last wins, and neither crashes), fsync before the rename so a
+        power cut can't leave a renamed-but-empty artifact (this repo's whole
+        premise is that flash *retains* the materialization)."""
         path = self._path(chunk_id)
-        tmp = path.with_suffix(".tmp")
-        with open(tmp, "wb") as f:
-            f.write(payload)
-        os.replace(tmp, path)
+        tmp = path.with_name(f".{path.name}.{uuid.uuid4().hex}.tmp")
+        try:
+            with open(tmp, "wb") as f:
+                f.write(payload)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            # POSIX durable rename: the directory entry itself must reach
+            # stable storage, or a power cut can forget the replace
+            dir_fd = os.open(self.root, os.O_RDONLY)
+            try:
+                os.fsync(dir_fd)
+            finally:
+                os.close(dir_fd)
+        except BaseException:
+            tmp.unlink(missing_ok=True)
+            raise
         with self._lock:
             self.stats.puts += 1
             self.stats.bytes_written += len(payload)
@@ -52,6 +74,20 @@ class FlashKVStore:
             self.stats.gets += 1
             self.stats.bytes_read += len(data)
         return data
+
+    def get_meta(self, chunk_id: str) -> Dict[str, Any]:
+        """Artifact meta (n_tokens / codec / family) from the header alone:
+        reads the 8-byte prefix + msgpack header, never the payload bytes —
+        the cheap inspection path for schedulers sizing admits or pools."""
+        with open(self._path(chunk_id), "rb") as f:
+            prefix = f.read(8)
+            if len(prefix) < 8:
+                raise ValueError(f"truncated artifact {chunk_id!r}")
+            hlen = struct.unpack("<I", prefix[4:8])[0]
+            header = f.read(hlen)
+        with self._lock:
+            self.stats.bytes_read += 8 + len(header)
+        return read_meta(prefix + header)
 
     def exists(self, chunk_id: str) -> bool:
         return self._path(chunk_id).exists()

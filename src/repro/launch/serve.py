@@ -46,6 +46,9 @@ def main() -> None:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--rerotate", action="store_true",
                     help="beyond-paper position re-rotation at compose")
+    ap.add_argument("--codec", default="bf16", choices=["bf16", "int8"],
+                    help="KV storage codec, end to end (DESIGN.md §11): "
+                         "int8 halves flash bytes and doubles pool residency")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -68,7 +71,7 @@ def main() -> None:
         reader = SimulatedReader(store, args.ssd) if args.ssd else None
         eng = RagEngine(model, params, store, mode=args.mode,
                         chunk_tokens=64, top_k=2, reader=reader,
-                        rerotate=args.rerotate)
+                        rerotate=args.rerotate, codec=args.codec)
         t0 = time.perf_counter()
         n = 0
         for i, w in enumerate(CORPUS_WORDS):

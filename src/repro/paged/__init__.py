@@ -1,10 +1,15 @@
 # Paged KV subsystem: chunk-shared, ref-counted GPU block pool + page-table
 # decode (DESIGN.md §10). One HBM copy of a chunk's KV serves every
 # concurrent row that retrieved it; only each row's prompt/decode tail is
-# private.
+# private. Pools are codec-aware (DESIGN.md §11): an Int8Codec pool stores
+# int8 pages + f16 scales and widens on-chip in the fused gather/dequant op.
 from repro.paged.pool import PagedKvPool, PoolStats
 from repro.paged.runtime import (PagedRowCache, RowPages, gather_rows,
-                                 scatter_decode_token, scatter_row_range)
+                                 gather_rows_quant, scatter_decode_token,
+                                 scatter_decode_token_quant,
+                                 scatter_row_range, scatter_row_range_quant)
 
 __all__ = ["PagedKvPool", "PoolStats", "PagedRowCache", "RowPages",
-           "gather_rows", "scatter_decode_token", "scatter_row_range"]
+           "gather_rows", "gather_rows_quant", "scatter_decode_token",
+           "scatter_decode_token_quant", "scatter_row_range",
+           "scatter_row_range_quant"]

@@ -6,12 +6,17 @@ inside its ``RowAttnCache`` row, and N concurrent requests retrieving the
 same hot chunk issued N independent flash reads. The pool extends the
 paper's materialize-once/reuse-many story from flash to HBM:
 
-* KV lives in two flat device arrays ``k`` / ``v`` of shape
-  ``(L, n_blocks * block_size, KV, hd)``. Blocks of ``block_size`` token
-  slots are the allocation unit; the layer axis is folded into the block
-  tensors, so one block id covers a token range across every layer (the
-  page key is logically ``(chunk_id, layer)`` — physically all layers of a
-  token range share the id).
+* KV lives in flat device arrays ``k`` / ``v`` of shape
+  ``(L, n_blocks * block_size, KV, hd)`` **in the pool codec's storage
+  dtype** (DESIGN.md §11): a ``Bf16Codec`` pool holds activation-width
+  values exactly as before; an ``Int8Codec`` pool holds int8 values plus
+  f16 per-vector scale tensors ``k_scale`` / ``v_scale`` of shape
+  ``(L, n_blocks * block_size, KV)``, so one HBM byte budget holds ~2x the
+  resident chunks. Blocks of ``block_size`` token slots are the allocation
+  unit; the layer axis is folded into the block tensors, so one block id
+  covers a token range across every layer (the page key is logically
+  ``(chunk_id, layer)`` — physically all layers of a token range share the
+  id).
 * A chunk's pages are inserted once (``insert``) and shared by every row
   that retrieved it (``acquire`` increments the refcount). ``release``
   decrements; at zero the pages are NOT freed — they move to a reclaim
@@ -19,7 +24,9 @@ paper's materialize-once/reuse-many story from flash to HBM:
   bytes. The free-list reclaims LRU pages only under allocation pressure.
 * Private (copy-on-write tail) blocks for a row's prompt/decode tokens are
   allocated with ``alloc_private`` and returned with ``free_private`` —
-  they are never shared and never enter the LRU.
+  they are never shared and never enter the LRU. In a quantized pool the
+  tail is stored quantized too (the scatter ops encode per-vector), exactly
+  like production paged caches with a narrow kv_cache_dtype.
 
 Host-side control plane is plain Python (deterministic, unit-testable);
 only the block tensors live on device. Single-writer discipline: the
@@ -31,10 +38,12 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.core.quantize import EncodedKV, KvCodec, get_codec
 
 
 @dataclass
@@ -45,6 +54,7 @@ class PoolStats:
     reclaims: int = 0          # refcount-0 entries evicted for new pages
     peak_used_blocks: int = 0  # allocated (incl. reclaimable LRU pages)
     peak_pinned_blocks: int = 0  # required working set: refs>0 + private
+    peak_resident_chunks: int = 0  # distinct chunks with pages in the pool
 
     @property
     def hit_rate(self) -> float:
@@ -64,7 +74,8 @@ class PagedKvPool:
     """Fixed-size KV block pool with ref-counted, chunk-keyed shared pages."""
 
     def __init__(self, cfg, n_blocks: int, block_size: int = 64,
-                 n_layers: Optional[int] = None, dtype=None):
+                 n_layers: Optional[int] = None, dtype=None,
+                 codec: Union[str, KvCodec, None] = None):
         if n_blocks <= 0 or block_size <= 0:
             raise ValueError("PagedKvPool: n_blocks and block_size must be "
                              "positive")
@@ -72,11 +83,21 @@ class PagedKvPool:
         self.block_size = int(block_size)
         self.n_blocks = int(n_blocks)
         self.n_layers = n_layers or cfg.num_layers
+        self.codec = get_codec(codec)
+        # dtype of the *decoded view* the model consumes; storage dtype is
+        # the codec's (same thing for the passthrough codec)
         self.dtype = dtype or jnp.dtype(cfg.activation_dtype)
-        shape = (self.n_layers, self.n_blocks * self.block_size,
-                 cfg.num_kv_heads, cfg.head_dim)
-        self.k = jnp.zeros(shape, self.dtype)
-        self.v = jnp.zeros(shape, self.dtype)
+        self.storage_dtype = jnp.dtype(self.codec.storage_dtype or self.dtype)
+        n_slots = self.n_blocks * self.block_size
+        shape = (self.n_layers, n_slots, cfg.num_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, self.storage_dtype)
+        self.v = jnp.zeros(shape, self.storage_dtype)
+        if self.codec.scale_dtype is not None:
+            sshape = (self.n_layers, n_slots, cfg.num_kv_heads)
+            self.k_scale = jnp.zeros(sshape, self.codec.scale_dtype)
+            self.v_scale = jnp.zeros(sshape, self.codec.scale_dtype)
+        else:
+            self.k_scale = self.v_scale = None
         self.stats = PoolStats()
         self._free: List[int] = list(range(self.n_blocks))
         self._entries: Dict[str, _ChunkPages] = {}
@@ -84,10 +105,33 @@ class PagedKvPool:
         self._pinned_blocks = 0
 
     # -- sizing ----------------------------------------------------------------
+    @staticmethod
+    def block_bytes(cfg, block_size: int = 64,
+                    codec: Union[str, KvCodec, None] = None,
+                    n_layers: Optional[int] = None) -> int:
+        """Encoded HBM bytes of one block (K + V + scales) — usable before a
+        pool exists, e.g. to size ``n_blocks`` from a byte budget."""
+        codec = get_codec(codec)
+        act = jnp.dtype(cfg.activation_dtype).itemsize
+        return (2 * (n_layers or cfg.num_layers) * block_size
+                * cfg.num_kv_heads * codec.bytes_per_vector(cfg.head_dim, act))
+
+    @classmethod
+    def blocks_for_budget(cls, cfg, budget_bytes: int, block_size: int = 64,
+                          codec: Union[str, KvCodec, None] = None,
+                          n_layers: Optional[int] = None) -> int:
+        """How many blocks one HBM byte budget buys under ``codec`` — the
+        equal-budget comparison the quantized-residency benchmark runs."""
+        per = cls.block_bytes(cfg, block_size, codec, n_layers)
+        return max(1, int(budget_bytes) // per)
+
     @property
     def bytes_per_block(self) -> int:
+        # from the pool's actual view dtype (which may override
+        # cfg.activation_dtype), not the static cfg-derived estimate
         return (2 * self.n_layers * self.block_size * self.cfg.num_kv_heads
-                * self.cfg.head_dim * self.dtype.itemsize)
+                * self.codec.bytes_per_vector(self.cfg.head_dim,
+                                              self.dtype.itemsize))
 
     @property
     def used_blocks(self) -> int:
@@ -97,6 +141,11 @@ class PagedKvPool:
     def resident_bytes(self) -> int:
         """HBM KV bytes behind allocated (shared + private) blocks."""
         return self.used_blocks * self.bytes_per_block
+
+    @property
+    def resident_chunks(self) -> int:
+        """Distinct chunks with pages in the pool (pinned or reclaimable)."""
+        return len(self._entries)
 
     @property
     def pinned_blocks(self) -> int:
@@ -167,27 +216,64 @@ class PagedKvPool:
         self.stats.chunk_hits += 1
         return pages.n_tokens
 
-    def insert(self, chunk_id: str, k_art, v_art, nbytes: int = 0) -> int:
-        """Write one chunk's KV artifact (k/v ``(L, 1, S, KV, hd)`` or
-        ``(L, S, KV, hd)``) into freshly allocated pages with refcount 1.
-        Returns the token count. The caller must have checked ``acquire``
-        first — double insert raises."""
+    def _encode_artifact(self, k_art, v_art):
+        """Decoded (L, S, KV, hd) k/v -> storage tensors + scales (or None)."""
+        k_enc, k_sc = self.codec.encode(k_art)
+        v_enc, v_sc = self.codec.encode(v_art)
+        return k_enc, v_enc, k_sc, v_sc
+
+    def insert(self, chunk_id: str, k_art=None, v_art=None, nbytes: int = 0,
+               *, encoded: Optional[EncodedKV] = None) -> int:
+        """Write one chunk's KV artifact into freshly allocated pages with
+        refcount 1; returns the token count. Two forms:
+
+        * decoded ``k_art`` / ``v_art`` (``(L, 1, S, KV, hd)`` or
+          ``(L, S, KV, hd)`` activation-width) — encoded here with the pool
+          codec;
+        * ``encoded=EncodedKV`` straight off flash — written through without
+          widening when its codec matches the pool's (the int8 fast path),
+          transcoded (decode -> re-encode) otherwise.
+
+        The caller must have checked ``acquire`` first — double insert
+        raises.
+        """
         if chunk_id in self._entries:
             raise ValueError(f"pool.insert: {chunk_id!r} already resident "
                              f"(acquire it instead)")
-        if k_art.ndim == 5:
-            k_art, v_art = k_art[:, 0], v_art[:, 0]
-        n_tokens = int(k_art.shape[1])
+        if encoded is not None:
+            k_enc, v_enc = jnp.asarray(encoded.k), jnp.asarray(encoded.v)
+            if encoded.codec.codec_id == self.codec.codec_id:
+                k_sc = (None if encoded.k_scale is None
+                        else jnp.asarray(encoded.k_scale))
+                v_sc = (None if encoded.v_scale is None
+                        else jnp.asarray(encoded.v_scale))
+            else:                            # transcode via the decode dtype
+                k_enc, v_enc, k_sc, v_sc = self._encode_artifact(
+                    encoded.codec.decode(k_enc, encoded.k_scale, self.dtype),
+                    encoded.codec.decode(v_enc, encoded.v_scale, self.dtype))
+        else:
+            if k_art.ndim == 5:
+                k_art, v_art = k_art[:, 0], v_art[:, 0]
+            k_enc, v_enc, k_sc, v_sc = self._encode_artifact(k_art, v_art)
+        n_tokens = int(k_enc.shape[1])
         blocks = self._alloc(self.blocks_for(n_tokens))
         slots = self.token_slot_ids(blocks, n_tokens)
-        self.k = self.k.at[:, slots].set(k_art.astype(self.dtype))
-        self.v = self.v.at[:, slots].set(v_art.astype(self.dtype))
+        self.k = self.k.at[:, slots].set(k_enc.astype(self.storage_dtype))
+        self.v = self.v.at[:, slots].set(v_enc.astype(self.storage_dtype))
+        if self.k_scale is not None:
+            sd = self.codec.scale_dtype
+            self.k_scale = self.k_scale.at[:, slots].set(
+                jnp.asarray(k_sc)[..., 0].astype(sd))
+            self.v_scale = self.v_scale.at[:, slots].set(
+                jnp.asarray(v_sc)[..., 0].astype(sd))
         self._entries[chunk_id] = _ChunkPages(block_ids=blocks,
                                               n_tokens=n_tokens,
                                               nbytes=nbytes, refs=1)
         self._pin(len(blocks))
         self.stats.chunk_misses += 1
         self.stats.flash_bytes_loaded += nbytes
+        self.stats.peak_resident_chunks = max(self.stats.peak_resident_chunks,
+                                              len(self._entries))
         return n_tokens
 
     def release(self, chunk_id: str) -> None:

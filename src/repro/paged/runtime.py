@@ -24,6 +24,16 @@ The decode step is gather → step → scatter:
    (``scratch_row``) so their dummy decode steps can never touch pages a
    live request shares.
 
+Quantized pools (``Int8Codec``, DESIGN.md §11) swap both halves for fused
+codec twins: ``gather_rows_quant`` widens int8 values by their f16 scales
+*inside* the gather (the HBM-resident pages never widen), and the
+``*_quant`` scatters re-encode new K/V per-vector on the way back in — the
+decode tail is stored quantized like the chunk pages, exactly as a
+production paged cache with a narrow kv_cache_dtype does. Values decoded
+from shared pages are bit-identical to the dense int8 path's compose-time
+dequantization (same scalar math); only tail tokens carry quantization
+noise, bounded in tests.
+
 Sharing chunk pages requires chunk K content to be position-independent,
 i.e. the paper-faithful restarted-positions mode (``rerotate=False``); the
 engine gates paged mode on it.
@@ -39,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quantize import quantize_kv
 from repro.models.cache import RowAttnCache
 from repro.paged.pool import PagedKvPool
 
@@ -57,7 +68,9 @@ class PagedRowCache:
 
     Device state mirrors ``RowAttnCache`` exactly (``slot_pos (B, S_buf)``,
     ``length (B,)``) plus the gather table; KV bytes live in ``pool.k/v``
-    only. Host state tracks each slot's page handle for release.
+    (+ scale tensors for quantized pools) only. Host state tracks each
+    slot's page handle for release. ``dense_view`` / ``scatter_*`` dispatch
+    on the pool codec, so the engine is codec-blind.
     """
 
     def __init__(self, pool: PagedKvPool, max_slots: int, buf_size: int):
@@ -75,6 +88,10 @@ class PagedRowCache:
         self.gather_idx = jnp.asarray(gi)
         self.slot_pos = jnp.full((max_slots, buf_size), -1, jnp.int32)
         self.length = jnp.zeros((max_slots,), jnp.int32)
+
+    @property
+    def quantized(self) -> bool:
+        return self.pool.k_scale is not None
 
     def scratch_row(self, slot: int) -> np.ndarray:
         """Gather row mapping every dense slot into the shared scratch block
@@ -109,16 +126,53 @@ class PagedRowCache:
             jnp.asarray(self.scratch_row(slot)))
 
     # -- dense views ---------------------------------------------------------------
+    def _view(self, gather_idx, slot_pos, length) -> RowAttnCache:
+        pool = self.pool
+        if self.quantized:
+            k, v = gather_rows_quant(pool.k, pool.v, pool.k_scale,
+                                     pool.v_scale, gather_idx,
+                                     dtype=pool.dtype)
+        else:
+            k, v = gather_rows(pool.k, pool.v, gather_idx)
+        return RowAttnCache(k=k, v=v, slot_pos=slot_pos, length=length)
+
     def dense_view(self) -> RowAttnCache:
-        k, v = gather_rows(self.pool.k, self.pool.v, self.gather_idx)
-        return RowAttnCache(k=k, v=v, slot_pos=self.slot_pos,
-                            length=self.length)
+        return self._view(self.gather_idx, self.slot_pos, self.length)
 
     def dense_row_view(self, slot: int) -> RowAttnCache:
-        k, v = gather_rows(self.pool.k, self.pool.v,
-                           self.gather_idx[slot][None])
-        return RowAttnCache(k=k, v=v, slot_pos=self.slot_pos[slot][None],
-                            length=self.length[slot][None])
+        return self._view(self.gather_idx[slot][None],
+                          self.slot_pos[slot][None],
+                          self.length[slot][None])
+
+    # -- scatters (write-back through the page table) ------------------------------
+    def scatter_step(self, prev_length, new_k, new_v) -> None:
+        """Persist one batched decode step's new token per row into each
+        row's private tail (scratch for stale rows), encoding per-vector on
+        quantized pools."""
+        pool = self.pool
+        if self.quantized:
+            pool.k, pool.v, pool.k_scale, pool.v_scale = (
+                scatter_decode_token_quant(pool.k, pool.v, pool.k_scale,
+                                           pool.v_scale, self.gather_idx,
+                                           prev_length, new_k, new_v))
+        else:
+            pool.k, pool.v = scatter_decode_token(
+                pool.k, pool.v, self.gather_idx, prev_length, new_k, new_v)
+
+    def scatter_range(self, phys_idx, k_row, v_row, start) -> None:
+        """Persist a batch=1 sub-prefill's new K/V range (the prompt tokens
+        written at dense slots ``[start, start + len(phys_idx))``)."""
+        pool = self.pool
+        phys = jnp.asarray(phys_idx)
+        start = jnp.asarray(start, jnp.int32)
+        if self.quantized:
+            pool.k, pool.v, pool.k_scale, pool.v_scale = (
+                scatter_row_range_quant(pool.k, pool.v, pool.k_scale,
+                                        pool.v_scale, phys, k_row, v_row,
+                                        start))
+        else:
+            pool.k, pool.v = scatter_row_range(pool.k, pool.v, phys,
+                                               k_row, v_row, start)
 
 
 # ---------------------------------------------------------------------------
@@ -138,6 +192,34 @@ def gather_rows(pool_k, pool_v, gather_idx):
     return k.reshape(shape), v.reshape(shape)
 
 
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def gather_rows_quant(pool_k, pool_v, k_scale, v_scale, gather_idx,
+                      dtype=jnp.bfloat16):
+    """Fused gather + dequant: int8 pool (L, N_slots, KV, hd) + f16 scales
+    (L, N_slots, KV) -> activation-width dense view. The per-element math is
+    exactly ``dequantize_kv`` (f32 multiply, then cast), so values decoded
+    from shared pages are bit-identical to the dense path's compose-time
+    dequantization of the same artifact."""
+    b, s = gather_idx.shape
+    idx = gather_idx.reshape(-1)
+
+    def deq(pool, scale):
+        vals = jnp.take(pool, idx, axis=1).astype(jnp.float32)
+        sc = jnp.take(scale, idx, axis=1).astype(jnp.float32)[..., None]
+        return (vals * sc).astype(dtype)
+
+    shape = (pool_k.shape[0], b, s) + pool_k.shape[2:]
+    return deq(pool_k, k_scale).reshape(shape), \
+        deq(pool_v, v_scale).reshape(shape)
+
+
+def _token_at(new_kv, start):
+    """Pick each row's new-token vector out of the dense step buffers:
+    new_kv (L, B, S_buf, KV, hd), start (B,) -> (L, B, KV, hd)."""
+    return jnp.take_along_axis(
+        new_kv, start[None, :, None, None, None], axis=2)[:, :, 0]
+
+
 @functools.partial(jax.jit, donate_argnums=(0, 1))
 def scatter_decode_token(pool_k, pool_v, gather_idx, prev_length,
                          new_k, new_v):
@@ -148,12 +230,32 @@ def scatter_decode_token(pool_k, pool_v, gather_idx, prev_length,
     so the batched scatter is conflict-free."""
     buf = gather_idx.shape[1]
     start = (prev_length % buf).astype(jnp.int32)              # (B,)
-    k_tok = jnp.take_along_axis(
-        new_k, start[None, :, None, None, None], axis=2)[:, :, 0]
-    v_tok = jnp.take_along_axis(
-        new_v, start[None, :, None, None, None], axis=2)[:, :, 0]
+    k_tok = _token_at(new_k, start)
+    v_tok = _token_at(new_v, start)
     phys = jnp.take_along_axis(gather_idx, start[:, None], axis=1)[:, 0]
     return pool_k.at[:, phys].set(k_tok), pool_v.at[:, phys].set(v_tok)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def scatter_decode_token_quant(pool_k, pool_v, k_scale, v_scale, gather_idx,
+                               prev_length, new_k, new_v):
+    """Quantized twin of ``scatter_decode_token``: encode each row's new
+    token per-(layer, head) vector and store int8 values + f16 scales."""
+    buf = gather_idx.shape[1]
+    start = (prev_length % buf).astype(jnp.int32)
+    k_tok, k_sc = quantize_kv(_token_at(new_k, start))         # (L,B,KV,hd)
+    v_tok, v_sc = quantize_kv(_token_at(new_v, start))
+    phys = jnp.take_along_axis(gather_idx, start[:, None], axis=1)[:, 0]
+    return (pool_k.at[:, phys].set(k_tok),
+            pool_v.at[:, phys].set(v_tok),
+            k_scale.at[:, phys].set(k_sc[..., 0].astype(k_scale.dtype)),
+            v_scale.at[:, phys].set(v_sc[..., 0].astype(v_scale.dtype)))
+
+
+def _range_vals(k_row, v_row, start, n):
+    vals_k = jax.lax.dynamic_slice_in_dim(k_row[:, 0], start, n, axis=1)
+    vals_v = jax.lax.dynamic_slice_in_dim(v_row[:, 0], start, n, axis=1)
+    return vals_k, vals_v
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
@@ -161,8 +263,20 @@ def scatter_row_range(pool_k, pool_v, phys_idx, k_row, v_row, start):
     """Persist a batch=1 sub-prefill's new K/V: the ``len(phys_idx)`` tokens
     written at dense slots ``[start, start + n)`` of ``k_row/v_row
     (L, 1, S_buf, KV, hd)`` go to pool slots ``phys_idx``."""
-    n = phys_idx.shape[0]
-    vals_k = jax.lax.dynamic_slice_in_dim(k_row[:, 0], start, n, axis=1)
-    vals_v = jax.lax.dynamic_slice_in_dim(v_row[:, 0], start, n, axis=1)
+    vals_k, vals_v = _range_vals(k_row, v_row, start, phys_idx.shape[0])
     return (pool_k.at[:, phys_idx].set(vals_k),
             pool_v.at[:, phys_idx].set(vals_v))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+def scatter_row_range_quant(pool_k, pool_v, k_scale, v_scale, phys_idx,
+                            k_row, v_row, start):
+    """Quantized twin of ``scatter_row_range``: per-vector encode the prompt
+    range on its way into the private tail blocks."""
+    vals_k, vals_v = _range_vals(k_row, v_row, start, phys_idx.shape[0])
+    qk, sk = quantize_kv(vals_k)
+    qv, sv = quantize_kv(vals_v)
+    return (pool_k.at[:, phys_idx].set(qk),
+            pool_v.at[:, phys_idx].set(qv),
+            k_scale.at[:, phys_idx].set(sk[..., 0].astype(k_scale.dtype)),
+            v_scale.at[:, phys_idx].set(sv[..., 0].astype(v_scale.dtype)))

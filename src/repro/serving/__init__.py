@@ -1,9 +1,12 @@
 from repro.serving.continuous import (ContinuousScheduler, RequestRecord,
                                       ServeMetrics)
 from repro.serving.engine import PhaseTimings, RagEngine, RowRequest
+from repro.serving.parity import (dense_row_path, paged_row_path,
+                                  teacher_forced_rel)
 from repro.serving.sampling import greedy, temperature_sample
 from repro.serving.scheduler import BatchScheduler
 
 __all__ = ["ContinuousScheduler", "RequestRecord", "ServeMetrics",
            "PhaseTimings", "RagEngine", "RowRequest", "greedy",
-           "temperature_sample", "BatchScheduler"]
+           "temperature_sample", "BatchScheduler", "dense_row_path",
+           "paged_row_path", "teacher_forced_rel"]

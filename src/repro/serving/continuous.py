@@ -95,6 +95,9 @@ class ServeMetrics:
     chunk_hits: int = 0                    # chunk already GPU-resident
     chunk_misses: int = 0                  # chunk had to be read + inserted
     hbm_kv_bytes_resident: int = 0         # peak KV bytes resident in HBM
+    resident_chunks_peak: int = 0          # paged: peak distinct chunks in
+                                           # the pool (codec-sensitive: one
+                                           # byte budget holds ~2x under int8)
 
     @property
     def chunk_hit_rate(self) -> float:
@@ -127,7 +130,8 @@ class ContinuousScheduler:
     def __init__(self, engine: RagEngine, max_slots: int = 4,
                  buf_size: Optional[int] = None, n_load_workers: int = 4,
                  paged: bool = False, block_size: int = 64,
-                 pool_blocks: Optional[int] = None):
+                 pool_blocks: Optional[int] = None,
+                 pool_budget_bytes: Optional[int] = None):
         if engine.cfg.family not in ("dense", "vlm", "moe"):
             raise ValueError("ContinuousScheduler requires an attention-KV "
                              "family")
@@ -145,6 +149,9 @@ class ContinuousScheduler:
         self.paged = paged
         self.block_size = block_size
         self.pool_blocks = pool_blocks
+        # HBM byte budget alternative to pool_blocks: the pool's codec
+        # decides how many blocks (and so resident chunks) the budget buys
+        self.pool_budget_bytes = pool_budget_bytes
         self.loader = AsyncKvLoader(engine.reader, n_workers=n_load_workers)
 
     def shutdown(self):
@@ -190,9 +197,10 @@ class ContinuousScheduler:
         pcache = None
         cache = None
         if self.paged:
-            pcache = eng.init_paged_cache(self.max_slots, buf,
-                                          block_size=self.block_size,
-                                          n_blocks=self.pool_blocks)
+            pcache = eng.init_paged_cache(
+                self.max_slots, buf, block_size=self.block_size,
+                n_blocks=self.pool_blocks,
+                pool_budget_bytes=self.pool_budget_bytes)
         else:
             cache = eng.model.init_row_cache(self.max_slots, buf)
         cur = np.zeros((self.max_slots,), np.int32)
@@ -350,6 +358,7 @@ class ContinuousScheduler:
             pool = pcache.pool
             metrics.hbm_kv_bytes_resident = (pool.stats.peak_pinned_blocks
                                              * pool.bytes_per_block)
+            metrics.resident_chunks_peak = pool.stats.peak_resident_chunks
         else:
             metrics.hbm_kv_bytes_resident = (cache.k.nbytes
                                              + cache.v.nbytes)

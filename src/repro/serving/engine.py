@@ -27,7 +27,9 @@ from repro.core.blend import blend
 from repro.core.chunking import Chunk, chunk_document
 from repro.core.compose import (compose_attn_cache, compose_attn_cache_rows,
                                 compose_hybrid_cache, compose_ssm_cache)
-from repro.core.materialize import Materializer, load_artifact
+from repro.core.materialize import (Materializer, load_artifact,
+                                    load_artifact_encoded)
+from repro.core.quantize import get_codec
 from repro.data.tokenizer import EOS, SEP, ByteTokenizer
 from repro.models.cache import (AttnCache, RowAttnCache, init_attn_cache,
                                 init_hybrid_cache, init_ssm_cache, write_kv)
@@ -67,7 +69,7 @@ class RagEngine:
     def __init__(self, model, params, store, mode: str = "matkv",
                  chunk_tokens: int = 256, top_k: int = 2,
                  rerotate: bool = False, blend_ratio: float = 0.18,
-                 quantized: bool = False, reader=None):
+                 codec=None, reader=None):
         assert mode in ("vanilla", "matkv", "cacheblend")
         self.model = model
         self.cfg = model.cfg
@@ -79,11 +81,15 @@ class RagEngine:
         self.top_k = top_k
         self.rerotate = rerotate
         self.blend_ratio = blend_ratio
+        # KV storage codec ("bf16" passthrough / "int8"), end to end: the
+        # materializer encodes with it, the paged pool stores its layout,
+        # the dense compose paths widen on decode (DESIGN.md §11)
+        self.codec = get_codec(codec)
         self.tok = ByteTokenizer()
         self.embedder = HashingEmbedder()
         self.vdb = VectorDB(self.embedder.dim)
         self.materializer = Materializer(model, params, store,
-                                         quantized=quantized)
+                                         codec=self.codec)
         self._chunks: Dict[str, Chunk] = {}
         self._decode_fn = jax.jit(
             lambda p, c, t: self.model.decode_step(p, c, t))
@@ -268,8 +274,15 @@ class RagEngine:
 
     def init_paged_cache(self, max_slots: int, buf_size: int,
                          block_size: int = 64,
-                         n_blocks: Optional[int] = None):
+                         n_blocks: Optional[int] = None,
+                         pool_budget_bytes: Optional[int] = None):
         """Build the pool + page-table cache for ``max_slots`` decode slots.
+
+        The pool stores blocks in the engine codec's layout (int8 pages +
+        f16 scales under ``Int8Codec``); ``pool_budget_bytes`` sizes
+        ``n_blocks`` from an HBM byte budget codec-aware, so one budget
+        holds ~2x the chunks under int8 — the equal-budget comparison the
+        quantized-residency benchmark runs.
 
         Paged mode requires the paper-faithful restarted-positions mode:
         shared chunk pages must be position-independent, and ``rerotate``
@@ -283,6 +296,9 @@ class RagEngine:
             raise ValueError("paged serving requires rerotate=False: "
                              "re-rotated keys are position-dependent and "
                              "cannot be shared across rows")
+        if n_blocks is None and pool_budget_bytes is not None:
+            n_blocks = PagedKvPool.blocks_for_budget(
+                self.cfg, pool_budget_bytes, block_size, self.codec)
         if n_blocks is None:
             per_row = -(-buf_size // block_size)
             # scratch + private tail + worst-case unshared chunk pages
@@ -290,7 +306,7 @@ class RagEngine:
             n_blocks = max_slots * (1 + per_row
                                     + self.top_k * chunk_blocks) + 4
         pool = PagedKvPool(self.cfg, n_blocks=n_blocks,
-                           block_size=block_size)
+                           block_size=block_size, codec=self.codec)
         return PagedRowCache(pool, max_slots, buf_size)
 
     def compose_row_paged(self, req: RowRequest, pcache, slot: int,
@@ -305,7 +321,9 @@ class RagEngine:
         flash_bytes_loaded, composed_bytes, chunk_hits, chunk_misses) —
         composed_bytes counts every chunk serving the row (hits included),
         comparable to ``compose_row``'s bytes; flash_bytes only the
-        misses actually read."""
+        misses actually read. Artifacts flow into the pool in *encoded*
+        form (``load_artifact_encoded``): an int8 artifact lands in int8
+        pages without ever widening on the host."""
         from repro.paged import RowPages
         pool = pcache.pool
         payloads = payloads or {}
@@ -320,8 +338,8 @@ class RagEngine:
                 payload = payloads.get(cid)
                 if payload is None:
                     payload = self.reader.get(cid)
-                art, _ = load_artifact(self.cfg, payload)
-                pool.insert(cid, art[0], art[1], nbytes=len(payload))
+                enc, _ = load_artifact_encoded(self.cfg, payload)
+                pool.insert(cid, encoded=enc, nbytes=len(payload))
                 nbytes += len(payload)
                 misses += 1
             composed += pool.chunk_payload_bytes(cid)
@@ -365,33 +383,25 @@ class RagEngine:
                           ) -> jnp.ndarray:
         """Sub-prefill one admitted slot's prompt over its paged prefix
         (batch=1): gather the dense row view, run the shared row-step fn,
-        scatter the prompt's new KV into the slot's private tail. Returns
-        the first token (1,)."""
-        from repro.paged import scatter_row_range
+        scatter the prompt's new KV into the slot's private tail (codec
+        dispatch lives in the runtime). Returns the first token (1,)."""
         row = pcache.dense_row_view(slot)
         n_doc = pcache.rows[slot].n_doc
         first, row = self.prefill_row(row, prompt)
         sq = len(prompt)
         # host-side tail map from compose time — no device round-trip
-        phys = jnp.asarray(pcache.rows[slot].tail_slots[:sq])
-        pool = pcache.pool
-        pool.k, pool.v = scatter_row_range(pool.k, pool.v, phys,
-                                           row.k, row.v,
-                                           jnp.asarray(n_doc, jnp.int32))
+        pcache.scatter_range(pcache.rows[slot].tail_slots[:sq],
+                             row.k, row.v, n_doc)
         pcache.set_row_state(slot, row.slot_pos[0], row.length[0])
         return first
 
     def step_rows_paged(self, pcache, tokens: jnp.ndarray) -> jnp.ndarray:
         """One batched decode step over the whole paged slot table:
         gather -> (shared) step_rows -> scatter. Returns logits (B,Sq,V)."""
-        from repro.paged import scatter_decode_token
         cache = pcache.dense_view()
         prev_len = cache.length
         logits, new_cache = self.step_rows(cache, tokens)
-        pool = pcache.pool
-        pool.k, pool.v = scatter_decode_token(
-            pool.k, pool.v, pcache.gather_idx, prev_len,
-            new_cache.k, new_cache.v)
+        pcache.scatter_step(prev_len, new_cache.k, new_cache.v)
         pcache.slot_pos = new_cache.slot_pos
         pcache.length = new_cache.length
         return logits

@@ -1,0 +1,71 @@
+"""Teacher-forced parity probes between row-serving paths.
+
+The codec layer's acceptance bars (tests/test_codec.py and
+benchmarks/bench_quant_residency.py) compare serving paths *at the logits
+level* while feeding both the SAME token stream each step — a greedy-decode
+comparison would cascade into unrelated streams on the first argmax flip,
+turning a 1% quantization wobble into a 100% string mismatch. One harness
+here so the test and the benchmark are guaranteed to measure the same
+protocol.
+
+A "path" is a factory ``init(req) -> {"first": int, "step": fn}``:
+``dense_row_path`` composes into a batch=1 row-slotted cache and steps with
+``engine.step_rows``; ``paged_row_path`` admits into a 1-slot page-table
+cache and steps with ``engine.step_rows_paged``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cache import insert_cache_row
+
+
+def dense_row_path(eng, buf: int):
+    """The non-paged engine path: compose -> prefill -> step_rows."""
+    def init(req):
+        row, _, _ = eng.compose_row(req, buf)
+        first, row = eng.prefill_row(row, req.prompt)
+        cache = eng.model.init_row_cache(1, buf)
+        state = {"cache": insert_cache_row(cache, 0, row)}
+
+        def step(t):
+            logits, state["cache"] = eng.step_rows(state["cache"], t)
+            return logits
+        return {"first": int(first[0]), "step": step}
+    return init
+
+
+def paged_row_path(eng, buf: int, block_size: int = 64):
+    """The paged path: page-table admit -> prefill -> step_rows_paged."""
+    def init(req):
+        pc = eng.init_paged_cache(1, buf, block_size=block_size)
+        eng.compose_row_paged(req, pc, 0)
+        first = eng.prefill_row_paged(pc, 0, req.prompt)
+        return {"first": int(first[0]),
+                "step": lambda t: eng.step_rows_paged(pc, t)}
+    return init
+
+
+def teacher_forced_rel(eng_a, path_a, eng_b, path_b, question: str,
+                       steps: int, require_same_first: bool = True) -> float:
+    """Max relative logits diff over ``steps`` decode steps, both paths fed
+    path A's greedy stream. ``require_same_first`` asserts the prefill's
+    first token agrees (drop it when comparing across codecs, where the
+    first token may legitimately differ)."""
+    max_rel = 0.0
+    a_state = path_a(eng_a.prepare_request(question, steps + 2))
+    b_state = path_b(eng_b.prepare_request(question, steps + 2))
+    tok = a_state["first"]
+    if require_same_first:
+        assert tok == b_state["first"], (
+            f"first token diverged: {tok} vs {b_state['first']}")
+    for _ in range(steps):
+        t = jnp.asarray([tok])[:, None]
+        a = np.asarray(a_state["step"](t), np.float32)
+        b = np.asarray(b_state["step"](t), np.float32)
+        max_rel = max(max_rel, float(np.abs(a - b).max()
+                                     / (np.abs(a).max() + 1e-9)))
+        tok = int(np.argmax(a[0, -1]))
+    return max_rel

@@ -1,0 +1,418 @@
+"""The end-to-end KV codec layer (DESIGN.md §11): wire round trips per
+family, the codec-aware paged pool, the fused paged_decode_quant kernel vs
+its oracle, and int8 serving parity/quality bounds."""
+
+import tempfile
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.materialize import (Materializer, load_artifact,
+                                    load_artifact_encoded)
+from repro.core.quantize import (Bf16Codec, Int8Codec, codec_for_meta,
+                                 dequantize_kv, get_codec, quantize_kv)
+from repro.kernels import ref
+from repro.kernels.ops import paged_decode_quant_op
+from repro.kernels.paged_decode_quant import paged_decode_quant
+from repro.kvstore import FlashKVStore
+from repro.kvstore.serialization import read_meta, serialize
+from repro.models import build_model
+from repro.paged import PagedKvPool, PagedRowCache, gather_rows_quant
+from repro.serving import (ContinuousScheduler, RagEngine, dense_row_path,
+                           paged_row_path, teacher_forced_rel)
+
+CORPUS = {
+    "d1": "the amber gate stands in hall nine beyond the long stair. " * 4,
+    "d2": "the cedar door opens with a brass song at dusk hour. " * 4,
+    "d3": "the brass lamp hums beside the tall window all night. " * 4,
+}
+QUESTIONS = ["where is the amber gate?", "where is the cedar door?",
+             "where is the brass lamp?"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-135m").reduced(vocab_size=300)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    return cfg, model, params
+
+
+def _engine(model, params, store, **kw):
+    kw.setdefault("top_k", 2)
+    eng = RagEngine(model, params, store, chunk_tokens=48, **kw)
+    for d, text in CORPUS.items():
+        eng.ingest(d, text)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# codec registry + wire round trips per family
+# ---------------------------------------------------------------------------
+
+def test_get_codec_resolution():
+    assert get_codec(None).codec_id == "bf16"
+    assert get_codec("int8").codec_id == "int8"
+    assert get_codec(Int8Codec()).codec_id == "int8"
+    with pytest.raises(ValueError, match="unknown KV codec"):
+        get_codec("fp4")
+    # artifacts from before the codec layer carried a bool, not an id
+    assert codec_for_meta({"quantized": True}).codec_id == "int8"
+    assert codec_for_meta({"quantized": False}).codec_id == "bf16"
+    assert codec_for_meta({"codec": "int8"}).codec_id == "int8"
+
+
+def test_codec_kv_bytes_per_token(setup):
+    """Encoded flash bytes per token: the quantity Eq. 1 prices. int8 is
+    (hd + 2) / (2 * hd) of bf16 — the break-even interval lever."""
+    cfg, _, _ = setup
+    bf16 = Bf16Codec().kv_bytes_per_token(cfg)
+    int8 = Int8Codec().kv_bytes_per_token(cfg)
+    assert bf16 == cfg.kv_bytes_per_token(2)
+    expect = (cfg.head_dim + 2) / (2 * cfg.head_dim)
+    assert int8 / bf16 == pytest.approx(expect)
+    ssm = get_config("falcon-mamba-7b")
+    assert Int8Codec().kv_bytes_per_token(ssm) == 0   # state is O(1)
+    # admission priced at encoded bytes: int8 stretches the Eq.-1 interval
+    from repro.core.tiering import TenDayAdmission
+    paper = get_config("llama-3.1-8b")
+    with pytest.raises(ValueError, match="no per-token KV"):
+        TenDayAdmission.for_config(ssm, "int8")   # would divide by zero
+    adm8 = TenDayAdmission.for_config(paper, "int8")
+    admb = TenDayAdmission.for_config(paper, "bf16")
+    assert adm8.break_even_s > admb.break_even_s
+    assert adm8.break_even_s / admb.break_even_s == pytest.approx(
+        Bf16Codec().kv_bytes_per_token(paper)
+        / Int8Codec().kv_bytes_per_token(paper), rel=1e-6)
+
+
+def _family_tensors(fam, rng):
+    """Synthetic artifact tensors in materializer layout (batch squeezed)."""
+    l, s, kv, hd = 2, 20, 3, 16
+    t = {}
+    if fam in ("dense", "vlm", "moe", "hybrid"):
+        t["k"] = rng.standard_normal((l, s, kv, hd)).astype(np.float32)
+        t["v"] = rng.standard_normal((l, s, kv, hd)).astype(np.float32)
+    if fam in ("ssm", "hybrid"):
+        t["conv"] = rng.standard_normal((l, 8, 4)).astype(np.float32)
+        t["h"] = rng.standard_normal((l, 8, 6)).astype(np.float32)
+    if fam == "encdec":
+        t["cross_k"] = rng.standard_normal((l, s, kv, hd)).astype(np.float32)
+        t["cross_v"] = rng.standard_normal((l, s, kv, hd)).astype(np.float32)
+    return t
+
+
+@pytest.mark.parametrize("fam", ["dense", "ssm", "hybrid", "encdec"])
+@pytest.mark.parametrize("codec_id", ["bf16", "int8"])
+def test_roundtrip_encode_serialize_load_per_family(setup, fam, codec_id):
+    """encode -> serialize -> load_artifact must reproduce every family's
+    artifact: KV tensors within the codec's error, recurrent states exactly
+    (the codec never touches conv/h)."""
+    cfg, _, _ = setup
+    codec = get_codec(codec_id)
+    rng = np.random.default_rng(7)
+    plain = _family_tensors(fam, rng)
+    wire = {}
+    for name, arr in plain.items():
+        if name in ("k", "v", "cross_k", "cross_v"):
+            wire.update(codec.encode_named(name, arr))
+        else:
+            wire[name] = arr
+    payload = serialize(wire, {"family": fam, "codec": codec.codec_id,
+                               "n_tokens": 20})
+    art, meta = load_artifact(cfg, payload, dtype=jnp.float32)
+    assert meta["codec"] == codec.codec_id
+    tol = 0.0 if codec_id == "bf16" else 0.03
+    if fam == "dense":
+        k, v = art
+        np.testing.assert_allclose(np.asarray(k[:, 0]), plain["k"], atol=tol)
+        np.testing.assert_allclose(np.asarray(v[:, 0]), plain["v"], atol=tol)
+    elif fam == "ssm":
+        conv, h = art
+        np.testing.assert_array_equal(np.asarray(conv[:, 0]), plain["conv"])
+        np.testing.assert_array_equal(np.asarray(h[:, 0]), plain["h"])
+    elif fam == "hybrid":
+        (k, v), (conv, h) = art
+        np.testing.assert_allclose(np.asarray(k[:, 0]), plain["k"], atol=tol)
+        np.testing.assert_array_equal(np.asarray(h[:, 0]), plain["h"])
+    else:
+        ck, cv = art
+        np.testing.assert_allclose(np.asarray(ck[:, 0]), plain["cross_k"],
+                                   atol=tol)
+        np.testing.assert_allclose(np.asarray(cv[:, 0]), plain["cross_v"],
+                                   atol=tol)
+
+
+def test_load_artifact_encoded_keeps_storage_dtype(setup):
+    """The paged-pool read path: an int8 artifact comes off flash as int8
+    values + f16 scales, never widened, and decodes to exactly what
+    load_artifact widens to."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        mat = Materializer(model, params, store, codec="int8")
+        eng = _engine(model, params, store, mode="matkv", codec="int8")
+        cid = eng.retrieve(QUESTIONS[0])[0]
+        payload = store.get(cid)
+        enc, meta = load_artifact_encoded(cfg, payload)
+        assert meta["codec"] == "int8"
+        assert np.asarray(enc.k).dtype == np.int8
+        assert np.asarray(enc.k_scale).dtype == np.float16
+        assert enc.n_tokens == meta["n_tokens"]
+        (k_wide, v_wide), _ = load_artifact(cfg, payload)
+        np.testing.assert_array_equal(
+            np.asarray(dequantize_kv(jnp.asarray(enc.k),
+                                     jnp.asarray(enc.k_scale)), np.float32),
+            np.asarray(k_wide[:, 0], np.float32))
+
+
+def test_int8_artifact_bytes_ratio(setup):
+    """Stored int8 artifacts must be ~0.52x bf16 (values + scales + header),
+    the flash-byte lever the whole PR turns."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        e8 = _engine(model, params, FlashKVStore(d + "/8"), mode="matkv",
+                     codec="int8")
+        eb = _engine(model, params, FlashKVStore(d + "/b"), mode="matkv",
+                     codec="bf16")
+        ratio = e8.store.total_bytes() / eb.store.total_bytes()
+        assert ratio < 0.56, f"int8 artifacts are {ratio:.3f}x bf16"
+
+
+# ---------------------------------------------------------------------------
+# codec-aware pool + gather/dequant runtime
+# ---------------------------------------------------------------------------
+
+def test_dram_tier_holds_2x_int8_chunks(setup):
+    """The host cache tier accounts encoded bytes, so one DRAM budget holds
+    ~2x the chunks under int8 — same doubling as the HBM pool."""
+    from repro.kvstore import LruBytesCache
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        stores = {codec: _engine(model, params,
+                                 FlashKVStore(f"{d}/{codec}"),
+                                 mode="matkv", codec=codec).store
+                  for codec in ("bf16", "int8")}
+        # one byte budget for both tiers (8 bf16 chunks' worth)
+        bf16_payload = len(stores["bf16"].get(stores["bf16"].list_ids()[0]))
+        counts = {}
+        for codec, store in stores.items():
+            cache = LruBytesCache(capacity_bytes=8 * bf16_payload)
+            for cid in store.list_ids():
+                cache.put(cid, store.get(cid))
+            counts[codec] = cache.n_entries
+        assert counts["int8"] >= 1.7 * counts["bf16"]
+
+
+def test_pool_int8_layout_and_budget(setup):
+    cfg, _, _ = setup
+    pool = PagedKvPool(cfg, n_blocks=8, block_size=16, codec="int8")
+    assert pool.k.dtype == jnp.int8 and pool.k_scale.dtype == jnp.float16
+    bf16 = PagedKvPool.block_bytes(cfg, 16, "bf16")
+    int8 = PagedKvPool.block_bytes(cfg, 16, "int8")
+    assert pool.bytes_per_block == int8
+    # hd + 2 scale bytes per vector vs 2*hd: the residency doubling
+    assert 1.7 < bf16 / int8 < 2.0
+    budget = 10 * bf16
+    assert (PagedKvPool.blocks_for_budget(cfg, budget, 16, "int8")
+            > PagedKvPool.blocks_for_budget(cfg, budget, 16, "bf16"))
+
+
+def test_pool_int8_insert_encoded_and_gather_dequant(setup):
+    """Encoded insert writes int8 pages verbatim; the fused gather/dequant
+    view is bit-identical to host dequantize_kv of the same artifact (the
+    property that makes paged int8 match the dense int8 compose)."""
+    cfg, _, _ = setup
+    pool = PagedKvPool(cfg, n_blocks=8, block_size=16, codec="int8")
+    shape = (cfg.num_layers, 20, cfg.num_kv_heads, cfg.head_dim)
+    kf = jax.random.normal(jax.random.PRNGKey(0), shape)
+    vf = kf + 1.0
+    qk, sk = quantize_kv(kf)
+    qv, sv = quantize_kv(vf)
+    from repro.core.quantize import EncodedKV
+    enc = EncodedKV(codec=get_codec("int8"), k=qk, v=qv, k_scale=sk,
+                    v_scale=sv, n_tokens=20)
+    assert pool.insert("c0", encoded=enc, nbytes=99) == 20
+    slots = pool.chunk_slot_ids("c0")
+    np.testing.assert_array_equal(np.asarray(pool.k[:, slots]),
+                                  np.asarray(qk))
+    gk, gv = gather_rows_quant(pool.k, pool.v, pool.k_scale, pool.v_scale,
+                               jnp.asarray(slots)[None], dtype=pool.dtype)
+    np.testing.assert_array_equal(
+        np.asarray(gk[:, 0], np.float32),
+        np.asarray(dequantize_kv(qk, sk, pool.dtype), np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(gv[:, 0], np.float32),
+        np.asarray(dequantize_kv(qv, sv, pool.dtype), np.float32))
+    assert pool.stats.peak_resident_chunks == 1
+
+
+def test_pool_transcodes_on_codec_mismatch(setup):
+    """A bf16 artifact offered to an int8 pool (or vice versa) is transcoded
+    rather than rejected — mixed stores stay servable."""
+    cfg, _, _ = setup
+    pool = PagedKvPool(cfg, n_blocks=8, block_size=16, codec="int8")
+    shape = (cfg.num_layers, 12, cfg.num_kv_heads, cfg.head_dim)
+    kf = jax.random.normal(jax.random.PRNGKey(1), shape)
+    from repro.core.quantize import EncodedKV
+    enc = EncodedKV(codec=get_codec("bf16"), k=kf, v=kf + 1.0, n_tokens=12)
+    pool.insert("c0", encoded=enc)
+    slots = pool.chunk_slot_ids("c0")
+    gk, _ = gather_rows_quant(pool.k, pool.v, pool.k_scale, pool.v_scale,
+                              jnp.asarray(slots)[None], dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(gk[:, 0]),
+                               np.asarray(kf, np.float32), atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# fused kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,kv,hd,block,n_pool,n_max", [
+    (2, 8, 2, 64, 128, 10, 4),  # GQA (the serving shape)
+    (1, 4, 4, 32, 64, 6, 3),    # MHA
+    (2, 4, 1, 128, 128, 8, 2),  # MQA
+    (1, 9, 3, 64, 128, 6, 3),   # smollm-style odd-head GQA
+])
+def test_paged_decode_quant_vs_ref(rng_key, b, h, kv, hd, block,
+                                   n_pool, n_max):
+    """The fused dequant+attention kernel vs its oracle: shared blocks,
+    ragged interior lens, empty trailing blocks. Grouped-query shapes
+    (group > 1, every serving config here) agree with the *jitted* oracle
+    bit-for-bit — the acceptance bar, also asserted in the
+    quant-residency benchmark; the degenerate group == 1 GEMV lowers
+    through a different XLA path and holds to fp tolerance."""
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    k_pool, k_s = quantize_kv(jax.random.normal(ks[1], (n_pool, kv, block, hd)))
+    v_pool, v_s = quantize_kv(jax.random.normal(ks[2], (n_pool, kv, block, hd)))
+    k_s, v_s = k_s[..., 0], v_s[..., 0]
+    tbl = np.zeros((b, n_max), np.int32)
+    lens = np.zeros((b, n_max), np.int32)
+    rng = np.random.default_rng(0)
+    for i in range(b):
+        tbl[i] = rng.permutation(n_pool)[:n_max]
+        tbl[i, 0] = 1                        # every row shares block 1
+        lens[i, 0] = block
+        if n_max > 1:
+            lens[i, 1] = block // 2          # ragged interior chunk tail
+        if n_max > 2:
+            lens[i, 2] = block
+    out = paged_decode_quant(q, k_pool, v_pool, k_s, v_s,
+                             jnp.asarray(tbl), jnp.asarray(lens))
+    oracle = jax.jit(ref.paged_decode_quant_ref)(
+        q, k_pool, v_pool, k_s, v_s, jnp.asarray(tbl), jnp.asarray(lens))
+    if h // kv > 1:
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle))
+    else:
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   rtol=3e-5, atol=3e-5)
+
+
+def test_paged_decode_quant_matches_dequantized_paged_decode(rng_key):
+    """Fused on-chip dequant == dequantize-then-attend (the unfused
+    composition through the fp kernel), to fp tolerance."""
+    b, h, kv, hd, block, n_pool = 2, 4, 2, 32, 64, 6
+    from repro.kernels.paged_decode import paged_decode
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kf = jax.random.normal(ks[1], (n_pool, kv, block, hd))
+    vf = jax.random.normal(ks[2], (n_pool, kv, block, hd))
+    qk, sk = quantize_kv(kf)
+    qv, sv = quantize_kv(vf)
+    tbl = jnp.asarray([[0, 3], [5, 0]], jnp.int32)
+    lens = jnp.asarray([[block, 10], [30, 0]], jnp.int32)
+    out = paged_decode_quant(q, qk, qv, sk[..., 0], sv[..., 0], tbl, lens)
+    wide = paged_decode(q, dequantize_kv(qk, sk, jnp.float32),
+                        dequantize_kv(qv, sv, jnp.float32), tbl, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(wide),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_decode_quant_fully_masked_row_outputs_zeros(rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (2, 4, 32))
+    k_pool, k_s = quantize_kv(jax.random.normal(ks[1], (4, 2, 64, 32)))
+    v_pool, v_s = quantize_kv(jax.random.normal(ks[2], (4, 2, 64, 32)))
+    tbl = jnp.asarray([[1, 2], [0, 0]], jnp.int32)
+    lens = jnp.asarray([[64, 7], [0, 0]], jnp.int32)
+    out = paged_decode_quant(q, k_pool, v_pool, k_s[..., 0], v_s[..., 0],
+                             tbl, lens)
+    np.testing.assert_array_equal(np.asarray(out[1]), 0.0)
+
+
+def test_paged_decode_quant_op_model_layout(rng_key):
+    ks = jax.random.split(rng_key, 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32))
+    k_pool, k_s = quantize_kv(jax.random.normal(ks[1], (6, 2, 64, 32)))
+    v_pool, v_s = quantize_kv(jax.random.normal(ks[2], (6, 2, 64, 32)))
+    tbl = jnp.asarray([[0, 3], [5, 0]], jnp.int32)
+    lens = jnp.asarray([[64, 10], [30, 0]], jnp.int32)
+    out = paged_decode_quant_op(q, k_pool, v_pool, k_s[..., 0], v_s[..., 0],
+                                tbl, lens, interpret=True)
+    expect = ref.paged_decode_quant_ref(q[:, 0], k_pool, v_pool, k_s[..., 0],
+                                        v_s[..., 0], tbl, lens)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(expect),
+                               rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8 serving: quality bound vs bf16, parity paged vs dense
+# ---------------------------------------------------------------------------
+
+def test_int8_quality_within_rel_bound_of_bf16(setup):
+    """The stated end-to-end quality bound: int8 artifacts shift
+    teacher-forced logits < 10% rel of the bf16 path (typically ~1%)."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        e8 = _engine(model, params, FlashKVStore(d + "/8"), mode="matkv",
+                     codec="int8")
+        eb = _engine(model, params, FlashKVStore(d + "/b"), mode="matkv",
+                     codec="bf16")
+        buf = 192
+        rel = teacher_forced_rel(eb, dense_row_path(eb, buf),
+                                 e8, dense_row_path(e8, buf),
+                                 QUESTIONS[0], steps=4,
+                                 require_same_first=False)
+        assert rel < 0.10, f"int8 shifted logits {rel:.3f} rel vs bf16"
+
+
+def test_paged_int8_matches_dense_int8_at_logits_level(setup):
+    """Acceptance bar: the paged int8 path (int8 pages + quantized tail)
+    tracks the non-paged int8 engine path within 5% rel, teacher-forced,
+    and agrees on the first token."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv",
+                      codec="int8")
+        buf = 192
+        rel = teacher_forced_rel(eng, dense_row_path(eng, buf),
+                                 eng, paged_row_path(eng, buf,
+                                                     block_size=32),
+                                 QUESTIONS[0], steps=6)
+        assert rel < 0.05, f"paged int8 drifted {rel:.3f} rel from dense"
+
+
+def test_paged_int8_scheduler_answers_match_dense_engine(setup):
+    """End to end: ContinuousScheduler(paged=True) over an int8 engine
+    returns the same answers as the single-request int8 path, reading each
+    unique chunk once."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng = _engine(model, params, store, mode="matkv", codec="int8")
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", UserWarning)
+            refs = [eng.answer(q, max_new_tokens=5)[0] for q in QUESTIONS]
+            cont = ContinuousScheduler(eng, max_slots=2, paged=True,
+                                       block_size=32)
+            ans, m = cont.run(QUESTIONS, max_new_tokens=5)
+            cont.shutdown()
+        assert ans == refs
+        assert m.chunk_misses == len({c for q in QUESTIONS
+                                      for c in eng.retrieve(q)})
+        assert m.hbm_kv_bytes_resident > 0

@@ -167,6 +167,21 @@ def test_kv_dequant_sweep(rng_key, n, hd, out_dtype):
                                rtol=1e-2, atol=1e-2)
 
 
+@pytest.mark.parametrize("n", [300, 65, 1])
+def test_kv_dequant_ragged_rows(rng_key, n):
+    """Regression: row counts not divisible by block_rows (any trimmed
+    ragged chunk, e.g. 300 rows vs block 256) used to raise; the wrapper
+    now pads to the block multiple and slices, and padded rows never leak
+    into the output."""
+    x = jax.random.normal(rng_key, (n, 64)) * 2.0
+    q8, sc = quantize_kv(x)
+    out = kv_dequant(np.asarray(q8), np.asarray(sc), block_rows=256)
+    assert out.shape == (n, 64)
+    expect = ref.kv_dequant_ref(q8, sc)
+    np.testing.assert_array_equal(np.asarray(out, np.float32),
+                                  np.asarray(expect, np.float32))
+
+
 @pytest.mark.parametrize("b,s,din,st,bd,bt", [
     (1, 128, 64, 16, 32, 32),
     (2, 256, 128, 8, 64, 128),

@@ -11,7 +11,7 @@ import pytest
 from repro.core.economics import SsdSpec
 from repro.kvstore import (AsyncKvLoader, FlashKVStore, LruBytesCache,
                            PrefetchPipeline, SimulatedReader, TieredStore,
-                           deserialize, serialize)
+                           deserialize, read_meta, serialize)
 
 
 def test_serialize_roundtrip_mixed_dtypes():
@@ -34,6 +34,26 @@ def test_serialize_roundtrip_mixed_dtypes():
 def test_serialize_rejects_bad_magic():
     with pytest.raises(ValueError):
         deserialize(b"XXXXgarbage")
+    with pytest.raises(ValueError):
+        read_meta(b"XXXXgarbage")
+
+
+def test_read_meta_header_only():
+    """read_meta works on a header-sized prefix — schedulers can inspect
+    n_tokens/codec without reading (or holding) the payload bytes."""
+    import struct
+    tensors = {"k": np.random.randn(8, 64).astype(np.float32)}
+    data = serialize(tensors, {"n_tokens": 8, "codec": "bf16", "doc": "d"})
+    hlen = struct.unpack("<I", data[4:8])[0]
+    prefix = data[:8 + hlen]                   # no payload bytes at all
+    assert len(prefix) < len(data)
+    meta = read_meta(prefix)
+    assert meta == {"n_tokens": 8, "codec": "bf16", "doc": "d"}
+    assert read_meta(data) == meta             # full artifact works too
+    with pytest.raises(ValueError, match="truncated"):
+        read_meta(data[:10])
+    with pytest.raises(ValueError, match="truncated"):
+        read_meta(data[:6])                    # magic ok, length word cut
 
 
 def test_store_put_get_delete(tmp_path):
@@ -53,6 +73,46 @@ def test_store_rejects_path_traversal(tmp_path):
     store = FlashKVStore(tmp_path)
     with pytest.raises(ValueError):
         store.put("../evil", b"x")
+
+
+def test_store_concurrent_puts_same_chunk_id(tmp_path):
+    """Regression: concurrent puts of one chunk_id used to share the single
+    ``<id>.tmp`` name — one writer renamed the other's half-written file (or
+    crashed on FileNotFoundError when its tmp was stolen). With unique tmp
+    suffixes every put is self-contained: no exception, the surviving
+    payload is one of the written values, intact, and no tmp litter."""
+    store = FlashKVStore(tmp_path)
+    payloads = [bytes([i]) * 5000 for i in range(4)]
+    errs = []
+
+    def hammer(i):
+        try:
+            for _ in range(30):
+                store.put("hot", payloads[i])
+        except Exception as e:                 # pragma: no cover - fail path
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not errs, errs
+    data = store.get("hot")
+    assert data in payloads                    # intact, not interleaved
+    assert not list(tmp_path.glob("*.tmp"))    # every tmp consumed/cleaned
+
+
+def test_store_get_meta_reads_header_only(tmp_path):
+    from repro.kvstore import serialize
+    store = FlashKVStore(tmp_path)
+    tensors = {"k": np.zeros((4, 1000), np.float32)}
+    store.put("c1", serialize(tensors, {"n_tokens": 7, "codec": "int8"}))
+    read0 = store.stats.bytes_read
+    meta = store.get_meta("c1")
+    assert meta["n_tokens"] == 7 and meta["codec"] == "int8"
+    header_bytes = store.stats.bytes_read - read0
+    assert 0 < header_bytes < 200              # payload (16KB) untouched
 
 
 def test_lru_eviction_order():
@@ -278,6 +338,30 @@ def test_async_loader_coalesces_duplicate_inflight_loads():
     assert f2.result(timeout=5) == [b"a", b"b"]
     assert f3.result(timeout=5) == b"a"
     assert sorted(reads) == ["a", "b"]       # exactly one read per chunk
+    loader.shutdown()
+
+
+def test_async_loader_accounts_encoded_bytes(tmp_path):
+    """Loader stats count one read of the *encoded* payload per initiated
+    load — coalesced duplicates cost nothing, and nothing is ever counted
+    at widened size (the payload IS the flash/PCIe traffic)."""
+    store = FlashKVStore(tmp_path)
+    store.put("a", b"x" * 100)
+    store.put("b", b"y" * 50)
+    loader = AsyncKvLoader(store, n_workers=2)
+
+    def settle(pred):                          # stats land in a done-callback
+        deadline = time.time() + 5
+        while not pred() and time.time() < deadline:
+            time.sleep(0.001)
+
+    loader.load_many(["a", "b", "a"]).result(timeout=5)
+    settle(lambda: loader.stats.reads == 2)
+    assert loader.stats.reads == 2
+    assert loader.stats.bytes_loaded == 150
+    loader.load("a").result(timeout=5)         # registry dropped: fresh read
+    settle(lambda: loader.stats.reads == 3)
+    assert loader.stats.reads == 3 and loader.stats.bytes_loaded == 250
     loader.shutdown()
 
 

@@ -122,11 +122,11 @@ def test_quantized_artifact_roundtrip(dense_setup):
     cfg, model, params = dense_setup
     with tempfile.TemporaryDirectory() as d:
         store = FlashKVStore(d)
-        mat_q = Materializer(model, params, store, quantized=True)
+        mat_q = Materializer(model, params, store, codec="int8")
         chunk = chunk_document("doc", np.arange(32) % 300, chunk_tokens=32)[0]
         n_q = mat_q.ingest(chunk)
         art_q, meta = load_artifact(cfg, store.get(chunk.chunk_id))
-        assert meta["quantized"]
+        assert meta["codec"] == "int8"
         _, (k_true, _) = model.prefill(
             params, {"tokens": jnp.asarray(chunk.tokens)[None]})
         rel = (jnp.linalg.norm(art_q[0].astype(jnp.float32)
@@ -134,7 +134,7 @@ def test_quantized_artifact_roundtrip(dense_setup):
                / jnp.linalg.norm(k_true.astype(jnp.float32)))
         assert float(rel) < 0.05
         # storage saving vs bf16
-        mat_f = Materializer(model, params, store, quantized=False)
+        mat_f = Materializer(model, params, store, codec="bf16")
         chunk2 = dataclasses.replace(chunk, chunk_id="other")
         n_f = mat_f.ingest(chunk2)
         assert n_q < 0.65 * n_f

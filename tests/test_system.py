@@ -96,7 +96,7 @@ def test_quantized_engine_runs(setup):
     cfg, model, params = setup
     with tempfile.TemporaryDirectory() as d:
         store = FlashKVStore(d)
-        eng = _engine(model, params, store, mode="matkv", quantized=True)
+        eng = _engine(model, params, store, mode="matkv", codec="int8")
         ans, t = eng.answer("where is the amber key?", max_new_tokens=4)
         assert isinstance(ans, str)
         # quantized artifacts are smaller than the bf16 KV would be
