@@ -1,0 +1,156 @@
+"""Tensor-parallel paged serving over a device mesh (DESIGN.md §12).
+
+The KV-offloading bottleneck analysis (PAPERS.md) puts serving capacity
+behind two walls — HBM residency and the flash load link. Sharding the
+paged block pool and the decode step along the KV-head axis of a mesh
+multiplies both: each device holds 1/N of every resident chunk's pages and
+serves 1/N of the attention heads. This suite validates the whole stack on
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (no accelerators
+needed), in a subprocess so the forced device count never leaks into the
+parent benchmark process:
+
+* 1-device mesh answers must be BIT-IDENTICAL to the plain single-device
+  paged path (the mesh machinery adds sharding constraints, not math);
+* 8-device mesh logits must pass the shared teacher-forced parity bound
+  against the single-device dense path (``serving/parity.py`` — the same
+  harness tests use, so bench and tests measure one protocol);
+* per-shard pool bytes (ground truth from the device buffers) must sum to
+  the single-device pool footprint;
+* the ``shard_map`` paged-decode kernel must match the single-device kernel
+  bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+REL_BOUND = 0.05        # teacher-forced max relative logits diff @ 8 devices
+
+
+def _child(smoke: bool):
+    """Runs inside the forced-8-device subprocess; prints CSV rows."""
+    import tempfile
+    import time
+
+    import jax
+
+    from benchmarks.common import DOCS, row
+    from repro.configs import get_config
+    from repro.kvstore import FlashKVStore
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import build_model
+    from repro.serving import (ContinuousScheduler, RagEngine,
+                               dense_row_path, paged_row_path,
+                               teacher_forced_rel)
+
+    assert len(jax.devices()) >= 8, "child must run with 8 forced devices"
+    out = []
+    n_requests, max_new = (8, 3) if smoke else (16, 5)
+    # KV-head count divisible by the 8-way mesh so the pool really shards
+    cfg = get_config("smollm-135m").reduced(
+        vocab_size=320, num_heads=8, num_kv_heads=8, head_dim=16,
+        d_model=128, d_ff=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng0 = RagEngine(model, params, store, mode="matkv",
+                         chunk_tokens=48, top_k=2)
+        for doc, text in sorted(DOCS.items()):
+            eng0.ingest(doc, text)
+        words = sorted(DOCS)
+        qs = [f"where is the {words[i % len(words)]} artifact?"
+              for i in range(n_requests)]
+
+        def serve(eng, tag):
+            sched = ContinuousScheduler(eng, max_slots=4, paged=True,
+                                        block_size=32)
+            sched.run(qs[:4], max_new_tokens=max_new)          # warm jit
+            t0 = time.perf_counter()
+            answers, m = sched.run(qs, max_new_tokens=max_new)
+            wall = time.perf_counter() - t0
+            sched.shutdown()
+            out.append(row(f"tp_serving/{tag}/tokens_per_s", m.tokens_per_s,
+                           f"wall_s={wall:.2f};hit_rate={m.chunk_hit_rate:.2f}"))
+            return answers, m
+
+        ans0, m0 = serve(eng0, "mesh0_single_device")
+
+        def mesh_engine(n):
+            eng = RagEngine(model, params, store, mode="matkv",
+                            chunk_tokens=48, top_k=2,
+                            mesh=make_serving_mesh(n))
+            eng._chunks, eng.vdb = eng0._chunks, eng0.vdb
+            return eng
+
+        # 1-device mesh: the sharding machinery must be a numeric no-op
+        ans1, m1 = serve(mesh_engine(1), "mesh1")
+        assert ans1 == ans0, (
+            "1-device-mesh paged answers diverged from the single-device "
+            "path — the mesh threading changed numerics")
+        out.append(row("tp_serving/mesh1/bit_parity", 0.0, "exact=True"))
+
+        # 8-device mesh: sharded pool + TP decode
+        eng8 = mesh_engine(8)
+        ans8, m8 = serve(eng8, "mesh8")
+        shard_bytes = m8.pool_shard_bytes
+        assert len(shard_bytes) == 8, shard_bytes
+        assert sum(shard_bytes) == sum(m0.pool_shard_bytes), (
+            f"per-shard pool bytes {shard_bytes} do not sum to the "
+            f"single-device footprint {m0.pool_shard_bytes}")
+        out.append(row(
+            "tp_serving/mesh8/pool_bytes_per_shard", float(shard_bytes[0]),
+            f"n_shards=8;sum={sum(shard_bytes)};"
+            f"single_device={m0.pool_shard_bytes[0]}"))
+
+        # teacher-forced logits parity: single-device dense vs 8-device paged
+        buf = 192
+        rel = teacher_forced_rel(eng0, dense_row_path(eng0, buf),
+                                 eng8, paged_row_path(eng8, buf),
+                                 qs[0], steps=2 if smoke else 4)
+        assert rel < REL_BOUND, (
+            f"8-device teacher-forced rel diff {rel:.4f} over {REL_BOUND}")
+        out.append(row("tp_serving/mesh8/teacher_forced_rel", rel,
+                       f"bound={REL_BOUND}"))
+
+        # shard_map kernel: bit parity against the single-device kernel
+        # (one probe shared with tests/test_dist_serving.py)
+        from repro.kernels.paged_decode import tp_parity_probe
+        assert tp_parity_probe(make_serving_mesh(8)), (
+            "paged_decode_tp diverged from the single-device kernel")
+        out.append(row("tp_serving/mesh8/kernel_bit_parity", 0.0,
+                       "exact=True"))
+    print("\n".join(out))
+
+
+def run(smoke: bool = False):
+    """Spawn the forced-8-host-device child and relay its CSV rows. The
+    parent process may already hold a single-device jax runtime, so the
+    device-count flag has to be set before a fresh interpreter boots."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env.setdefault("REPRO_PALLAS_INTERPRET", "1")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(root), str(root / "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, "-m", "benchmarks.bench_tp_serving", "--child"]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=root, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"tp_serving child failed:\n{proc.stderr[-4000:]}")
+    return [line for line in proc.stdout.splitlines() if line.strip()]
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child(smoke="--smoke" in sys.argv)
+    else:
+        print("\n".join(run()))

@@ -29,6 +29,7 @@ SUITES = {
     "continuous_batching": "benchmarks.bench_continuous",
     "paged_sharing": "benchmarks.bench_paged_sharing",
     "quant_residency": "benchmarks.bench_quant_residency",
+    "tp_serving": "benchmarks.bench_tp_serving",
     "fig7_overlap": "benchmarks.bench_overlap",
     "table45_power": "benchmarks.bench_power",
     "fig8_lengths": "benchmarks.bench_lengths",

@@ -175,10 +175,18 @@ class TieredStore:
         entry = self._entries.get(chunk_id)
         if entry is None:
             self.stats.misses += 1
-            # a miss is still an access: it feeds the admission estimator
+            # a miss is still an access: the caller's recompute -> offer path
+            # feeds the admission estimator via on_access inside offer()
             return None
         entry.hits += 1
         entry.last_access = now
+        # a hit is an access too. Without feeding the admission clock here,
+        # _last_seen goes stale while the chunk is resident, so a hot chunk
+        # that later gets evicted is wrongly rejected at its next offer (the
+        # interval is measured from the long-ago admission instead of the
+        # last access) — the admit decision is irrelevant on a hit, only the
+        # clock update matters.
+        self.admission.on_access(chunk_id, now)
         self.stats.hits += 1
         return self.store.get(chunk_id)
 

@@ -8,12 +8,13 @@ aliases for older JAX releases).
 from repro.dist import _compat  # noqa: F401  (must import first: jax shims)
 from repro.dist.partition import (batch_specs, cache_specs, param_specs,
                                   to_shardings, zero1_specs)
-from repro.dist.sharding import (DEFAULT_RULES, current_mesh, current_rules,
-                                 merge_rules, mesh_context, resolve, shard,
-                                 spec_for)
+from repro.dist.sharding import (DEFAULT_RULES, SERVING_RULES, current_mesh,
+                                 current_rules, merge_rules, mesh_context,
+                                 resolve, shard, spec_for)
 
 __all__ = [
-    "DEFAULT_RULES", "batch_specs", "cache_specs", "current_mesh",
-    "current_rules", "merge_rules", "mesh_context", "param_specs", "resolve",
-    "shard", "spec_for", "to_shardings", "zero1_specs",
+    "DEFAULT_RULES", "SERVING_RULES", "batch_specs", "cache_specs",
+    "current_mesh", "current_rules", "merge_rules", "mesh_context",
+    "param_specs", "resolve", "shard", "spec_for", "to_shardings",
+    "zero1_specs",
 ]

@@ -166,7 +166,9 @@ def batch_specs(mesh, batch, rules: Optional[Rules] = None):
 # field name across cache flavours (SSMCache.h is (L,B,din,st), HybridCache.h
 # is (L,B,width)) maps correctly.
 _CACHE_NAMES: Dict[tuple, tuple] = {
-    # KV buffers (L, B, S_buf, KV, hd): sequence-sharded (cache_seq)
+    # KV buffers (L, B, S_buf, KV, hd): sequence-sharded under the default
+    # (train/prefill) rules; the serving rules turn cache_seq off and the
+    # kv_heads axis carries the tensor parallelism instead (DESIGN.md §12)
     ("k", 5): (None, "batch", "cache_seq", "kv_heads", None),
     ("v", 5): (None, "batch", "cache_seq", "kv_heads", None),
     ("cross_k", 5): (None, "batch", "cache_seq", "kv_heads", None),
@@ -175,15 +177,18 @@ _CACHE_NAMES: Dict[tuple, tuple] = {
     ("conv", 4): (None, "batch", None, "inner"),
     ("h", 4): (None, "batch", "inner", None),
     ("h", 3): (None, "batch", "inner"),
-    # bookkeeping (replicated)
+    # bookkeeping (replicated); rank-2 slot_pos / rank-1 length are the
+    # row-slotted (RowAttnCache) per-row variants
     ("slot_pos", 1): (None,),
+    ("slot_pos", 2): (None, None),
     ("length", 0): (),
+    ("length", 1): (None,),
 }
 
 
 def cache_specs(mesh, cache, rules: Optional[Rules] = None):
-    """Specs for a decode cache pytree (AttnCache / SSMCache / HybridCache /
-    EncDecCache, real or eval_shape)."""
+    """Specs for a decode cache pytree (AttnCache / RowAttnCache / SSMCache /
+    HybridCache / EncDecCache, real or eval_shape)."""
     merged = merge_rules(rules)
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     specs = []

@@ -81,6 +81,20 @@ DEFAULT_RULES: Rules = {
 }
 
 
+# Serving-path overrides (DESIGN.md §12). Decode shards the KV-HEAD axis of
+# row caches and the paged block pool (the same "model" mesh axis the wk/wv
+# projections shard their output dim over, so each device projects, stores,
+# gathers and attends over only its own KV heads — no per-step collectives
+# on the KV hot path). cache_seq's default sequence sharding is the
+# train/prefill artifact layout; sequence-sharding a paged pool would put
+# the gather/scatter indirection behind cross-device collectives every
+# decode step, so serving turns it off. act_seq is train/prefill-only.
+SERVING_RULES: Rules = {
+    "cache_seq": (),
+    "act_seq": (),
+}
+
+
 def merge_rules(rules: Optional[Rules] = None) -> Rules:
     """Overrides MERGE ONTO the defaults; an explicit ``{"name": ()}`` entry
     is how a caller turns a default rule off."""

@@ -3,6 +3,8 @@
 from repro.kernels.ops import (chunked_decode_op, flash_prefill_op,
                                kv_dequant_op, mamba_scan_op, paged_decode_op,
                                paged_decode_quant_op)
+from repro.kernels.paged_decode import paged_decode_tp
 
 __all__ = ["chunked_decode_op", "flash_prefill_op", "kv_dequant_op",
-           "mamba_scan_op", "paged_decode_op", "paged_decode_quant_op"]
+           "mamba_scan_op", "paged_decode_op", "paged_decode_quant_op",
+           "paged_decode_tp"]

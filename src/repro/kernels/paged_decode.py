@@ -114,3 +114,61 @@ def paged_decode(q, k_pool, v_pool, block_tables, block_lens, *,
         interpret=interpret,
     )(tbl, blens, qg, k_pool, v_pool)
     return out.reshape(b, h, hd)
+
+
+def paged_decode_tp(q, k_pool, v_pool, block_tables, block_lens, *, mesh,
+                    axis: str = "model", interpret: bool = True):
+    """Tensor-parallel paged decode: ``shard_map`` over the KV-head axis.
+
+    Each device runs the single-device kernel on its own KV-head slice of
+    the pool and of q (the head axis is kv-major — ``head = kv * group + g``
+    — so a contiguous H/n slice of q is exactly the query heads of a
+    contiguous KV/n slice of the pool). Block tables and valid counts
+    replicate: paging is head-agnostic, every shard walks the same pages.
+    GQA softmax normalization is per query head, entirely inside one KV
+    head, so the sharded kernel needs NO collectives and is bit-identical
+    to the single-device kernel per head (asserted in
+    tests/test_dist_serving.py).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import _compat  # noqa: F401  (installs jax.shard_map)
+
+    n = mesh.shape[axis]
+    kvh = k_pool.shape[1]
+    if kvh % n:
+        raise ValueError(f"paged_decode_tp: num_kv_heads={kvh} must divide "
+                         f"the {axis!r} mesh axis ({n}) — indivisible head "
+                         f"counts serve via the replicated kernel instead")
+    fn = jax.shard_map(
+        functools.partial(paged_decode, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(None, axis, None), P(None, axis, None, None),
+                  P(None, axis, None, None), P(None, None), P(None, None)),
+        out_specs=P(None, axis, None),
+        check_vma=False,
+    )
+    return fn(q, k_pool, v_pool, block_tables, block_lens)
+
+
+def tp_parity_probe(mesh, *, seed: int = 0, interpret: bool = True) -> bool:
+    """Shared TP-kernel acceptance probe (bench and tests measure one
+    protocol, the serving/parity.py precedent): a grouped paged layout with
+    ragged / zero-length tail blocks, sized so the KV-head axis divides the
+    mesh. True iff ``paged_decode_tp`` matches the single-device kernel
+    bit-for-bit."""
+    import numpy as np
+
+    n = mesh.shape["model"]
+    rng = np.random.default_rng(seed)
+    b, kvh, group, hd, block, nblk = 2, n, 2, 16, 16, 6
+    h = kvh * group
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nblk, kvh, block, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nblk, kvh, block, hd)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, nblk, size=(b, 3)), jnp.int32)
+    lens = jnp.asarray([[block, block, 7], [block, 4, 0]], jnp.int32)
+    ref = paged_decode(q, kp, vp, tbl, lens, interpret=interpret)
+    tp = paged_decode_tp(q, kp, vp, tbl, lens, mesh=mesh,
+                         interpret=interpret)
+    return bool(jnp.array_equal(ref, jnp.asarray(tp)))

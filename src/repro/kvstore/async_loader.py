@@ -121,7 +121,11 @@ class PrefetchPipeline:
 
     Consumed futures are dropped as soon as their payload is handed out, so
     live payload bytes stay bounded by the pipeline depth instead of growing
-    with the run length; early exit cancels whatever is still queued.
+    with the run length; early exit cancels whatever is still queued. The
+    bound is exact: at most ``depth`` payloads are in flight (loading, or
+    loaded but not yet handed to the consumer) at any moment — both fill
+    loops share the ``len(inflight) < depth`` guard, where an off-by-one
+    (``<=``) used to hold depth+1 payloads live.
     """
 
     def __init__(self, items: Iterable, load_fn: Callable, depth: int = 1,
@@ -136,7 +140,7 @@ class PrefetchPipeline:
         inflight: Dict[int, cf.Future] = {}
         idx = 0
         try:
-            while idx < len(self._items) and len(inflight) <= self._depth:
+            while idx < len(self._items) and len(inflight) < self._depth:
                 inflight[idx] = self._pool.submit(self._load_fn,
                                                   self._items[idx])
                 idx += 1
@@ -144,8 +148,9 @@ class PrefetchPipeline:
             while pos < len(self._items):
                 item = self._items[pos]
                 payload = inflight.pop(pos).result()
-                # top up the pipeline before yielding (overlap with consumption)
-                while idx < len(self._items) and idx - pos <= self._depth:
+                # top up the pipeline before yielding (overlap with
+                # consumption), under the same <= depth in-flight bound
+                while idx < len(self._items) and len(inflight) < self._depth:
                     inflight[idx] = self._pool.submit(self._load_fn,
                                                       self._items[idx])
                     idx += 1

@@ -23,3 +23,19 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     return jax.make_mesh(
         (n_data, n_model), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def make_serving_mesh(n_model: int, *, devices=None):
+    """1-axis ``("model",)`` mesh over the first ``n_model`` devices — the
+    tensor-parallel serving mesh (DESIGN.md §12): decode shards KV heads and
+    the Megatron column/row-parallel projections over this axis. Built from
+    an explicit device slice (not ``jax.make_mesh``) so a subset of the
+    platform's devices works — the forced-host-device CPU platform and real
+    accelerators alike."""
+    import numpy as np
+
+    devices = list(jax.devices() if devices is None else devices)
+    if not 1 <= n_model <= len(devices):
+        raise ValueError(f"make_serving_mesh: n_model={n_model} must be in "
+                         f"[1, {len(devices)}] (visible devices)")
+    return jax.sharding.Mesh(np.asarray(devices[:n_model]), ("model",))

@@ -6,10 +6,18 @@ flash store, then serves batched requests through the MatKV engine with the
 overlap pipeline. On one CPU device this is the runnable end-to-end demo; on
 a pod slice the same script serves with sharded params/caches.
 
+``--mesh N`` serves tensor-parallel over a 1-axis ("model",) mesh of the
+first N devices (DESIGN.md §12): params placed by the repro.dist partition
+specs, the row cache / paged block pool sharded along the KV-head axis.
+``--continuous`` swaps the fixed BatchScheduler for the continuous-batching
+scheduler; ``--paged`` additionally serves over the chunk-shared block pool
+(implies --continuous). Validate without accelerators via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --requests 16 --batch 4 [--mode matkv|vanilla|cacheblend] [--overlap] \
-      [--ssd 9100pro|raid0|pm9a3|dram]
+      [--ssd 9100pro|raid0|pm9a3|dram] [--mesh N] [--continuous] [--paged]
 """
 
 from __future__ import annotations
@@ -22,8 +30,9 @@ import jax
 
 from repro.configs import ASSIGNED, get_config
 from repro.kvstore import FlashKVStore, SimulatedReader
+from repro.launch.mesh import make_serving_mesh
 from repro.models import build_model
-from repro.serving import BatchScheduler, RagEngine
+from repro.serving import BatchScheduler, ContinuousScheduler, RagEngine
 
 CORPUS_WORDS = ["amber", "basil", "cedar", "delta", "ember", "fjord",
                 "grove", "haven", "iris", "jade", "karst", "lotus"]
@@ -49,7 +58,18 @@ def main() -> None:
     ap.add_argument("--codec", default="bf16", choices=["bf16", "int8"],
                     help="KV storage codec, end to end (DESIGN.md §11): "
                          "int8 halves flash bytes and doubles pool residency")
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="serve tensor-parallel over a ('model',) mesh of "
+                         "the first N devices (0 = single-device)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching scheduler (per-request "
+                         "admit/evict) instead of fixed batches")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve over the chunk-shared paged block pool "
+                         "(implies --continuous)")
     args = ap.parse_args()
+    if args.paged:
+        args.continuous = True
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -58,10 +78,20 @@ def main() -> None:
         ap.error(f"{args.arch} ({cfg.family}): batched serving launcher "
                  "supports attention-KV families; SSM/hybrid serve "
                  "single-stream via RagEngine (see examples/)")
+    if args.continuous and args.mode != "matkv":
+        ap.error("--continuous/--paged require --mode matkv (the continuous "
+                 "scheduler serves materialized artifacts)")
+    if args.paged and args.rerotate:
+        # fail at parse time, not minutes later in init_paged_cache: shared
+        # chunk pages must be position-independent (DESIGN.md §10)
+        ap.error("--paged requires rerotate=False: re-rotated keys are "
+                 "position-dependent and cannot be shared across rows")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    mesh = make_serving_mesh(args.mesh) if args.mesh else None
     print(f"serving {cfg.name} mode={args.mode} "
-          f"devices={len(jax.devices())}")
+          f"devices={len(jax.devices())}"
+          + (f" mesh=model:{args.mesh}" if mesh is not None else ""))
 
     root_ctx = (tempfile.TemporaryDirectory() if args.store_dir is None
                 else None)
@@ -71,7 +101,8 @@ def main() -> None:
         reader = SimulatedReader(store, args.ssd) if args.ssd else None
         eng = RagEngine(model, params, store, mode=args.mode,
                         chunk_tokens=64, top_k=2, reader=reader,
-                        rerotate=args.rerotate, codec=args.codec)
+                        rerotate=args.rerotate, codec=args.codec,
+                        mesh=mesh)
         t0 = time.perf_counter()
         n = 0
         for i, w in enumerate(CORPUS_WORDS):
@@ -83,6 +114,26 @@ def main() -> None:
 
         qs = [f"where is the {CORPUS_WORDS[i % len(CORPUS_WORDS)]} artifact?"
               for i in range(args.requests)]
+        if args.continuous:
+            sched = ContinuousScheduler(eng, max_slots=args.batch,
+                                        paged=args.paged)
+            sched.run(qs[:args.batch], max_new_tokens=args.new_tokens)  # warm
+            t0 = time.perf_counter()
+            answers, m = sched.run(qs, max_new_tokens=args.new_tokens)
+            wall = time.perf_counter() - t0
+            sched.shutdown()
+            print(f"served {len(answers)} requests in {wall:.2f}s "
+                  f"({m.tokens_per_s:.1f} tok/s, p95={m.p95_latency_s:.3f}s, "
+                  f"paged={args.paged})")
+            if args.paged:
+                shard_mb = [b / 2**20 for b in m.pool_shard_bytes]
+                print(f"pool: hit_rate={m.chunk_hit_rate:.2f} "
+                      f"flash={m.flash_bytes_loaded / 2**20:.2f} MiB "
+                      f"resident_peak={m.hbm_kv_bytes_resident / 2**20:.2f} "
+                      f"MiB over {len(shard_mb)} shard(s) "
+                      f"({', '.join(f'{s:.2f}' for s in shard_mb)} MiB each)")
+            print(f"sample answer: {answers[0]!r}")
+            return
         if args.mode == "matkv":
             sched = BatchScheduler(eng, batch_size=args.batch,
                                    overlap=args.overlap)

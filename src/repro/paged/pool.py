@@ -32,18 +32,38 @@ Host-side control plane is plain Python (deterministic, unit-testable);
 only the block tensors live on device. Single-writer discipline: the
 serving loop owns all mutations (the scheduler admits/evicts on one
 thread), so there is no lock.
+
+Under a serving mesh (DESIGN.md §12) the block tensors are laid out
+KV-head-sharded through the ``repro.dist`` rule machinery: each device
+holds every page for 1/N of the heads, so residency per device drops N×
+while block ids, refcounts and the free list stay global host state (the
+folded (layer, slot) axes never shard — a block id must mean the same
+token range on every shard). ``device_bytes_per_shard`` /
+``pinned_bytes_per_shard`` expose the per-shard accounting, which sums to
+the single-device totals by construction.
 """
 
 from __future__ import annotations
 
+import math
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.core.quantize import EncodedKV, KvCodec, get_codec
+from repro.dist.sharding import spec_for
+
+# Logical axes of the flat block tensors (L, n_slots, KV, hd) / scale
+# tensors (L, n_slots, KV). Only the KV-head axis ever shards: the folded
+# (layer, slot) axes must mean the same token range on every device shard,
+# or block ids would name different pages per device.
+_BLOCK_AXES = (None, None, "kv_heads", None)
+_SCALE_AXES = (None, None, "kv_heads")
 
 
 @dataclass
@@ -75,7 +95,8 @@ class PagedKvPool:
 
     def __init__(self, cfg, n_blocks: int, block_size: int = 64,
                  n_layers: Optional[int] = None, dtype=None,
-                 codec: Union[str, KvCodec, None] = None):
+                 codec: Union[str, KvCodec, None] = None,
+                 mesh=None, rules: Optional[dict] = None):
         if n_blocks <= 0 or block_size <= 0:
             raise ValueError("PagedKvPool: n_blocks and block_size must be "
                              "positive")
@@ -88,14 +109,30 @@ class PagedKvPool:
         # the codec's (same thing for the passthrough codec)
         self.dtype = dtype or jnp.dtype(cfg.activation_dtype)
         self.storage_dtype = jnp.dtype(self.codec.storage_dtype or self.dtype)
+        # tensor parallelism (DESIGN.md §12): with a mesh, the block tensors
+        # are laid out KV-head-sharded via the repro.dist rule machinery.
+        # All host-side control plane (free list, refcounts, block ids) stays
+        # global — every device holds the same pages for ITS heads, so one
+        # allocator drives all shards.
+        self.mesh = mesh
+        self._rules = rules
+
+        def place(arr, names):
+            if mesh is None:
+                return arr
+            spec = spec_for(mesh, arr.shape, names, rules)
+            return jax.device_put(arr, NamedSharding(mesh, spec))
+
         n_slots = self.n_blocks * self.block_size
         shape = (self.n_layers, n_slots, cfg.num_kv_heads, cfg.head_dim)
-        self.k = jnp.zeros(shape, self.storage_dtype)
-        self.v = jnp.zeros(shape, self.storage_dtype)
+        self.k = place(jnp.zeros(shape, self.storage_dtype), _BLOCK_AXES)
+        self.v = place(jnp.zeros(shape, self.storage_dtype), _BLOCK_AXES)
         if self.codec.scale_dtype is not None:
             sshape = (self.n_layers, n_slots, cfg.num_kv_heads)
-            self.k_scale = jnp.zeros(sshape, self.codec.scale_dtype)
-            self.v_scale = jnp.zeros(sshape, self.codec.scale_dtype)
+            self.k_scale = place(jnp.zeros(sshape, self.codec.scale_dtype),
+                                 _SCALE_AXES)
+            self.v_scale = place(jnp.zeros(sshape, self.codec.scale_dtype),
+                                 _SCALE_AXES)
         else:
             self.k_scale = self.v_scale = None
         self.stats = PoolStats()
@@ -103,6 +140,7 @@ class PagedKvPool:
         self._entries: Dict[str, _ChunkPages] = {}
         self._lru: "OrderedDict[str, None]" = OrderedDict()  # refs == 0
         self._pinned_blocks = 0
+        self._private: set = set()   # outstanding alloc_private block ids
 
     # -- sizing ----------------------------------------------------------------
     @staticmethod
@@ -167,6 +205,43 @@ class PagedKvPool:
     def capacity_bytes(self) -> int:
         return self.n_blocks * self.bytes_per_block
 
+    # -- per-shard accounting ----------------------------------------------------
+    @property
+    def n_kv_shards(self) -> int:
+        """Device shards the KV-head axis is split over: 1 without a mesh,
+        or when the head count doesn't divide the mesh axis (the
+        divisibility-aware rules fall back to replication)."""
+        if self.mesh is None:
+            return 1
+        axes = spec_for(self.mesh, self.k.shape, _BLOCK_AXES, self._rules)[2]
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return math.prod(self.mesh.shape[a] for a in axes)
+
+    @property
+    def pinned_bytes_per_shard(self) -> int:
+        """Each device shard's slice of the required working set — the
+        HBM-capacity relief of sharding the pool: per-shard residency is
+        ``pinned_bytes / n_kv_shards``, and the shard totals sum back to the
+        single-device figure."""
+        return self.pinned_bytes // self.n_kv_shards
+
+    def device_bytes_per_shard(self) -> List[int]:
+        """Ground-truth HBM bytes of the block (+ scale) tensors held on
+        each device, read off the actual device buffers. Sums to the
+        single-device pool footprint regardless of mesh shape — the
+        accounting invariant tests/benchmarks assert."""
+        tensors = [self.k, self.v]
+        if self.k_scale is not None:
+            tensors += [self.k_scale, self.v_scale]
+        per: Dict[object, int] = {}
+        for t in tensors:
+            for s in t.addressable_shards:
+                per[s.device] = per.get(s.device, 0) + s.data.nbytes
+        return [per[d] for d in sorted(per, key=str)]
+
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
 
@@ -192,12 +267,27 @@ class PagedKvPool:
     def alloc_private(self, n_slots: int) -> List[int]:
         """Allocate private (COW-tail) blocks covering ``n_slots`` tokens."""
         out = self._alloc(self.blocks_for(max(1, n_slots)))
+        self._private.update(out)
         self._pin(len(out))
         return out
 
     def free_private(self, block_ids: Sequence[int]) -> None:
-        self._free.extend(block_ids)
-        self._pinned_blocks -= len(block_ids)
+        """Return private blocks to the free list. Only blocks currently
+        outstanding from ``alloc_private`` are accepted: a double free (or a
+        shared chunk's block ids) would put duplicate ids on the free list,
+        and two later allocations would silently alias one page — corrupting
+        co-resident requests' KV."""
+        ids = list(block_ids)
+        bad = [b for b in ids if b not in self._private]
+        if bad or len(set(ids)) != len(ids):
+            raise ValueError(
+                f"pool.free_private: blocks {bad or sorted(ids)} are not "
+                f"outstanding private allocations (double free, or a shared "
+                f"chunk's pages?) — duplicate free-list ids alias later "
+                f"allocations and corrupt co-resident rows")
+        self._private.difference_update(ids)
+        self._free.extend(ids)
+        self._pinned_blocks -= len(ids)
 
     # -- shared chunk pages ------------------------------------------------------
     def has(self, chunk_id: str) -> bool:

@@ -33,6 +33,13 @@ once (loader dedup + the wanted registry). Eviction of one request only
 drops its own refs — co-resident requests' shared pages are untouched.
 Answers stay bit-identical to the row-slotted path (the paged step runs the
 same jitted decode executable on the gathered dense view).
+
+An engine built with a serving mesh (``RagEngine(mesh=...)``) makes either
+cache flavour tensor-parallel transparently: the row cache / block pool
+arrive KV-head-sharded from the engine's constructors and the decode step
+traces under the mesh's sharding constraints, while every host-side
+decision here (admission, page tables, accounting) is layout-blind
+(DESIGN.md §12).
 """
 
 from __future__ import annotations
@@ -98,6 +105,12 @@ class ServeMetrics:
     resident_chunks_peak: int = 0          # paged: peak distinct chunks in
                                            # the pool (codec-sensitive: one
                                            # byte budget holds ~2x under int8)
+    pool_shard_bytes: List[int] = field(default_factory=list)
+                                           # paged: per-device bytes of the
+                                           # pool's block tensors (one entry
+                                           # on a single device; under a
+                                           # serving mesh the entries sum to
+                                           # the single-device footprint)
 
     @property
     def chunk_hit_rate(self) -> float:
@@ -202,7 +215,8 @@ class ContinuousScheduler:
                 n_blocks=self.pool_blocks,
                 pool_budget_bytes=self.pool_budget_bytes)
         else:
-            cache = eng.model.init_row_cache(self.max_slots, buf)
+            # engine-placed: KV-head-sharded under a serving mesh
+            cache = eng.init_row_cache(self.max_slots, buf)
         cur = np.zeros((self.max_slots,), np.int32)
         upcoming = deque(sorted(records, key=lambda r: r.arrival_s))
         pending: deque = deque()           # arrived, payloads prefetching
@@ -359,6 +373,7 @@ class ContinuousScheduler:
             metrics.hbm_kv_bytes_resident = (pool.stats.peak_pinned_blocks
                                              * pool.bytes_per_block)
             metrics.resident_chunks_peak = pool.stats.peak_resident_chunks
+            metrics.pool_shard_bytes = pool.device_bytes_per_shard()
         else:
             metrics.hbm_kv_bytes_resident = (cache.k.nbytes
                                              + cache.v.nbytes)

@@ -69,11 +69,10 @@ class RagEngine:
     def __init__(self, model, params, store, mode: str = "matkv",
                  chunk_tokens: int = 256, top_k: int = 2,
                  rerotate: bool = False, blend_ratio: float = 0.18,
-                 codec=None, reader=None):
+                 codec=None, reader=None, mesh=None, rules=None):
         assert mode in ("vanilla", "matkv", "cacheblend")
         self.model = model
         self.cfg = model.cfg
-        self.params = params
         self.store = store
         self.reader = reader or store          # SimulatedReader for timing runs
         self.mode = mode
@@ -81,6 +80,25 @@ class RagEngine:
         self.top_k = top_k
         self.rerotate = rerotate
         self.blend_ratio = blend_ratio
+        # tensor-parallel serving (DESIGN.md §12): with a mesh, params are
+        # placed by the repro.dist partition specs (wk/wv column-parallel
+        # onto the model axis), caches and the paged pool shard their
+        # KV-HEAD axis under SERVING_RULES (cache_seq off — the sequence
+        # layout is the train/prefill artifact story, not decode's), and
+        # every jitted step traces inside mesh_context so the shard()
+        # constraints in the model code apply. Without a mesh everything
+        # below is byte-for-byte the single-device path.
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.dist.partition import param_specs, to_shardings
+            from repro.dist.sharding import SERVING_RULES
+            self.rules = {**SERVING_RULES, **(rules or {})}
+            params = jax.device_put(
+                params, to_shardings(mesh,
+                                     param_specs(mesh, params, self.rules)))
+        else:
+            self.rules = None
+        self.params = params
         # KV storage codec ("bf16" passthrough / "int8"), end to end: the
         # materializer encodes with it, the paged pool stores its layout,
         # the dense compose paths widen on decode (DESIGN.md §11)
@@ -88,16 +106,30 @@ class RagEngine:
         self.tok = ByteTokenizer()
         self.embedder = HashingEmbedder()
         self.vdb = VectorDB(self.embedder.dim)
-        self.materializer = Materializer(model, params, store,
+        self.materializer = Materializer(model, self.params, store,
                                          codec=self.codec)
         self._chunks: Dict[str, Chunk] = {}
         self._decode_fn = jax.jit(
-            lambda p, c, t: self.model.decode_step(p, c, t))
+            self._meshed(lambda p, c, t: self.model.decode_step(p, c, t)))
         self._subprefill_fns = {}
         self._vanilla_fns = {}
         # row-slotted step (continuous batching); jit retraces per shape
         self._row_step_fn = jax.jit(
-            lambda p, c, t: self.model.decode_step_rows(p, c, t))
+            self._meshed(lambda p, c, t: self.model.decode_step_rows(p, c, t)))
+
+    def _meshed(self, fn):
+        """Wrap a model fn so jit TRACING runs under the engine's mesh
+        context — the ``shard()`` constraints in the model code read the
+        active (mesh, rules) pair at trace time. Identity without a mesh."""
+        if self.mesh is None:
+            return fn
+        from repro.dist.sharding import mesh_context
+        mesh, rules = self.mesh, self.rules
+
+        def wrapped(*args):
+            with mesh_context(mesh, rules):
+                return fn(*args)
+        return wrapped
 
     # -- ingest ------------------------------------------------------------------
     def ingest(self, doc_id: str, text: str) -> List[str]:
@@ -134,7 +166,7 @@ class RagEngine:
         key = (query.shape, type(cache).__name__)
         if key not in self._subprefill_fns:
             self._subprefill_fns[key] = jax.jit(
-                lambda p, c, t: self.model.decode_step(p, c, t))
+                self._meshed(lambda p, c, t: self.model.decode_step(p, c, t)))
         return self._subprefill_fns[key](self.params, cache, query)
 
     def _decode_loop(self, cache, first_token, max_new_tokens: int
@@ -262,6 +294,20 @@ class RagEngine:
         """One batched decode step over the whole slot table: tokens (B,Sq)."""
         return self._row_step_fn(self.params, cache, tokens)
 
+    def init_row_cache(self, batch: int, buf_size: int) -> RowAttnCache:
+        """Empty row-slotted cache, placed for this engine's mesh: the KV
+        buffers' head axis lands on the model axis (SERVING_RULES), the
+        bookkeeping replicates. Without a mesh this is exactly
+        ``model.init_row_cache`` — schedulers and parity paths go through
+        here so both layouts share one entry point."""
+        cache = self.model.init_row_cache(batch, buf_size)
+        if self.mesh is None:
+            return cache
+        from repro.dist.partition import cache_specs, to_shardings
+        return jax.device_put(
+            cache, to_shardings(self.mesh,
+                                cache_specs(self.mesh, cache, self.rules)))
+
     # -- paged row-level API (page-table serving over a shared block pool) --------------
     #
     # Paged counterparts of compose_row / prefill_row / step_rows. KV bytes
@@ -287,6 +333,10 @@ class RagEngine:
         Paged mode requires the paper-faithful restarted-positions mode:
         shared chunk pages must be position-independent, and ``rerotate``
         bakes the row-specific global offset into K at compose time.
+
+        Under a serving mesh the pool's block tensors come back KV-head-
+        sharded (DESIGN.md §12); block ids and all pool accounting stay
+        global, so schedulers drive the sharded pool unchanged.
         """
         from repro.paged import PagedKvPool, PagedRowCache
         if self.cfg.family not in ("dense", "vlm", "moe"):
@@ -306,7 +356,8 @@ class RagEngine:
             n_blocks = max_slots * (1 + per_row
                                     + self.top_k * chunk_blocks) + 4
         pool = PagedKvPool(self.cfg, n_blocks=n_blocks,
-                           block_size=block_size, codec=self.codec)
+                           block_size=block_size, codec=self.codec,
+                           mesh=self.mesh, rules=self.rules)
         return PagedRowCache(pool, max_slots, buf_size)
 
     def compose_row_paged(self, req: RowRequest, pcache, slot: int,
@@ -485,5 +536,5 @@ class RagEngine:
                     cache = compose_hybrid_cache(
                         self.cfg, (kv, rec), s, s + 64)
                 return cache, logits
-            self._vanilla_fns[key] = jax.jit(fn)
+            self._vanilla_fns[key] = jax.jit(self._meshed(fn))
         return self._vanilla_fns[key](self.params, full_tokens)

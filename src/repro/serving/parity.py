@@ -27,7 +27,7 @@ def dense_row_path(eng, buf: int):
     def init(req):
         row, _, _ = eng.compose_row(req, buf)
         first, row = eng.prefill_row(row, req.prompt)
-        cache = eng.model.init_row_cache(1, buf)
+        cache = eng.init_row_cache(1, buf)   # mesh-placed when eng has one
         state = {"cache": insert_cache_row(cache, 0, row)}
 
         def step(t):

@@ -128,13 +128,19 @@ class BatchScheduler:
         t0 = time.perf_counter()
         toks, _ = eng._decode_loop(cache, first, max_new_tokens)
         timings.decode_s += time.perf_counter() - t0
-        timings.n_new_tokens += max_new_tokens * len(questions)
         answers = []
         mat = np.stack(toks, axis=1)  # (B, T)
         for row in mat:
             ids = list(row)
             if EOS in ids:
                 ids = ids[:ids.index(EOS)]
+                # tokens actually emitted: through EOS inclusive — the
+                # post-EOS padding the fixed-shape loop keeps decoding is
+                # dead air, not useful tokens (ContinuousScheduler counts
+                # len(r.tokens) the same way)
+                timings.n_new_tokens += len(ids) + 1
+            else:
+                timings.n_new_tokens += len(ids)
             answers.append(eng.tok.decode(ids))
         return answers
 

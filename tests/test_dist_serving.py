@@ -1,0 +1,193 @@
+"""Mesh-sharded paged serving (DESIGN.md §12): tensor-parallel decode over
+the block pool, validated on a forced-8-host-device CPU platform.
+
+The multi-device half runs in a subprocess (test_dist.py pattern) so the
+main test process keeps its single real device. Three acceptance bars:
+
+* a 1-device mesh must be BIT-IDENTICAL to the plain single-device paged
+  path — the dist threading adds sharding constraints, never math;
+* an 8-device mesh must pass the shared teacher-forced logits bound of
+  ``serving/parity.py`` against the single-device dense path;
+* the pool's per-shard accounting must sum to the single-device totals
+  (ground truth read off the device buffers).
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import SERVING_RULES, spec_for
+
+
+class FakeMesh:
+    shape = {"model": 8}
+
+
+def test_serving_rules_shard_kv_heads_not_sequence():
+    """Serving rules: the KV-head axis of a (L, S_buf, KV, hd) pool block
+    tensor lands on the model axis; the cache sequence axis — sequence-
+    sharded under the default train/prefill rules — stays whole."""
+    names = (None, None, "kv_heads", None)
+    assert spec_for(FakeMesh, (2, 1024, 8, 16), names,
+                    SERVING_RULES) == P(None, None, "model", None)
+    # default rules would have sharded cache_seq; serving turns it off
+    assert spec_for(FakeMesh, (2, 1024, 8, 16),
+                    (None, "cache_seq", "kv_heads", None),
+                    SERVING_RULES) == P(None, None, "model", None)
+    # indivisible head counts degrade to replication, never an error
+    assert spec_for(FakeMesh, (2, 1024, 3, 16), names,
+                    SERVING_RULES) == P(None, None, None, None)
+
+
+def test_row_cache_specs_cover_row_slotted_fields():
+    """cache_specs resolves RowAttnCache's rank-2 slot_pos / rank-1 length
+    (the row-slotted variants) without error, KV-head-sharded k/v."""
+    import jax
+    from repro.configs import get_config
+    from repro.dist.partition import cache_specs
+    from repro.models import build_model
+
+    cfg = get_config("smollm-135m").reduced(
+        vocab_size=320, num_heads=8, num_kv_heads=8, head_dim=16, d_model=128)
+    cache = jax.eval_shape(
+        lambda: build_model(cfg).init_row_cache(2, 64))
+    specs = cache_specs(FakeMesh, cache, SERVING_RULES)
+    assert specs.k == P(None, None, None, "model", None)
+    assert specs.slot_pos == P(None, None)
+    assert specs.length == P(None)
+
+
+def test_engine_without_mesh_is_untouched(tmp_path):
+    """mesh=None must leave the engine exactly on the single-device path:
+    no rules, no param movement (the object identity is preserved)."""
+    import jax
+    from repro.configs import get_config
+    from repro.kvstore import FlashKVStore
+    from repro.models import build_model
+    from repro.serving import RagEngine
+
+    cfg = get_config("smollm-135m").reduced(vocab_size=300)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = RagEngine(model, params, FlashKVStore(tmp_path), mode="matkv")
+    assert eng.mesh is None and eng.rules is None
+    assert eng.params is params
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.setdefault("REPRO_PALLAS_INTERPRET", "1")
+    import json
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.kernels.paged_decode import tp_parity_probe
+    from repro.kvstore import FlashKVStore
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models import build_model
+    from repro.serving import (ContinuousScheduler, RagEngine,
+                               dense_row_path, paged_row_path,
+                               teacher_forced_rel)
+
+    assert len(jax.devices()) == 8
+    cfg = get_config("smollm-135m").reduced(
+        vocab_size=320, num_heads=8, num_kv_heads=8, head_dim=16,
+        d_model=128, d_ff=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    CORPUS = {
+        "d1": "the amber gate stands in hall nine beyond the stair. " * 4,
+        "d2": "the cedar door opens with a brass song at dusk hour. " * 4,
+        "d3": "the brass lamp hums beside the tall window all night. " * 4,
+    }
+    QS = ["where is the amber gate?", "where is the cedar door?",
+          "where is the brass lamp?", "where is the amber gate?"]
+    out = {}
+
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng0 = RagEngine(model, params, store, mode="matkv",
+                         chunk_tokens=48, top_k=2)
+        for doc, text in CORPUS.items():
+            eng0.ingest(doc, text)
+        refs = [eng0.answer(q, max_new_tokens=5)[0] for q in QS]
+
+        def mesh_engine(n):
+            eng = RagEngine(model, params, store, mode="matkv",
+                            chunk_tokens=48, top_k=2,
+                            mesh=make_serving_mesh(n))
+            eng._chunks, eng.vdb = eng0._chunks, eng0.vdb
+            return eng
+
+        def serve(eng):
+            sched = ContinuousScheduler(eng, max_slots=2, paged=True,
+                                        block_size=32)
+            answers, m = sched.run(QS, max_new_tokens=5)
+            sched.shutdown()
+            return answers, m
+
+        # single-device paged reference (also the shard-sum baseline)
+        ans0, m0 = serve(eng0)
+        out["paged_single_matches_answer"] = ans0 == refs
+
+        # 1-device mesh: bit parity with the single-device path
+        ans1, m1 = serve(mesh_engine(1))
+        out["mesh1_bit_parity"] = ans1 == refs
+
+        # 8-device mesh: serves, and per-shard pool bytes sum to the
+        # single-device footprint
+        eng8 = mesh_engine(8)
+        ans8, m8 = serve(eng8)
+        out["mesh8_serves_all"] = (len(ans8) == len(QS)
+                                   and all(isinstance(a, str) for a in ans8))
+        out["mesh8_n_shards"] = len(m8.pool_shard_bytes)
+        out["mesh8_shard_sum_matches"] = (
+            sum(m8.pool_shard_bytes) == sum(m0.pool_shard_bytes))
+        pc8 = eng8.init_paged_cache(2, 192, block_size=32)
+        pool = pc8.pool
+        out["pool_n_kv_shards"] = pool.n_kv_shards
+        out["pool_pinned_shards_sum"] = (
+            pool.pinned_bytes_per_shard * pool.n_kv_shards
+            == pool.pinned_bytes)
+
+        # 8-device teacher-forced logits parity vs single-device dense
+        rel = teacher_forced_rel(eng0, dense_row_path(eng0, 192),
+                                 eng8, paged_row_path(eng8, 192),
+                                 QS[0], steps=4)
+        out["teacher_forced_rel"] = rel
+
+        # shard_map kernel bit parity (one probe shared with the benchmark)
+        out["kernel_bit_parity"] = tp_parity_probe(make_serving_mesh(8))
+
+    print(json.dumps(out))
+""")
+
+
+def test_mesh_sharded_paged_serving_8_host_devices():
+    proc = subprocess.run(
+        [sys.executable, "-c", SUBPROC],
+        capture_output=True, text=True, timeout=900,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        cwd=__import__("pathlib").Path(__file__).resolve().parent.parent)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["paged_single_matches_answer"]
+    assert out["mesh1_bit_parity"], (
+        "1-device-mesh paged answers must be bit-identical to the plain "
+        "single-device path")
+    assert out["mesh8_serves_all"]
+    assert out["mesh8_n_shards"] == 8
+    assert out["mesh8_shard_sum_matches"], (
+        "per-shard pool bytes must sum to the single-device footprint")
+    assert out["pool_n_kv_shards"] == 8
+    assert out["pool_pinned_shards_sum"]
+    assert out["teacher_forced_rel"] < 0.05
+    assert out["kernel_bit_parity"]

@@ -307,12 +307,15 @@ def test_prefetch_pipeline_overlaps():
         with lock:
             events.append(("consume", item))
         time.sleep(0.05)  # simulate decode
+        with lock:
+            events.append(("consume_done", item))
         results.append(payload)
     assert results == [10, 20, 30]
-    # item 2's load must start before item 1 is consumed -> overlap happened
+    # item 2's load (submitted at item 1's handoff, within the depth bound)
+    # must start before item 1 finishes consuming -> overlap happened
     i_load2 = events.index(("load_start", 2))
-    i_consume1 = events.index(("consume", 1))
-    assert i_load2 < i_consume1, events
+    i_done1 = events.index(("consume_done", 1))
+    assert i_load2 < i_done1, events
 
 
 def test_async_loader_coalesces_duplicate_inflight_loads():
@@ -381,3 +384,26 @@ def test_async_loader_dedup_is_inflight_only():
     assert loader.load("a").result(timeout=5) == b"a"
     assert reads == ["a", "a"]
     loader.shutdown()
+
+
+def test_prefetch_pipeline_inflight_bounded_by_depth():
+    """Regression: the initial fill submitted loads while
+    ``len(inflight) <= depth`` — depth+1 payloads concurrently in flight
+    against the documented "bounded by the pipeline depth". Peak concurrent
+    loads must never exceed ``depth`` (the top-up loop shares the bound)."""
+    lock = threading.Lock()
+    active = [0]
+    peak = [0]
+
+    def load(i):
+        with lock:
+            active[0] += 1
+            peak[0] = max(peak[0], active[0])
+        time.sleep(0.05)          # long enough for every submitted load to
+        with lock:                # actually start on a worker thread
+            active[0] -= 1
+        return i
+
+    pipe = PrefetchPipeline(list(range(8)), load, depth=2, n_workers=8)
+    assert [p for _, p in pipe] == list(range(8))
+    assert peak[0] <= 2, f"{peak[0]} concurrent loads for depth=2"

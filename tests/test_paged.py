@@ -288,3 +288,30 @@ def test_paged_run_reads_each_hot_chunk_once(setup):
         assert m.chunk_misses == n_unique
         assert m.chunk_hits == (6 - 1) * n_unique
         assert m.flash_bytes_per_request.count(0) == 5
+
+
+def test_pool_free_private_double_free_guard(setup):
+    """Regression: free_private had no double-free/ownership guard — freeing
+    the same ids twice put duplicates on the free list, and two later
+    allocations silently aliased one page, corrupting co-resident requests'
+    KV. Invalid frees must raise, and post-free allocations never alias."""
+    cfg, _, _ = setup
+    pool = PagedKvPool(cfg, n_blocks=8, block_size=16)
+    blocks = pool.alloc_private(32)
+    pool.free_private(blocks)
+    with pytest.raises(ValueError, match="not outstanding"):
+        pool.free_private(blocks)            # the old corruption entry point
+    # the corruption itself no longer reproduces: after the (rejected)
+    # double free, two fresh allocations share no block id
+    a = pool.alloc_private(32)
+    b = pool.alloc_private(32)
+    assert not set(a) & set(b), f"aliased blocks {set(a) & set(b)}"
+    assert pool.pinned_blocks == len(a) + len(b)
+    pool.free_private(a)
+    pool.free_private(b)
+    # shared chunk pages are pool-owned, never free_private-able
+    k, v = _art(cfg, 16)
+    pool.insert("c0", k, v)
+    with pytest.raises(ValueError, match="not outstanding"):
+        pool.free_private(pool._entries["c0"].block_ids)
+    assert pool.has("c0")                    # entry untouched by the reject

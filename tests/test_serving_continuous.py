@@ -259,3 +259,34 @@ def test_answer_reports_true_doc_tokens_for_short_final_chunk(setup):
         assert len(cids) == 2
         _, t = eng.answer("where is x?", chunk_ids=cids, max_new_tokens=3)
         assert t.n_doc_tokens == 60              # not 2 * 48 = 96
+
+
+# ---------------------------------------------------------------------------
+# bug-cluster regressions: post-EOS padding counted as useful tokens
+# ---------------------------------------------------------------------------
+
+def test_batch_scheduler_counts_only_emitted_tokens(setup):
+    """_serve_batch used to add ``max_new_tokens * B`` to n_new_tokens —
+    post-EOS padding decoded by the fixed-shape loop inflated the reported
+    tok/s. It must count per-row tokens actually emitted through EOS,
+    aligned with ContinuousScheduler's ``len(r.tokens)`` accounting."""
+    cfg, model, params = setup
+    qs = [QUESTIONS[0], QUESTIONS[1]]
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        orig = eng._decode_loop
+
+        def forced(cache, first, max_new):
+            toks, cache = orig(cache, first, max_new)
+            toks = [np.array(t) for t in toks]
+            toks[2][0] = EOS             # row 0 emits EOS as its 3rd token
+            return toks, cache
+
+        eng._decode_loop = forced
+        try:
+            sched = BatchScheduler(eng, batch_size=2, overlap=False)
+            _, t = sched.run(qs, max_new_tokens=6)
+        finally:
+            eng._decode_loop = orig
+        # row 0: 3 emitted tokens (incl. EOS); row 1: all 6 — not 2 * 6
+        assert t.n_new_tokens == 3 + 6

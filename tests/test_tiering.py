@@ -166,3 +166,40 @@ def test_ten_day_admission_injectable_clock():
     assert not ts.offer("x", b"kv")
     store_clock.t = 1.0
     assert ts.offer("x", b"kv")
+
+
+def test_hits_feed_admission_clock_for_post_eviction_readmit():
+    """Regression: get() on a hit never fed admission.on_access, so
+    TenDayAdmission._last_seen froze at the admitting offer while the chunk
+    stayed resident. A chunk kept hot by steady hits, evicted long after its
+    admission, was then wrongly rejected at its next offer — the inter-access
+    interval was measured from the long-ago admission instead of the last
+    access."""
+    gpu = GpuSpec("toy", 1.0, 1.0, prefill_tokens_per_s=1.0,
+                  decode_tokens_per_s=1.0)
+    ssd = SsdSpec("toy", 1e-3, 1.0, 1.0)
+    clock = Clock()
+    adm = TenDayAdmission(gpu, ssd, kv_bytes_per_token=1_000_000)
+    ts, _ = make(capacity=20, admission=adm, eviction=LruPolicy(),
+                 clock=clock)
+    T = adm.break_even_s
+    assert not ts.offer("hot", b"x" * 10)          # cold start
+    clock.t = 0.4 * T
+    assert ts.offer("hot", b"x" * 10)              # re-access inside T
+    # steady resident hits keep the chunk hot long past T-from-admission
+    for i in range(1, 6):
+        clock.t = 0.4 * T + i * 0.5 * T
+        assert ts.get("hot") is not None
+    t_last_hit = clock.t
+    # capacity pressure admits "other" (two offers inside T) and evicts "hot"
+    clock.t = t_last_hit + 0.05 * T
+    assert not ts.offer("other", b"y" * 15)
+    clock.t = t_last_hit + 0.10 * T
+    assert ts.offer("other", b"y" * 15)
+    assert "hot" not in ts and ts.stats.evictions == 1
+    # re-offer inside the break-even window of the LAST HIT: must admit
+    clock.t = t_last_hit + 0.20 * T
+    assert ts.get("hot") is None                   # miss -> caller recomputes
+    assert ts.offer("hot", b"x" * 10), (
+        "hot chunk evicted after steady hits was rejected at re-offer: "
+        "hits are not feeding the admission clock")
