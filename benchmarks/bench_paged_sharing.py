@@ -21,6 +21,7 @@ import tempfile
 import numpy as np
 
 from benchmarks.common import DOCS, make_engine, row
+from repro.analysis.roofline import paged_step_kv_bytes_for_pool
 from repro.serving import ContinuousScheduler
 
 
@@ -101,6 +102,23 @@ def run(n_requests: int = 24, slot_sweep=(4, 8), max_new: int = 4,
                         < m_row.hbm_kv_bytes_resident), (
                     "paged HBM residency must undercut the dense "
                     "per-slot cache")
+        # fused single-launch decode (the default paged step above) must
+        # also beat the three-phase pipeline on per-step HBM KV traffic
+        # under the DESIGN §Roofline-accounting byte model, with widths
+        # read off a live pool at this workload's geometry
+        buf, block, slots = 192, 32, max(slot_sweep)
+        pool = eng.init_paged_cache(slots, buf, block_size=block).pool
+        b3 = paged_step_kv_bytes_for_pool(pool, [buf] * slots, buf_size=buf,
+                                          fused=False)
+        bf = paged_step_kv_bytes_for_pool(pool, [buf] * slots, buf_size=buf,
+                                          fused=True)
+        assert bf < b3, (
+            f"roofline model: fused paged step moves {bf} KV bytes vs "
+            f"three-phase {b3} — the single-launch fusion lost its "
+            f"HBM-traffic win")
+        out.append(row("paged/fused_kv_bytes_per_step", float(bf),
+                       f"three_phase={b3};ratio={bf / b3:.3f};"
+                       f"buf={buf};block={block};slots={slots}"))
     return out
 
 

@@ -124,6 +124,39 @@ def _child(smoke: bool):
             "paged_decode_tp diverged from the single-device kernel")
         out.append(row("tp_serving/mesh8/kernel_bit_parity", 0.0,
                        "exact=True"))
+
+        # fused single-launch kernel: the serves above ran it (scheduler
+        # default); pin the three-phase pipeline on the same 8-way engine
+        # and require identical answers, plus bit parity of the shard_map
+        # fused twin against its single-device kernel
+        from repro.kernels.paged_decode_fused import fused_tp_parity_probe
+        sched3 = ContinuousScheduler(eng8, max_slots=4, paged=True,
+                                     block_size=32, fused=False)
+        ans8_3p, _ = sched3.run(qs, max_new_tokens=max_new)
+        sched3.shutdown()
+        assert ans8_3p == ans8, (
+            "8-device fused paged decode diverged from the three-phase "
+            "parity oracle")
+        assert fused_tp_parity_probe(make_serving_mesh(8)), (
+            "paged_decode_fused_tp diverged from the single-device fused "
+            "kernel")
+        out.append(row("tp_serving/mesh8/fused_kernel_bit_parity", 0.0,
+                       "exact=True;answers_exact=True"))
+
+        # DESIGN §Roofline-accounting: the fused step must move strictly
+        # fewer HBM KV bytes than three-phase at this engine's geometry
+        from repro.analysis.roofline import paged_step_kv_bytes
+        buf, block = 192, 32
+        b3 = paged_step_kv_bytes(cfg.num_layers, cfg.num_kv_heads,
+                                 cfg.head_dim, [buf] * 4, block, buf,
+                                 storage_bytes=2, act_bytes=2, fused=False)
+        bf = paged_step_kv_bytes(cfg.num_layers, cfg.num_kv_heads,
+                                 cfg.head_dim, [buf] * 4, block, buf,
+                                 storage_bytes=2, act_bytes=2, fused=True)
+        assert bf < b3, (
+            f"roofline model: fused step {bf} KV bytes vs three-phase {b3}")
+        out.append(row("tp_serving/fused_kv_bytes_per_step", float(bf),
+                       f"three_phase={b3};ratio={bf / b3:.3f}"))
     print("\n".join(out))
 
 

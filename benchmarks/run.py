@@ -28,6 +28,7 @@ SUITES = {
     "fig6_batching": "benchmarks.bench_batching",
     "continuous_batching": "benchmarks.bench_continuous",
     "paged_sharing": "benchmarks.bench_paged_sharing",
+    "fused_decode": "benchmarks.bench_fused_decode",
     "quant_residency": "benchmarks.bench_quant_residency",
     "tp_serving": "benchmarks.bench_tp_serving",
     "fig7_overlap": "benchmarks.bench_overlap",

@@ -183,6 +183,62 @@ def time_scan_correction(cfg, shape, chips: int):
     return extra_flops, extra_bytes
 
 
+def paged_step_kv_bytes(n_layers: int, kv_heads: int, head_dim: int,
+                        row_lengths, block_size: int, buf_size: int, *,
+                        storage_bytes: int, scale_bytes: int = 0,
+                        act_bytes: int = 2, fused: bool = False) -> int:
+    """Analytic HBM *KV* traffic of ONE paged decode step (all layers, K+V),
+    the DESIGN §Roofline-accounting model for the serving hot loop. Only KV
+    movement is counted — weights/activations are identical between the two
+    pipelines and cancel out of the comparison.
+
+    Three-phase (gather -> dense step -> scatter), per layer and per K/V
+    tensor: the gather reads the row's pool slots (storage width + scales)
+    and writes an activation-width dense (B, S_buf) view; the jitted step
+    reads that view for attention and writes the updated view buffers back
+    out (they are jit outputs); the scatter persists one token per row at
+    storage width. Every term is full-working-set: 1 storage-width + ~3
+    activation-width (B * S_buf) round trips per step.
+
+    Fused, per layer and per K/V tensor: each row's occupied pages stream
+    from HBM exactly once at STORAGE width (``ceil(len / block)`` blocks —
+    whole blocks, since partial pages are staged whole), plus the one-token
+    write-back. Nothing activation-width and (B, S_buf)-sized ever touches
+    HBM; dequant and the dense-order view live in VMEM.
+
+    ``row_lengths`` are per-row token counts INCLUDING the step's new token
+    (pass ``[buf_size] * B`` for the worst case). Returns total bytes.
+    """
+    b = len(row_lengths)
+    vec_store = kv_heads * (head_dim * storage_bytes + scale_bytes)
+    vec_act = kv_heads * head_dim * act_bytes
+    token_write = b * vec_store
+    if fused:
+        blocks = sum(-(-max(int(l), 1) // block_size) for l in row_lengths)
+        page_read = blocks * block_size * vec_store
+        return 2 * n_layers * (page_read + token_write)
+    dense = b * buf_size
+    gather = dense * (vec_store + vec_act)       # pool read + view write
+    step = 2 * dense * vec_act                   # attention read + new buffers
+    return 2 * n_layers * (gather + step + token_write)
+
+
+def paged_step_kv_bytes_for_pool(pool, row_lengths, *, buf_size: int,
+                                 fused: bool = False) -> int:
+    """``paged_step_kv_bytes`` with widths read off a live ``PagedKvPool``
+    (storage dtype, scale dtype, view dtype) — what the serving benchmarks
+    assert the fused-vs-three-phase HBM win against."""
+    import jax.numpy as jnp
+    scale_b = (0 if pool.k_scale is None
+               else jnp.dtype(pool.k_scale.dtype).itemsize)
+    return paged_step_kv_bytes(
+        pool.n_layers, pool.cfg.num_kv_heads, pool.cfg.head_dim,
+        row_lengths, pool.block_size, buf_size,
+        storage_bytes=jnp.dtype(pool.storage_dtype).itemsize,
+        scale_bytes=scale_b, act_bytes=jnp.dtype(pool.dtype).itemsize,
+        fused=fused)
+
+
 def analyze(arch: str, shape, mesh_name: str, chips: int, compiled,
             cfg) -> Roofline:
     cost = compiled.cost_analysis()

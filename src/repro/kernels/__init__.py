@@ -4,7 +4,13 @@ from repro.kernels.ops import (chunked_decode_op, flash_prefill_op,
                                kv_dequant_op, mamba_scan_op, paged_decode_op,
                                paged_decode_quant_op)
 from repro.kernels.paged_decode import paged_decode_tp
+from repro.kernels.paged_decode_fused import (fused_tp_parity_probe,
+                                              paged_decode_fused,
+                                              paged_decode_fused_quant,
+                                              paged_decode_fused_tp)
 
 __all__ = ["chunked_decode_op", "flash_prefill_op", "kv_dequant_op",
            "mamba_scan_op", "paged_decode_op", "paged_decode_quant_op",
-           "paged_decode_tp"]
+           "paged_decode_tp", "paged_decode_fused",
+           "paged_decode_fused_quant", "paged_decode_fused_tp",
+           "fused_tp_parity_probe"]

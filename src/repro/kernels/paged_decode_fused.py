@@ -1,0 +1,333 @@
+"""Pallas TPU kernel: fused paged decode — gather, dequant, attend and the
+new token's attention in ONE launch per layer.
+
+The serving paged step before this kernel was three jitted phases per token:
+``gather_rows(_quant)`` materializes a dense ``(B, S_buf)`` view of the page
+table, ``decode_step_rows`` attends over it, ``scatter_decode_token(_quant)``
+writes the new token back — three full-working-set HBM round trips per step
+(the binding cost the KV-offloading bottleneck analysis in PAPERS.md
+identifies once KVs are resident). This kernel reads each row's KV pages
+exactly once, directly through the scalar-prefetched block table of the
+serving pool layout ``(n_blocks, block, KV, hd)``, dequantizes int8 pages
+next to the dot in VMEM, stages the row's ragged pages *compacted in dense
+order* into a VMEM buffer, appends the step's new-token K/V at the row's
+ragged length, and computes the full softmax in the SAME op order as the
+dense ``attention_rows`` path — which is what makes the fused step
+bit-identical to gather → decode → scatter at the logits level (asserted in
+tests/test_paged_fused.py and fuzzed against the oracle in
+tests/test_kernel_fuzz.py).
+
+Layout notes:
+
+* grid ``(B, KV, n_max)`` with the table dim innermost; per (row, kv-head)
+  the n_max iterations DMA one pool block each and copy its first
+  ``lens[b, i]`` valid tokens to scratch offset ``offs[b, i]`` (the
+  exclusive cumsum of lens). Ascending-i writes clobber the previous
+  block's ragged garbage tail, so after the last iteration scratch holds
+  the row's tokens exactly as the dense gather would lay them out.
+* the new token is staged at offset ``totals - 1`` (totals = row length
+  including the new token) AFTER the last block copy, then one dense-order
+  softmax runs over the whole buffer with an ``iota < totals`` mask —
+  masked lanes contribute an exact 0.0 after the exp, so the padded buffer
+  is value-identical to the dense path's masked ``S_buf`` axis.
+* the pool APPEND of the new token is NOT done in-kernel: the caller
+  persists the returned per-layer K/V through the page table (one
+  token-granularity ``.at[slots].set`` per step, `engine._fused_step`),
+  keeping the kernel free of input/output aliasing and keeping the
+  shared-page mutation guard (DESIGN.md §13) a host-side invariant.
+
+``paged_decode_fused_tp`` is the shard_map twin over the KV-head axis,
+mirroring ``paged_decode_tp``: paging is head-agnostic so the tables
+replicate, GQA softmax normalization lives entirely inside one KV head, and
+the sharded kernel is bit-identical per head (``fused_tp_parity_probe``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attend(q_ref, kn_ref, vn_ref, o_ref, k_buf, v_buf, totals, bi,
+            *, scale: float):
+    """Stage the new token and run the dense-order softmax over the staged
+    buffer. Op sequence mirrors ``models.attention.attention_rows`` exactly
+    (scores -> mask -> clamped max -> exp -> sum -> p/l @ v) so the fused
+    step matches the three-phase pipeline bit-for-bit at the logits level."""
+    t = totals[bi]
+    k_buf[pl.ds(t - 1, 1), :] = kn_ref[0, 0][None].astype(k_buf.dtype)
+    v_buf[pl.ds(t - 1, 1), :] = vn_ref[0, 0][None].astype(v_buf.dtype)
+
+    q = q_ref[0, 0].astype(jnp.float32)                  # (group, hd)
+    k = k_buf[...].astype(jnp.float32)                   # (S_max, hd)
+    v = v_buf[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(idx < t, s, NEG_INF)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e29)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jax.lax.dot_general(p / jnp.maximum(l, 1e-30), v,
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def _zero_scratch(ki, k_buf, v_buf):
+    # Fresh (row, kv-head) cell: zero the scratch so lanes past the staged
+    # region hold exact 0.0 — masked softmax weights underflow to 0.0 and
+    # 0.0 * 0.0 contributes exactly nothing to the p @ v dot, matching the
+    # dense path's masked buffer tail. (Uninitialized VMEM could hold NaN,
+    # and 0.0 * NaN would poison the output.)
+    @pl.when(ki == 0)
+    def _():
+        k_buf[...] = jnp.zeros_like(k_buf)
+        v_buf[...] = jnp.zeros_like(v_buf)
+
+
+def _kernel(tbl_ref, lens_ref, offs_ref, totals_ref, q_ref, k_ref, v_ref,
+            kn_ref, vn_ref, o_ref, k_buf, v_buf, *, scale: float):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    block = k_ref.shape[1]
+    off = offs_ref[bi, ki]
+    _zero_scratch(ki, k_buf, v_buf)
+    # stage the whole DMA'd block; the next iteration's write (at off + lens)
+    # clobbers the garbage beyond this block's valid count, and the final
+    # iota < totals mask covers the buffer tail
+    k_buf[pl.ds(off, block), :] = k_ref[0, :, 0, :]
+    v_buf[pl.ds(off, block), :] = v_ref[0, :, 0, :]
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _():
+        _attend(q_ref, kn_ref, vn_ref, o_ref, k_buf, v_buf, totals_ref, bi,
+                scale=scale)
+
+
+def _kernel_quant(tbl_ref, lens_ref, offs_ref, totals_ref, q_ref, k_ref,
+                  v_ref, ks_ref, vs_ref, kn_ref, vn_ref, o_ref, k_buf, v_buf,
+                  *, scale: float):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    block = k_ref.shape[1]
+    off = offs_ref[bi, ki]
+    _zero_scratch(ki, k_buf, v_buf)
+    # widen int8 pages by their f16 per-vector scales in VMEM, next to the
+    # dot — the exact per-element math of gather_rows_quant / dequantize_kv
+    # (f32 multiply, then cast), so staged values are bit-identical to the
+    # dense view the three-phase pipeline attends over
+    k_sc = ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+    v_sc = vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+    k_buf[pl.ds(off, block), :] = (k_ref[0, :, 0, :].astype(jnp.float32)
+                                   * k_sc).astype(k_buf.dtype)
+    v_buf[pl.ds(off, block), :] = (v_ref[0, :, 0, :].astype(jnp.float32)
+                                   * v_sc).astype(v_buf.dtype)
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _():
+        _attend(q_ref, kn_ref, vn_ref, o_ref, k_buf, v_buf, totals_ref, bi,
+                scale=scale)
+
+
+def _prep(q, k_pool, tables, lens, totals, buf_size):
+    b, h, hd = q.shape
+    nblk, block, kvh = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    if tables.shape != lens.shape or tables.shape[0] != b:
+        raise ValueError(f"paged_decode_fused: tables {tables.shape} / lens "
+                         f"{lens.shape} must be (B={b}, n_max)")
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, hd)
+    tbl = jnp.clip(tables, 0, nblk - 1).astype(jnp.int32)
+    blens = jnp.clip(lens, 0, block).astype(jnp.int32)
+    offs = (jnp.cumsum(blens, axis=1) - blens).astype(jnp.int32)
+    tot = jnp.clip(totals, 1, buf_size).astype(jnp.int32)
+    # staging room for one whole block past the last valid offset (partial
+    # blocks are staged whole and clobbered/masked)
+    s_max = buf_size + block
+    return qg, tbl, blens, offs, tot, group, block, s_max
+
+
+def paged_decode_fused(q, k_pool, v_pool, k_new, v_new, tables, lens, totals,
+                       *, buf_size: int, interpret: bool = True):
+    """q (B,H,hd); k/v pool (n_blocks, block, KV, hd) — the serving pool's
+    per-layer slice; k/v_new (B,KV,hd) the step's new-token K/V (already in
+    the pool view dtype); tables/lens (B,n_max) int32 pool-block ids and
+    valid token counts per table entry, in dense order; totals (B,) int32
+    row length INCLUDING the new token. Returns attention out (B,H,hd).
+
+    Every row attends over the logical concatenation of its table entries'
+    valid tokens plus the new token at position ``totals - 1`` — exactly the
+    dense view the three-phase gather builds, without materializing it.
+    """
+    b, h, hd = q.shape
+    qg, tbl, blens, offs, tot, group, block, s_max = _prep(
+        q, k_pool, tables, lens, totals, buf_size)
+    n_max = tbl.shape[1]
+    kvh = k_pool.shape[2]
+
+    kernel = functools.partial(_kernel, scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(b, kvh, n_max),
+            in_specs=[
+                pl.BlockSpec((1, 1, group, hd),
+                             lambda bi, ci, ki, *s: (bi, ci, 0, 0)),
+                pl.BlockSpec((1, block, 1, hd),
+                             lambda bi, ci, ki, tbl, *s: (tbl[bi, ki], 0, ci, 0)),
+                pl.BlockSpec((1, block, 1, hd),
+                             lambda bi, ci, ki, tbl, *s: (tbl[bi, ki], 0, ci, 0)),
+                pl.BlockSpec((1, 1, hd),
+                             lambda bi, ci, ki, *s: (bi, ci, 0)),
+                pl.BlockSpec((1, 1, hd),
+                             lambda bi, ci, ki, *s: (bi, ci, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, hd),
+                                   lambda bi, ci, ki, *s: (bi, ci, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((s_max, hd), k_pool.dtype),
+                pltpu.VMEM((s_max, hd), v_pool.dtype),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, group, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, blens, offs, tot, qg, k_pool, v_pool, k_new, v_new)
+    return out.reshape(b, h, hd)
+
+
+def paged_decode_fused_quant(q, k_pool, v_pool, k_scale, v_scale, k_new,
+                             v_new, tables, lens, totals, *, buf_size: int,
+                             interpret: bool = True):
+    """Quantized twin: int8 pools (n_blocks, block, KV, hd) + f16 per-vector
+    scales (n_blocks, block, KV). The storage stream stays int8 from HBM to
+    VMEM; widening happens next to the dot. The new token attends at the
+    view dtype this step (exactly like the dense path, which writes it into
+    the activation-width view) — quantization applies only to the stored
+    pool copy the caller appends."""
+    b, h, hd = q.shape
+    qg, tbl, blens, offs, tot, group, block, s_max = _prep(
+        q, k_pool, tables, lens, totals, buf_size)
+    n_max = tbl.shape[1]
+    kvh = k_pool.shape[2]
+
+    kernel = functools.partial(_kernel_quant, scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=(b, kvh, n_max),
+            in_specs=[
+                pl.BlockSpec((1, 1, group, hd),
+                             lambda bi, ci, ki, *s: (bi, ci, 0, 0)),
+                pl.BlockSpec((1, block, 1, hd),
+                             lambda bi, ci, ki, tbl, *s: (tbl[bi, ki], 0, ci, 0)),
+                pl.BlockSpec((1, block, 1, hd),
+                             lambda bi, ci, ki, tbl, *s: (tbl[bi, ki], 0, ci, 0)),
+                pl.BlockSpec((1, block, 1),
+                             lambda bi, ci, ki, tbl, *s: (tbl[bi, ki], 0, ci)),
+                pl.BlockSpec((1, block, 1),
+                             lambda bi, ci, ki, tbl, *s: (tbl[bi, ki], 0, ci)),
+                pl.BlockSpec((1, 1, hd),
+                             lambda bi, ci, ki, *s: (bi, ci, 0)),
+                pl.BlockSpec((1, 1, hd),
+                             lambda bi, ci, ki, *s: (bi, ci, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, hd),
+                                   lambda bi, ci, ki, *s: (bi, ci, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((s_max, hd), q.dtype),
+                pltpu.VMEM((s_max, hd), q.dtype),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, group, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, blens, offs, tot, qg, k_pool, v_pool, k_scale, v_scale,
+      k_new, v_new)
+    return out.reshape(b, h, hd)
+
+
+def paged_decode_fused_tp(q, k_pool, v_pool, k_new, v_new, tables, lens,
+                          totals, *, buf_size: int, mesh, axis: str = "model",
+                          k_scale=None, v_scale=None, interpret: bool = True):
+    """Tensor-parallel fused paged decode: ``shard_map`` over the KV-head
+    axis, mirroring ``paged_decode_tp``. q's head axis is kv-major
+    (``head = kv * group + g``) so a contiguous H/n slice of q is exactly
+    the query heads of a contiguous KV/n slice of the pool; block tables,
+    valid counts and totals replicate (paging is head-agnostic). GQA softmax
+    normalization is per query head, entirely inside one KV head, so the
+    sharded kernel needs NO collectives and is bit-identical to the
+    single-device kernel per head (``fused_tp_parity_probe``). Pass
+    ``k_scale``/``v_scale`` for an int8 pool."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.dist import _compat  # noqa: F401  (installs jax.shard_map)
+
+    n = mesh.shape[axis]
+    kvh = k_pool.shape[2]
+    if kvh % n:
+        raise ValueError(f"paged_decode_fused_tp: num_kv_heads={kvh} must "
+                         f"divide the {axis!r} mesh axis ({n}) — indivisible "
+                         f"head counts serve via the three-phase path "
+                         f"instead")
+    rep2, rep1 = P(None, None), P(None)
+    if k_scale is None:
+        fn = jax.shard_map(
+            functools.partial(paged_decode_fused, buf_size=buf_size,
+                              interpret=interpret),
+            mesh=mesh,
+            in_specs=(P(None, axis, None), P(None, None, axis, None),
+                      P(None, None, axis, None), P(None, axis, None),
+                      P(None, axis, None), rep2, rep2, rep1),
+            out_specs=P(None, axis, None),
+            check_vma=False,
+        )
+        return fn(q, k_pool, v_pool, k_new, v_new, tables, lens, totals)
+    fn = jax.shard_map(
+        functools.partial(paged_decode_fused_quant, buf_size=buf_size,
+                          interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(None, axis, None), P(None, None, axis, None),
+                  P(None, None, axis, None), P(None, None, axis),
+                  P(None, None, axis), P(None, axis, None),
+                  P(None, axis, None), rep2, rep2, rep1),
+        out_specs=P(None, axis, None),
+        check_vma=False,
+    )
+    return fn(q, k_pool, v_pool, k_scale, v_scale, k_new, v_new,
+              tables, lens, totals)
+
+
+def fused_tp_parity_probe(mesh, *, seed: int = 0,
+                          interpret: bool = True) -> bool:
+    """Shared TP-kernel acceptance probe (tests and bench measure one
+    protocol, like ``paged_decode.tp_parity_probe``): a grouped paged layout
+    with ragged / partial table entries sized so the KV-head axis divides
+    the mesh. True iff ``paged_decode_fused_tp`` matches the single-device
+    fused kernel bit-for-bit."""
+    import numpy as np
+
+    n = mesh.shape["model"]
+    rng = np.random.default_rng(seed)
+    b, kvh, group, hd, block, nblk, buf = 2, n, 2, 16, 16, 6, 64
+    h = kvh * group
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nblk, block, kvh, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nblk, block, kvh, hd)), jnp.float32)
+    kn = jnp.asarray(rng.normal(size=(b, kvh, hd)), jnp.float32)
+    vn = jnp.asarray(rng.normal(size=(b, kvh, hd)), jnp.float32)
+    tbl = jnp.asarray(rng.integers(0, nblk, size=(b, 3)), jnp.int32)
+    lens = jnp.asarray([[block, block, 7], [block, 4, 0]], jnp.int32)
+    totals = jnp.sum(lens, axis=1) + 1
+    ref = paged_decode_fused(q, kp, vp, kn, vn, tbl, lens, totals,
+                             buf_size=buf, interpret=interpret)
+    tp = paged_decode_fused_tp(q, kp, vp, kn, vn, tbl, lens, totals,
+                               buf_size=buf, mesh=mesh, interpret=interpret)
+    return bool(jnp.array_equal(ref, jnp.asarray(tp)))

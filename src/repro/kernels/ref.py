@@ -146,6 +146,72 @@ def paged_decode_quant_ref(q, k_pool, v_pool, k_scale, v_scale,
     return jnp.stack(out).reshape(b, h, hd)
 
 
+def paged_decode_fused_ref(q, k_pool, v_pool, k_new, v_new, tables, lens,
+                           totals, *, buf_size, k_scale=None, v_scale=None):
+    """Dense-softmax oracle for the fused paged-decode kernel.
+
+    q (B,H,hd); k/v pool (n_blocks, block, KV, hd) — the serving pool
+    layout; k/v_new (B,KV,hd) the step's new token; tables/lens (B,n_max)
+    block ids and valid counts in dense order; totals (B,) the row length
+    including the new token. Pass ``k_scale``/``v_scale``
+    (n_blocks, block, KV) for an int8 pool. Builds the compacted dense view
+    exactly as ``gather_rows(_quant)`` would — each table entry's first
+    ``lens[b,i]`` tokens concatenated in table order, the new token at
+    dense slot ``totals-1`` — and runs the same masked dense softmax as
+    ``models.attention.attention_rows`` over it.
+    """
+    b, h, hd = q.shape
+    nblk, block, kv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    g = h // kv
+    n_max = tables.shape[1]
+    tbl = jnp.clip(tables, 0, nblk - 1).astype(jnp.int32)
+    blens = jnp.clip(lens, 0, block).astype(jnp.int32)
+    tot = jnp.clip(totals, 1, buf_size).astype(jnp.int32)
+    view_dtype = q.dtype
+
+    def widen(pool, scale):
+        blocks = jnp.take(pool, tbl.reshape(-1), axis=0)   # (B*n_max, blk, KV, hd)
+        if scale is None:
+            return blocks.astype(view_dtype)
+        sc = jnp.take(scale, tbl.reshape(-1), axis=0)
+        return (blocks.astype(jnp.float32)
+                * sc.astype(jnp.float32)[..., None]).astype(view_dtype)
+
+    kb = widen(k_pool, k_scale).reshape(b, n_max, block, kv, hd)
+    vb = widen(v_pool, v_scale).reshape(b, n_max, block, kv, hd)
+    # compact each row's ragged entries in dense order via a scatter of each
+    # valid token to its dense slot offs[b,i] + j
+    offs = jnp.cumsum(blens, axis=1) - blens                     # (B, n_max)
+    tok_off = jnp.arange(block)[None, None]                      # (1,1,block)
+    dense_idx = offs[:, :, None] + tok_off                       # (B,n_max,blk)
+    valid = tok_off < blens[:, :, None]
+    s_buf = buf_size
+    dense_idx = jnp.where(valid, dense_idx, s_buf)               # park invalid
+    kd = jnp.zeros((b, s_buf + 1, kv, hd), view_dtype)
+    vd = jnp.zeros((b, s_buf + 1, kv, hd), view_dtype)
+    bi = jnp.arange(b)[:, None, None] * jnp.ones_like(dense_idx)
+    kd = kd.at[bi.reshape(b, -1), dense_idx.reshape(b, -1)].set(
+        kb.reshape(b, -1, kv, hd))
+    vd = vd.at[bi.reshape(b, -1), dense_idx.reshape(b, -1)].set(
+        vb.reshape(b, -1, kv, hd))
+    row = jnp.arange(b)
+    kd = kd.at[row, tot - 1].set(k_new.astype(view_dtype))
+    vd = vd.at[row, tot - 1].set(v_new.astype(view_dtype))
+    kd, vd = kd[:, :s_buf], vd[:, :s_buf]
+
+    qr = q.reshape(b, 1, kv, g, hd)
+    s = jnp.einsum("bqcgd,bscd->bcgqs", qr, kd,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    mask = jnp.arange(s_buf)[None, :] < tot[:, None]             # (B, S_buf)
+    s = jnp.where(mask[:, None, None, None], s, -1e30)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -1e29)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bcgqs,bscd->bqcgd", p / jnp.maximum(l, 1e-30), vd,
+                   preferred_element_type=jnp.float32)
+    return o.astype(q.dtype).reshape(b, h, hd)
+
+
 def kv_dequant_ref(q8, scale, dtype=jnp.bfloat16):
     """int8 (..., hd) x f16 scale (..., 1) -> dtype."""
     return (q8.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)

@@ -67,6 +67,10 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="serve over the chunk-shared paged block pool "
                          "(implies --continuous)")
+    ap.add_argument("--three-phase", action="store_true",
+                    help="pin the paged decode step to the three-phase "
+                         "gather/step/scatter pipeline instead of the fused "
+                         "single-launch kernel (parity oracle / fallback)")
     args = ap.parse_args()
     if args.paged:
         args.continuous = True
@@ -116,7 +120,8 @@ def main() -> None:
               for i in range(args.requests)]
         if args.continuous:
             sched = ContinuousScheduler(eng, max_slots=args.batch,
-                                        paged=args.paged)
+                                        paged=args.paged,
+                                        fused=not args.three_phase)
             sched.run(qs[:args.batch], max_new_tokens=args.new_tokens)  # warm
             t0 = time.perf_counter()
             answers, m = sched.run(qs, max_new_tokens=args.new_tokens)

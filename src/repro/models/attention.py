@@ -433,6 +433,54 @@ def attn_into_cache_rows(cfg, p, x, rope_pos, order_pos, pk, pv, slot_pos,
     return out @ p["wo"], pk, pv
 
 
+def attn_paged_fused(cfg, p, x, positions, pk_blocks, pv_blocks, ks_blocks,
+                     vs_blocks, tables, lens, totals, *, buf_size: int,
+                     view_dtype, interpret: bool = True, mesh=None,
+                     tp_axis: str = "model"):
+    """Single-token decode attention straight off the paged block pool.
+
+    The fused twin of ``attn_into_cache_rows`` for Sq=1: projects/rotates the
+    new token, then runs ``paged_decode_fused`` against this layer's pool
+    blocks ``pk/pv_blocks (n_blocks, block, KV, hd)`` (+ int8 scales) through
+    the per-row block ``tables``/``lens``/``totals`` — no dense gather, no
+    write-then-attend buffer. The new token's K/V is cast to the pool view
+    dtype (exactly the ``new.astype(buf.dtype)`` the dense path's cache write
+    performs) and handed to the kernel, which stages it at ``totals - 1``; the
+    caller owns persisting the returned (k_new, v_new) into the pool (the
+    scatter half of the three-phase pipeline, now one token-level write).
+
+    Returns (out (B,1,D), k_new (B,KV,hd), v_new (B,KV,hd)).
+    """
+    from repro.kernels.paged_decode_fused import (paged_decode_fused,
+                                                  paged_decode_fused_quant,
+                                                  paged_decode_fused_tp)
+
+    q = project_q(cfg, p, x)                      # (B,1,H,hd)
+    k_new, v_new = project_kv(cfg, p, x)
+    if cfg.use_rope:
+        q, k_new = rope_q_k(q, k_new, positions, cfg.rope_theta)
+    kn = k_new[:, 0].astype(view_dtype)
+    vn = v_new[:, 0].astype(view_dtype)
+    q0 = q[:, 0]
+    if mesh is not None:
+        out = paged_decode_fused_tp(q0, pk_blocks, pv_blocks, kn, vn, tables,
+                                    lens, totals, buf_size=buf_size,
+                                    mesh=mesh, axis=tp_axis,
+                                    k_scale=ks_blocks, v_scale=vs_blocks,
+                                    interpret=interpret)
+    elif ks_blocks is None:
+        out = paged_decode_fused(q0, pk_blocks, pv_blocks, kn, vn, tables,
+                                 lens, totals, buf_size=buf_size,
+                                 interpret=interpret)
+    else:
+        out = paged_decode_fused_quant(q0, pk_blocks, pv_blocks, ks_blocks,
+                                       vs_blocks, kn, vn, tables, lens,
+                                       totals, buf_size=buf_size,
+                                       interpret=interpret)
+    out = out.reshape(x.shape[0], 1, cfg.q_dim)
+    return out @ p["wo"], kn, vn
+
+
 def attn_cross(cfg, p, x, ck, cv):
     """Cross-attention: x (B,Sq,D) over precomputed encoder K/V (B,Se,KV,hd).
 

@@ -154,6 +154,20 @@ class Model:
         return transformer.decode_step_rows(self.cfg, params, cache, tokens,
                                             positions)
 
+    def decode_step_rows_fused(self, params, pool_k, pool_v, k_scale, v_scale,
+                               length, tokens, tables, lens, totals, *,
+                               buf_size: int, block_size: int,
+                               interpret: bool = True, mesh=None,
+                               tp_axis: str = "model"):
+        """Fused paged decode straight off the pool block tensors — one
+        Pallas launch per layer instead of gather -> dense step -> scatter.
+        Returns (logits, k_new (L,B,KV,hd), v_new) in the pool view dtype."""
+        return transformer.decode_step_rows_fused(
+            self.cfg, params, pool_k, pool_v, k_scale, v_scale, length,
+            tokens, tables, lens, totals, buf_size=buf_size,
+            block_size=block_size, interpret=interpret, mesh=mesh,
+            tp_axis=tp_axis)
+
 
 def build_model(cfg) -> Model:
     return Model(cfg)

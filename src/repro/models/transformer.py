@@ -25,8 +25,8 @@ from repro.configs.base import ATTENTION, RECURRENT
 from repro.dist.sharding import shard
 from repro.models import cache as cache_lib
 from repro.models.attention import (attn_into_cache, attn_into_cache_rows,
-                                    attn_self, attn_with_prefix,
-                                    init_attention)
+                                    attn_paged_fused, attn_self,
+                                    attn_with_prefix, init_attention)
 from repro.models.cache import (AttnCache, HybridCache, RowAttnCache, SSMCache,
                                 write_kv)
 from repro.models.mamba import init_mamba, mamba_fwd
@@ -531,3 +531,101 @@ def decode_step_rows(cfg, params, cache: RowAttnCache, tokens, positions=None):
                              length=cache.length + sq)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return unembed(cfg, params, x), new_cache
+
+
+def decode_step_rows_fused(cfg, params, pool_k, pool_v, k_scale, v_scale,
+                           length, tokens, tables, lens, totals, *,
+                           buf_size: int, block_size: int,
+                           interpret: bool = True, mesh=None,
+                           tp_axis: str = "model"):
+    """Fused paged decode: one ``paged_decode_fused`` launch per layer,
+    straight off the pool block tensors — the kernel twin of
+    ``decode_step_rows`` over a gathered ``PagedRowCache`` view.
+
+    ``pool_k/v (L, n_slots, KV, hd)`` are the pool's flat block tensors
+    (+ ``k/v_scale (L, n_slots, KV)`` for an int8 pool); ``tables``/``lens``
+    (B, n_max) and ``totals`` (B,) are the host-built per-row block runs
+    (``PagedRowCache.step_tables``). Single-token steps only (Sq=1 — the
+    scheduler's decode cadence; prompt sub-prefills keep the dense row path),
+    and no sliding window (the fused mask is pure ragged-length).
+
+    Returns (logits (B,1,V), k_new (L,B,KV,hd), v_new (L,B,KV,hd)) — the
+    per-layer new-token K/V in the pool view dtype, which the caller persists
+    through the page table (the one remaining token-granularity write).
+    """
+    fam = cfg.family
+    if fam not in ("dense", "vlm", "moe"):
+        raise ValueError(f"decode_step_rows_fused: attention-KV families "
+                         f"only, got {fam}")
+    if tokens.shape[1] != 1:
+        raise ValueError("decode_step_rows_fused: single-token steps only "
+                         f"(got Sq={tokens.shape[1]}); prompt sub-prefills "
+                         "run the dense row path")
+    if cfg.sliding_window is not None:
+        raise ValueError("decode_step_rows_fused: sliding_window is not "
+                         "expressible in the ragged-length mask; serve via "
+                         "the three-phase path")
+    x = embed_inputs(cfg, params, tokens)
+    positions = length[:, None].astype(jnp.int32)      # (B,1) order positions
+    n_layers, n_slots, kvh, hd = pool_k.shape
+    n_blocks = n_slots // block_size
+    pk = pool_k.reshape(n_layers, n_blocks, block_size, kvh, hd)
+    pv = pool_v.reshape(n_layers, n_blocks, block_size, kvh, hd)
+    if k_scale is None:
+        ks = vs = None
+        view_dt = pool_k.dtype
+    else:
+        ks = k_scale.reshape(n_layers, n_blocks, block_size, kvh)
+        vs = v_scale.reshape(n_layers, n_blocks, block_size, kvh)
+        view_dt = jnp.dtype(cfg.activation_dtype)
+
+    def attend(lp, x, pkb, pvb, ksb, vsb):
+        a, kn, vn = attn_paged_fused(
+            cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps), positions,
+            pkb, pvb, ksb, vsb, tables, lens, totals, buf_size=buf_size,
+            view_dtype=view_dt, interpret=interpret, mesh=mesh,
+            tp_axis=tp_axis)
+        return x + a, kn, vn
+
+    if fam in ("dense", "vlm"):
+        def scan_body(x, xs):
+            if ks is None:
+                lp, pkb, pvb = xs
+                ksb = vsb = None
+            else:
+                lp, pkb, pvb, ksb, vsb = xs
+            x, kn, vn = attend(lp, x, pkb, pvb, ksb, vsb)
+            x = x + mlp(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x, (kn, vn)
+        xs = ((params["layers"], pk, pv) if ks is None
+              else (params["layers"], pk, pv, ks, vs))
+        x, (k_new, v_new) = scan_layers(scan_body, x, xs)
+    else:  # moe
+        n_pre = cfg.first_dense_layers
+        new_ks, new_vs = [], []
+        for i, lp in enumerate(params["prefix_layers"]):
+            x, kn, vn = attend(lp, x, pk[i], pv[i],
+                               None if ks is None else ks[i],
+                               None if vs is None else vs[i])
+            x = x + mlp(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            new_ks.append(kn); new_vs.append(vn)
+        def scan_body(x, xs):
+            if ks is None:
+                lp, pkb, pvb = xs
+                ksb = vsb = None
+            else:
+                lp, pkb, pvb, ksb, vsb = xs
+            x, kn, vn = attend(lp, x, pkb, pvb, ksb, vsb)
+            m, _ = moe_ffn(cfg, lp["moe"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+            return x + m, (kn, vn)
+        xs = ((params["layers"], pk[n_pre:], pv[n_pre:]) if ks is None
+              else (params["layers"], pk[n_pre:], pv[n_pre:],
+                    ks[n_pre:], vs[n_pre:]))
+        x, (kns, vns) = scan_layers(scan_body, x, xs)
+        k_new = kns if not new_ks else jnp.concatenate(
+            [jnp.stack(new_ks), kns], axis=0)
+        v_new = vns if not new_vs else jnp.concatenate(
+            [jnp.stack(new_vs), vns], axis=0)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), k_new, v_new

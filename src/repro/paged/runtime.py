@@ -88,6 +88,14 @@ class PagedRowCache:
         self.gather_idx = jnp.asarray(gi)
         self.slot_pos = jnp.full((max_slots, buf_size), -1, jnp.int32)
         self.length = jnp.zeros((max_slots,), jnp.int32)
+        # host mirrors of the gather table and row lengths: the fused decode
+        # path builds its per-step block tables from these without a device
+        # round-trip (``step_tables``). ``host_lengths`` advances via
+        # ``note_step`` (every batched step ages every slot, live or stale —
+        # exactly like the device ``length``); absolute values re-sync at
+        # admit time (``set_row_state``).
+        self.host_gather = gi.copy()
+        self.host_lengths = np.zeros((max_slots,), np.int64)
 
     @property
     def quantized(self) -> bool:
@@ -104,6 +112,7 @@ class PagedRowCache:
     def install_row(self, slot: int, handle: RowPages,
                     gather_row: np.ndarray) -> None:
         self.rows[slot] = handle
+        self.host_gather[slot] = gather_row
         self.gather_idx = self.gather_idx.at[slot].set(
             jnp.asarray(gather_row))
 
@@ -111,6 +120,7 @@ class PagedRowCache:
         """Mirror ``insert_cache_row`` for the slot's position state."""
         self.slot_pos = self.slot_pos.at[slot].set(slot_pos_row)
         self.length = self.length.at[slot].set(length_row)
+        self.host_lengths[slot] = int(length_row)
 
     def release_row(self, slot: int) -> None:
         """Retire a slot: decref shared chunk pages (pages another request
@@ -122,8 +132,81 @@ class PagedRowCache:
             self.pool.release(cid)
         self.pool.free_private(handle.private_blocks)
         self.rows[slot] = RowPages()
-        self.gather_idx = self.gather_idx.at[slot].set(
-            jnp.asarray(self.scratch_row(slot)))
+        scratch = self.scratch_row(slot)
+        self.host_gather[slot] = scratch
+        self.gather_idx = self.gather_idx.at[slot].set(jnp.asarray(scratch))
+
+    def note_step(self) -> None:
+        """Age every slot by one decode token (the host mirror of the device
+        ``length + 1`` a batched step performs for live AND stale rows)."""
+        self.host_lengths += 1
+
+    # -- fused-step block tables ---------------------------------------------------
+    def step_tables(self, bucket: int = 4):
+        """Build the fused kernel's per-row block tables for the NEXT decode
+        step from the host gather mirror: each row's dense prefix [0, length)
+        compresses into (pool block id, valid token count) runs — every run
+        starts at block offset 0 because ``token_slot_ids`` lays chunks and
+        tails out block-aligned (and ``scratch_row`` is block-cyclic).
+
+        ``bucket`` rounds the table width up (retrace bound for the jitted
+        fused step: one trace per width bucket, not per occupancy pattern).
+
+        Raises ValueError when a live row's append would land outside its
+        private tail — the shared-page mutation guard: past that point the
+        dense path would wrap ``length % buf`` into slots mapping to
+        ref-counted chunk pages, and an in-place append would corrupt every
+        co-resident row sharing them. (Stale/retired rows are exempt: their
+        writes are scratch-mapped and their logits are discarded.)
+
+        Returns (tables (B, n_max) int32, lens (B, n_max) int32,
+        totals (B,) int32, n_max).
+        """
+        bs = self.pool.block_size
+        totals = np.clip(self.host_lengths + 1, 1,
+                         self.buf_size).astype(np.int32)
+        per_row = []
+        for slot in range(self.max_slots):
+            handle = self.rows[slot]
+            length = int(self.host_lengths[slot])
+            if handle.tail_slots is not None:
+                cap = handle.n_doc + len(handle.tail_slots)
+                if length + 1 > cap:
+                    raise ValueError(
+                        f"step_tables: slot {slot} append at length {length} "
+                        f"exceeds its private tail (n_doc {handle.n_doc} + "
+                        f"tail {len(handle.tail_slots)}); appending past the "
+                        f"tail would write into ref-counted shared pages — "
+                        f"admit rows with max_new_tokens covered by the tail")
+            g = self.host_gather[slot]
+            span = int(totals[slot]) - 1        # prior tokens to attend over
+            entries = []
+            p = 0
+            while p < span:
+                s = int(g[p])
+                blk, off = divmod(s, bs)
+                if off:
+                    raise ValueError(
+                        f"step_tables: slot {slot} gather row is not "
+                        f"block-aligned at dense slot {p} (pool slot {s}) — "
+                        f"pages must be laid out by token_slot_ids")
+                n = min(bs, span - p)
+                run = 1
+                while run < n and int(g[p + run]) == s + run:
+                    run += 1
+                entries.append((blk, run))
+                p += run
+            per_row.append(entries)
+        n_max = max((len(e) for e in per_row), default=0)
+        n_max = max(1, -(-n_max // bucket) * bucket)
+        tables = np.full((self.max_slots, n_max), self._scratch, np.int32)
+        lens = np.zeros((self.max_slots, n_max), np.int32)
+        for i, entries in enumerate(per_row):
+            for j, (blk, run) in enumerate(entries):
+                tables[i, j] = blk
+                lens[i, j] = run
+        return (jnp.asarray(tables), jnp.asarray(lens), jnp.asarray(totals),
+                n_max)
 
     # -- dense views ---------------------------------------------------------------
     def _view(self, gather_idx, slot_pos, length) -> RowAttnCache:

@@ -144,7 +144,8 @@ class ContinuousScheduler:
                  buf_size: Optional[int] = None, n_load_workers: int = 4,
                  paged: bool = False, block_size: int = 64,
                  pool_blocks: Optional[int] = None,
-                 pool_budget_bytes: Optional[int] = None):
+                 pool_budget_bytes: Optional[int] = None,
+                 fused: bool = True):
         if engine.cfg.family not in ("dense", "vlm", "moe"):
             raise ValueError("ContinuousScheduler requires an attention-KV "
                              "family")
@@ -160,6 +161,11 @@ class ContinuousScheduler:
         self.max_slots = max_slots
         self.buf_size = buf_size
         self.paged = paged
+        # fused=True (default) serves paged decode steps as one Pallas
+        # launch per layer (kernels.paged_decode_fused); False pins the
+        # three-phase gather -> step -> scatter pipeline (the parity
+        # oracle / fallback). No effect on the dense row-slotted path.
+        self.fused = fused
         self.block_size = block_size
         self.pool_blocks = pool_blocks
         # HBM byte budget alternative to pool_blocks: the pool's codec
@@ -346,7 +352,8 @@ class ContinuousScheduler:
             t_dec = time.perf_counter()
             if self.paged:
                 logits = eng.step_rows_paged(pcache,
-                                             jnp.asarray(cur)[:, None])
+                                             jnp.asarray(cur)[:, None],
+                                             fused=self.fused)
             else:
                 logits, cache = eng.step_rows(cache,
                                               jnp.asarray(cur)[:, None])

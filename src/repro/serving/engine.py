@@ -29,7 +29,7 @@ from repro.core.compose import (compose_attn_cache, compose_attn_cache_rows,
                                 compose_hybrid_cache, compose_ssm_cache)
 from repro.core.materialize import (Materializer, load_artifact,
                                     load_artifact_encoded)
-from repro.core.quantize import get_codec
+from repro.core.quantize import get_codec, quantize_kv
 from repro.data.tokenizer import EOS, SEP, ByteTokenizer
 from repro.models.cache import (AttnCache, RowAttnCache, init_attn_cache,
                                 init_hybrid_cache, init_ssm_cache, write_kv)
@@ -116,6 +116,8 @@ class RagEngine:
         # row-slotted step (continuous batching); jit retraces per shape
         self._row_step_fn = jax.jit(
             self._meshed(lambda p, c, t: self.model.decode_step_rows(p, c, t)))
+        # fused paged steps, keyed by (table width, codec, pool geometry)
+        self._fused_step_fns = {}
 
     def _meshed(self, fn):
         """Wrap a model fn so jit TRACING runs under the engine's mesh
@@ -446,15 +448,102 @@ class RagEngine:
         pcache.set_row_state(slot, row.slot_pos[0], row.length[0])
         return first
 
-    def step_rows_paged(self, pcache, tokens: jnp.ndarray) -> jnp.ndarray:
-        """One batched decode step over the whole paged slot table:
-        gather -> (shared) step_rows -> scatter. Returns logits (B,Sq,V)."""
+    def fused_step_supported(self, tokens: jnp.ndarray) -> bool:
+        """Whether the fused single-launch kernel can serve this step.
+        Unsupported shapes (multi-token steps, sliding-window configs, a
+        mesh the KV-head count doesn't divide) fall back to the three-phase
+        pipeline — same answers, three HBM round trips."""
+        if tokens.shape[1] != 1:
+            return False
+        if self.cfg.sliding_window is not None:
+            return False
+        if (self.mesh is not None and "model" in self.mesh.shape
+                and self.cfg.num_kv_heads % self.mesh.shape["model"] != 0):
+            return False
+        return True
+
+    def _fused_step_fn(self, pcache, n_max: int):
+        """Jitted fused paged step for one (table width, codec, geometry)
+        key: run ``decode_step_rows_fused`` (one kernel launch per layer),
+        then advance slot_pos/length and persist the new token through the
+        gather table — bit-identical bookkeeping to
+        ``scatter_decode_token(_quant)``, but at token granularity instead
+        of a full dense-buffer scatter."""
+        from repro.kernels.ops import _interpret_default
+        quantized = pcache.quantized
+        buf_size = pcache.buf_size
+        block_size = pcache.pool.block_size
+        key = (n_max, quantized, buf_size, block_size)
+        if key in self._fused_step_fns:
+            return self._fused_step_fns[key]
+        interpret = _interpret_default()
+        mesh = self.mesh
+
+        def fn(params, pool_k, pool_v, k_scale, v_scale, length, slot_pos,
+               gather_idx, tokens, tables, lens, totals):
+            logits, k_new, v_new = self.model.decode_step_rows_fused(
+                params, pool_k, pool_v, k_scale, v_scale, length, tokens,
+                tables, lens, totals, buf_size=buf_size,
+                block_size=block_size, interpret=interpret, mesh=mesh)
+            order_pos = length[:, None].astype(jnp.int32)
+            start = (length % buf_size).astype(jnp.int32)
+            spos = jax.vmap(
+                lambda sp, op, st: jax.lax.dynamic_update_slice(
+                    sp, op.astype(jnp.int32), (st,)))(
+                slot_pos, order_pos, start)
+            phys = jnp.take_along_axis(gather_idx, start[:, None],
+                                       axis=1)[:, 0]
+            if quantized:
+                qk, sk = quantize_kv(k_new)
+                qv, sv = quantize_kv(v_new)
+                pool_k = pool_k.at[:, phys].set(qk)
+                pool_v = pool_v.at[:, phys].set(qv)
+                k_scale = k_scale.at[:, phys].set(
+                    sk[..., 0].astype(k_scale.dtype))
+                v_scale = v_scale.at[:, phys].set(
+                    sv[..., 0].astype(v_scale.dtype))
+            else:
+                pool_k = pool_k.at[:, phys].set(k_new.astype(pool_k.dtype))
+                pool_v = pool_v.at[:, phys].set(v_new.astype(pool_v.dtype))
+            return (logits, pool_k, pool_v, k_scale, v_scale, spos,
+                    length + 1)
+
+        donate = (1, 2, 3, 4) if quantized else (1, 2)
+        self._fused_step_fns[key] = jax.jit(self._meshed(fn),
+                                            donate_argnums=donate)
+        return self._fused_step_fns[key]
+
+    def step_rows_paged(self, pcache, tokens: jnp.ndarray,
+                        fused: Optional[bool] = None) -> jnp.ndarray:
+        """One batched decode step over the whole paged slot table.
+
+        ``fused=True`` serves the step as ONE Pallas launch per layer
+        (``kernels.paged_decode_fused``): KV pages stream from HBM exactly
+        once, straight through the block table, and the only write-back is
+        the new token itself. Steps the kernel can't express (see
+        ``fused_step_supported``) silently fall back. ``fused=None/False``
+        keeps the three-phase gather -> (shared) step_rows -> scatter
+        pipeline — the parity oracle and the stable low-level API default.
+        Returns logits (B,Sq,V)."""
+        if fused and self.fused_step_supported(tokens):
+            # host-built block tables; raises on a shared-page append hazard
+            tables, lens, totals, n_max = pcache.step_tables()
+            fn = self._fused_step_fn(pcache, n_max)
+            pool = pcache.pool
+            (logits, pool.k, pool.v, pool.k_scale, pool.v_scale,
+             pcache.slot_pos, pcache.length) = fn(
+                self.params, pool.k, pool.v, pool.k_scale, pool.v_scale,
+                pcache.length, pcache.slot_pos, pcache.gather_idx, tokens,
+                tables, lens, totals)
+            pcache.note_step()
+            return logits
         cache = pcache.dense_view()
         prev_len = cache.length
         logits, new_cache = self.step_rows(cache, tokens)
         pcache.scatter_step(prev_len, new_cache.k, new_cache.v)
         pcache.slot_pos = new_cache.slot_pos
         pcache.length = new_cache.length
+        pcache.note_step()
         return logits
 
     def release_row_paged(self, pcache, slot: int) -> None:

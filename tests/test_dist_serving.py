@@ -90,6 +90,7 @@ SUBPROC = textwrap.dedent("""
 
     from repro.configs import get_config
     from repro.kernels.paged_decode import tp_parity_probe
+    from repro.kernels.paged_decode_fused import fused_tp_parity_probe
     from repro.kvstore import FlashKVStore
     from repro.launch.mesh import make_serving_mesh
     from repro.models import build_model
@@ -167,6 +168,18 @@ SUBPROC = textwrap.dedent("""
         # shard_map kernel bit parity (one probe shared with the benchmark)
         out["kernel_bit_parity"] = tp_parity_probe(make_serving_mesh(8))
 
+        # fused single-launch decode under the 8-way mesh: the serves above
+        # ran it (scheduler default) — pin three-phase on the same engine
+        # and require identical answers, plus the fused shard_map twin's
+        # bit-parity probe
+        sched3p = ContinuousScheduler(eng8, max_slots=2, paged=True,
+                                      block_size=32, fused=False)
+        ans8_3p, _ = sched3p.run(QS, max_new_tokens=5)
+        sched3p.shutdown()
+        out["mesh8_fused_matches_three_phase"] = ans8_3p == ans8
+        out["fused_kernel_bit_parity"] = fused_tp_parity_probe(
+            make_serving_mesh(8))
+
     print(json.dumps(out))
 """)
 
@@ -191,3 +204,7 @@ def test_mesh_sharded_paged_serving_8_host_devices():
     assert out["pool_pinned_shards_sum"]
     assert out["teacher_forced_rel"] < 0.05
     assert out["kernel_bit_parity"]
+    assert out["mesh8_fused_matches_three_phase"], (
+        "8-device fused paged decode diverged from the three-phase oracle")
+    assert out["fused_kernel_bit_parity"], (
+        "paged_decode_fused_tp diverged from the single-device fused kernel")

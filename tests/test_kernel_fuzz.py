@@ -1,0 +1,203 @@
+"""Kernel-oracle fuzz harness for the paged-decode family (DESIGN.md §13).
+
+Randomized property sweep running ``paged_decode``, ``paged_decode_quant``
+and the fused single-launch kernels against their ``ref.py`` oracles over
+ragged row lengths, block sizes, KV-head group sizes (MQA/GQA/MHA) and
+codecs. Two engines drive the same parameterized checkers:
+
+* an always-on seeded numpy sweep — deterministic parameter draws from a
+  fixed-seed generator, bounded example budget — so the properties run even
+  where hypothesis isn't installed;
+* a hypothesis sweep (CI installs hypothesis) exploring the same space with
+  ``derandomize=True`` (seeded, reproducible) and deterministic shrinking
+  to a minimal failing geometry.
+
+Every drawn case plants the known hard boundaries on top of the random
+raggedness: a fully-masked (empty) row, a full first block, and a
+zero-length trailing table entry. The fused checkers cover both codecs
+(bf16 pool; int8 pool + f16 per-vector scales dequantized in VMEM) and both
+activation dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantize import quantize_kv
+from repro.kernels import ref
+from repro.kernels.paged_decode import paged_decode
+from repro.kernels.paged_decode_fused import (paged_decode_fused,
+                                              paged_decode_fused_quant)
+from repro.kernels.paged_decode_quant import paged_decode_quant
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # local envs without hypothesis: numpy sweep only
+    HAVE_HYPOTHESIS = False
+
+TOLS = {jnp.float32: dict(rtol=3e-5, atol=3e-5),
+        jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+_DTYPES = [jnp.float32, jnp.bfloat16]
+
+# jitted oracle: under jit XLA contracts acc*alpha + dot to the same FMA the
+# kernel uses, giving bit-equality where eager op-by-op drift would not
+_quant_ref = jax.jit(ref.paged_decode_quant_ref)
+
+
+def _ragged_tables(rng, b, n_max, block, n_pool):
+    """Random page tables + ragged lens with the hard boundaries planted:
+    row 0 starts with a full block, the last table entry is empty, and the
+    last row (when b > 1) is fully masked."""
+    tbl = rng.integers(0, n_pool, (b, n_max)).astype(np.int32)
+    lens = rng.integers(0, block + 1, (b, n_max)).astype(np.int32)
+    lens[0, 0] = block
+    lens[:, n_max - 1] = rng.integers(0, 2) * lens[:, n_max - 1]
+    if b > 1:
+        lens[b - 1] = 0                      # empty row: attends to nothing
+    return jnp.asarray(tbl), jnp.asarray(lens), lens
+
+
+def _check_legacy(seed, b, kvh, group, hd, block, n_max, dt_idx, quant):
+    """paged_decode / paged_decode_quant vs oracle on the (N,KV,block,hd)
+    pool layout with per-entry ragged lens."""
+    dtype = _DTYPES[dt_idx]
+    rng = np.random.default_rng(seed)
+    n_pool = n_max + 2
+    h = kvh * group
+    q = jnp.asarray(rng.standard_normal((b, h, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((n_pool, kvh, block, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((n_pool, kvh, block, hd)), dtype)
+    tbl, lens, _ = _ragged_tables(rng, b, n_max, block, n_pool)
+    if quant:
+        k8, ks = quantize_kv(k)
+        v8, vs = quantize_kv(v)
+        ks = ks[..., 0].astype(jnp.float16)
+        vs = vs[..., 0].astype(jnp.float16)
+        out = paged_decode_quant(q, k8, v8, ks, vs, tbl, lens)
+        expect = _quant_ref(q, k8, v8, ks, vs, tbl, lens)
+    else:
+        out = paged_decode(q, k, v, tbl, lens)
+        expect = ref.paged_decode_ref(q, k, v, tbl, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **TOLS[dtype])
+    if b > 1:       # the planted empty row must be exact zeros, not garbage
+        np.testing.assert_array_equal(np.asarray(out[b - 1], np.float32), 0.0)
+
+
+def _check_fused(seed, b, kvh, group, hd, block, n_max, dt_idx, quant):
+    """Fused single-launch kernel vs its dense-softmax oracle on the serving
+    pool layout (n_blocks, block, KV, hd), dense-order tables + new token."""
+    dtype = _DTYPES[dt_idx]
+    rng = np.random.default_rng(seed)
+    n_blocks = n_max + 2
+    buf = n_max * block
+    h = kvh * group
+    q = jnp.asarray(rng.standard_normal((b, h, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((n_blocks, block, kvh, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((n_blocks, block, kvh, hd)), dtype)
+    kn = jnp.asarray(rng.standard_normal((b, kvh, hd)), dtype)
+    vn = jnp.asarray(rng.standard_normal((b, kvh, hd)), dtype)
+    tbl, lens, lens_np = _ragged_tables(rng, b, n_max, block, n_blocks)
+    totals = jnp.asarray(np.clip(lens_np.sum(1) + 1, 1, buf), jnp.int32)
+    if quant:
+        k8, ks = quantize_kv(k)
+        v8, vs = quantize_kv(v)
+        ks = ks[..., 0].astype(jnp.float16)
+        vs = vs[..., 0].astype(jnp.float16)
+        out = paged_decode_fused_quant(q, k8, v8, ks, vs, kn, vn, tbl, lens,
+                                       totals, buf_size=buf)
+        expect = ref.paged_decode_fused_ref(q, k8, v8, kn, vn, tbl, lens,
+                                            totals, buf_size=buf,
+                                            k_scale=ks, v_scale=vs)
+    else:
+        out = paged_decode_fused(q, k, v, kn, vn, tbl, lens, totals,
+                                 buf_size=buf)
+        expect = ref.paged_decode_fused_ref(q, k, v, kn, vn, tbl, lens,
+                                            totals, buf_size=buf)
+    # the fused kernel replays the oracle's exact dense-order op sequence
+    # (same staged view, same masked softmax) — bit-equal for grouped
+    # layouts. group == 1 (MHA) degenerates the q x K dot to M=1, which XLA
+    # lowers with a different accumulation order than the kernel's
+    # dot_general (same caveat paged_decode_quant_ref documents): ulp-scale
+    # drift, so tolerance there
+    if group > 1:
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+    else:
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   **TOLS[dtype])
+
+
+_CHECKERS = {"legacy": _check_legacy, "fused": _check_fused}
+
+
+def _draw_np(rng):
+    """One random geometry from the shared parameter space."""
+    return dict(b=int(rng.integers(1, 4)),
+                kvh=int(rng.integers(1, 4)),
+                group=int(rng.choice([1, 2, 4])),   # MQA / GQA / MHA
+                hd=int(rng.choice([8, 16, 32])),
+                block=int(rng.choice([4, 8, 16])),
+                n_max=int(rng.integers(1, 5)),
+                dt_idx=int(rng.integers(0, 2)))
+
+
+N_NUMPY_EXAMPLES = 6      # per (kernel family x codec): bounded tier-1 budget
+
+
+@pytest.mark.parametrize("family", sorted(_CHECKERS))
+@pytest.mark.parametrize("quant", [False, True])
+def test_kernel_oracle_numpy_sweep(family, quant):
+    """Always-on deterministic sweep (fixed seed, fixed budget)."""
+    rng = np.random.default_rng(0xC0DEC + (family == "fused") * 7 + quant)
+    for i in range(N_NUMPY_EXAMPLES):
+        params = _draw_np(rng)
+        if quant:
+            params["dt_idx"] = 0             # int8 pages dequantize to f32
+        seed = int(rng.integers(0, 2**31 - 1))
+        try:
+            _CHECKERS[family](seed, quant=quant, **params)
+        except AssertionError as e:
+            raise AssertionError(
+                f"kernel-oracle mismatch: family={family} quant={quant} "
+                f"seed={seed} params={params}") from e
+
+
+if HAVE_HYPOTHESIS:
+    _geometry = dict(
+        seed=st.integers(0, 2**31 - 1),
+        b=st.integers(1, 3),
+        kvh=st.integers(1, 3),
+        group=st.sampled_from([1, 2, 4]),
+        hd=st.sampled_from([8, 16, 32]),
+        block=st.sampled_from([4, 8, 16]),
+        n_max=st.integers(1, 4),
+    )
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(dt_idx=st.integers(0, 1), **_geometry)
+    def test_paged_decode_matches_oracle_hyp(seed, b, kvh, group, hd, block,
+                                             n_max, dt_idx):
+        _check_legacy(seed, b, kvh, group, hd, block, n_max, dt_idx,
+                      quant=False)
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(**_geometry)
+    def test_paged_decode_quant_matches_oracle_hyp(seed, b, kvh, group, hd,
+                                                   block, n_max):
+        _check_legacy(seed, b, kvh, group, hd, block, n_max, 0, quant=True)
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(quant=st.booleans(), **_geometry)
+    def test_fused_decode_matches_oracle_hyp(seed, b, kvh, group, hd, block,
+                                             n_max, quant):
+        _check_fused(seed, b, kvh, group, hd, block, n_max, 0, quant=quant)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; the seeded numpy "
+                             "sweep above covers the same properties")
+    def test_hypothesis_sweep_placeholder():
+        pass

@@ -1,0 +1,170 @@
+"""Fused single-launch paged decode vs the three-phase pipeline.
+
+Boundary-case parity (bit-exact at the logits level): rows stepping across a
+block boundary into a freshly-allocated tail block, empty-retrieval rows,
+and stale released slots riding along as masked single-token rows. Plus the
+shared-page mutation guard (an append past the private tail must raise
+before touching the pool, never corrupt co-resident rows) and end-to-end
+answer parity under both codecs. The kernel-vs-oracle layer is covered
+separately by tests/test_kernel_fuzz.py.
+"""
+
+import tempfile
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kvstore import FlashKVStore
+from repro.models import build_model
+from repro.serving import ContinuousScheduler, RagEngine
+from repro.serving.sampling import greedy
+
+CORPUS = {
+    "d1": "the amber gate stands in hall nine beyond the long stair. " * 4,
+    "d2": "the cedar door opens with a brass song at dusk hour. " * 4,
+    "d3": "the brass lamp hums beside the tall window all night. " * 4,
+}
+QUESTIONS = ["where is the amber gate?", "where is the cedar door?",
+             "where is the brass lamp?"]
+BUF, BLOCK = 192, 32
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-135m").reduced(vocab_size=300)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    return cfg, model, params
+
+
+def _engine(model, params, store, **kw):
+    kw.setdefault("top_k", 2)
+    eng = RagEngine(model, params, store, chunk_tokens=48, **kw)
+    for d, text in CORPUS.items():
+        eng.ingest(d, text)
+    return eng
+
+
+def _twin_pcaches(eng, qs, max_new):
+    """Two identically-composed paged caches — one will step fused, the
+    other three-phase — plus the first sampled token per row."""
+    pcs = [eng.init_paged_cache(len(qs), BUF, block_size=BLOCK)
+           for _ in range(2)]
+    toks = np.zeros((len(qs),), np.int32)
+    for slot, q in enumerate(qs):
+        firsts = []
+        for pc in pcs:
+            req = eng.prepare_request(q, max_new)
+            eng.compose_row_paged(req, pc, slot)
+            firsts.append(eng.prefill_row_paged(pc, slot, req.prompt))
+        np.testing.assert_array_equal(np.asarray(firsts[0]),
+                                      np.asarray(firsts[1]))
+        toks[slot] = int(firsts[0][0])
+    return pcs[0], pcs[1], toks
+
+
+def _parity_steps(eng, pc_fused, pc_3p, toks, n_steps, rows=None):
+    """Step both pipelines in lockstep, asserting bit-identical logits each
+    step (over ``rows`` when given — stale slots' discarded outputs may
+    legitimately differ)."""
+    for _ in range(n_steps):
+        t = jnp.asarray(toks)[:, None]
+        lf = eng.step_rows_paged(pc_fused, t, fused=True)
+        l3 = eng.step_rows_paged(pc_3p, t, fused=False)
+        a, b = np.asarray(lf), np.asarray(l3)
+        if rows is not None:
+            a, b = a[rows], b[rows]
+        np.testing.assert_array_equal(a, b)
+        toks = np.asarray(greedy(lf[:, -1]))
+    return toks
+
+
+def test_fused_logits_bit_identical_across_block_boundary(setup):
+    """Decode from mid-block through a 32-token block boundary: the step
+    landing exactly at ``length % block == 0`` appends into a
+    freshly-allocated (never-written) tail block mid-decode, and the next
+    step reads it back. Every step must match three-phase bit-for-bit."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        pc_f, pc_3, toks = _twin_pcaches(eng, QUESTIONS[:2], max_new=40)
+        n_steps = max(BLOCK - int(pc_f.host_lengths[s]) % BLOCK + 2
+                      for s in range(2))                    # cross for both
+        assert n_steps <= 38
+        _parity_steps(eng, pc_f, pc_3, toks, n_steps)
+        # both rows actually crossed into a fresh block during the loop
+        assert all(int(pc_f.host_lengths[s]) // BLOCK
+                   > (int(pc_f.host_lengths[s]) - n_steps) // BLOCK
+                   for s in range(2))
+
+
+def test_fused_empty_retrieval_and_released_rows(setup):
+    """An empty-retrieval row (no doc pages, prompt-only tail) and — after a
+    mid-run release — a stale slot stepping on scratch pages. Live rows stay
+    bit-identical throughout; the released slot's discarded column must not
+    perturb them."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        eng.retrieve = lambda q: []          # every row: prompt-only
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", UserWarning)
+            pc_f, pc_3, toks = _twin_pcaches(
+                eng, ["where is nothing at all?", QUESTIONS[0]], max_new=12)
+        toks = _parity_steps(eng, pc_f, pc_3, toks, 3)
+        eng.release_row_paged(pc_f, 0)
+        eng.release_row_paged(pc_3, 0)
+        _parity_steps(eng, pc_f, pc_3, toks, 3, rows=[1])
+
+
+def test_fused_append_past_tail_raises_not_corrupts(setup):
+    """The shared-page mutation guard: stepping a row past its admitted
+    decode budget must raise (the append would land in ref-counted shared
+    pages) and must raise BEFORE mutating anything — pool pages and position
+    state stay exactly as the last good step left them."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv")
+        pcache = eng.init_paged_cache(1, BUF, block_size=BLOCK)
+        req = eng.prepare_request(QUESTIONS[0], 2)   # 2-token decode budget
+        eng.compose_row_paged(req, pcache, 0)
+        first = eng.prefill_row_paged(pcache, 0, req.prompt)
+        tok = jnp.asarray([[int(first[0])]], jnp.int32)
+        cap = pcache.rows[0].n_doc + len(pcache.rows[0].tail_slots)
+        budget = cap - int(pcache.host_lengths[0])
+        for _ in range(budget):                      # in-budget steps are fine
+            logits = eng.step_rows_paged(pcache, tok, fused=True)
+            tok = jnp.asarray(greedy(logits[:, -1]))[:, None]
+        k_before = np.asarray(pcache.pool.k)
+        lengths_before = pcache.host_lengths.copy()
+        with pytest.raises(ValueError, match="shared pages"):
+            eng.step_rows_paged(pcache, tok, fused=True)
+        np.testing.assert_array_equal(np.asarray(pcache.pool.k), k_before)
+        np.testing.assert_array_equal(pcache.host_lengths, lengths_before)
+
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+def test_fused_end_to_end_answers_match_three_phase(setup, codec):
+    """Full ContinuousScheduler runs — fused default vs pinned three-phase —
+    must produce identical answers under both KV codecs (bf16 logits parity
+    is bit-exact; int8 rows share the same stored quantized pages, so greedy
+    decode agrees there too)."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        eng = _engine(model, params, FlashKVStore(d), mode="matkv",
+                      codec=codec)
+        qs = QUESTIONS + [QUESTIONS[0]]              # one shared-chunk pair
+        answers = {}
+        for fused in (False, True):
+            sched = ContinuousScheduler(eng, max_slots=2, paged=True,
+                                        block_size=BLOCK, fused=fused)
+            answers[fused], m = sched.run(qs, max_new_tokens=5)
+            sched.shutdown()
+            assert m.n_new_tokens > 0
+        assert answers[True] == answers[False], (
+            f"fused paged decode diverged from the three-phase parity "
+            f"oracle under codec={codec}")
