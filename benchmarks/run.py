@@ -31,6 +31,7 @@ SUITES = {
     "fused_decode": "benchmarks.bench_fused_decode",
     "quant_residency": "benchmarks.bench_quant_residency",
     "tp_serving": "benchmarks.bench_tp_serving",
+    "disagg": "benchmarks.bench_disagg",
     "fig7_overlap": "benchmarks.bench_overlap",
     "table45_power": "benchmarks.bench_power",
     "fig8_lengths": "benchmarks.bench_lengths",

@@ -126,8 +126,12 @@ class Materializer:
                 encoded[n] = np.asarray(a)
         return encoded
 
-    def ingest(self, chunk: Chunk) -> int:
-        """Materialize one chunk; returns stored payload size in bytes."""
+    def ingest(self, chunk: Chunk,
+               extra_meta: Optional[Dict] = None) -> int:
+        """Materialize one chunk; returns stored payload size in bytes.
+        ``extra_meta`` entries (e.g. the role split's ``generation`` tag,
+        DESIGN.md §14) ride along in the artifact header — readers that
+        don't know a key ignore it."""
         if self.cfg.family in ("ssm", "hybrid"):
             artifact = self._prefill_exact(chunk.tokens)
         else:
@@ -136,6 +140,8 @@ class Materializer:
         meta = {"arch": self.cfg.name, "family": self.cfg.family,
                 "n_tokens": len(chunk), "chunk_id": chunk.chunk_id,
                 "doc_id": chunk.doc_id, "codec": self.codec.codec_id}
+        if extra_meta:
+            meta.update(extra_meta)
         payload = serialize(tensors, meta)
         self.store.put(chunk.chunk_id, payload)
         return len(payload)

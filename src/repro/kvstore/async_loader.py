@@ -44,6 +44,18 @@ class AsyncKvLoader:
     def load(self, chunk_id: str) -> "cf.Future[bytes]":
         return self._load(chunk_id)[0]
 
+    @staticmethod
+    def _outcome(f: cf.Future) -> Optional[BaseException]:
+        """The future's failure as a value, cancellation included. A done
+        callback must never call ``f.exception()`` bare: on a cancelled
+        future it RAISES CancelledError — a BaseException since py3.8 —
+        which escapes ``Future._invoke_callbacks``'s ``except Exception``
+        and silently aborts every later callback on the same future
+        (gather futures then hang forever)."""
+        if f.cancelled():
+            return cf.CancelledError()
+        return f.exception()
+
     def _load(self, chunk_id: str) -> "Tuple[cf.Future[bytes], bool]":
         """Returns (future, initiated): ``initiated`` is False when the call
         coalesced onto a read another caller already has in flight — the
@@ -59,7 +71,7 @@ class AsyncKvLoader:
             with self._inflight_lock:
                 if self._inflight.get(chunk_id) is f:
                     del self._inflight[chunk_id]
-                if f.exception() is None:
+                if self._outcome(f) is None:
                     # one initiated read = one flash transfer of the
                     # encoded payload (coalesced callers cost nothing)
                     self.stats.reads += 1
@@ -100,8 +112,8 @@ class AsyncKvLoader:
                     return
             results = []
             for f in futures:
-                exc = f.exception()
-                if exc is not None:
+                exc = self._outcome(f)    # cancellation as a value, not a
+                if exc is not None:       # callback-aborting raise
                     out.set_exception(exc)
                     return
                 results.append(f.result())
@@ -111,8 +123,13 @@ class AsyncKvLoader:
             f.add_done_callback(on_done)
         return out
 
-    def shutdown(self):
-        self.pool.shutdown(wait=True)
+    def shutdown(self, wait: bool = True, cancel: bool = False):
+        """Stop the loader. ``cancel=True`` additionally cancels queued
+        (not-yet-running) reads: their futures — and any ``load_many``
+        gather waiting on them — resolve with CancelledError instead of
+        draining, and the per-future done callbacks still run, so the
+        in-flight dedup registry empties either way."""
+        self.pool.shutdown(wait=wait, cancel_futures=cancel)
 
 
 class PrefetchPipeline:

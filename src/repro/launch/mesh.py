@@ -39,3 +39,28 @@ def make_serving_mesh(n_model: int, *, devices=None):
         raise ValueError(f"make_serving_mesh: n_model={n_model} must be in "
                          f"[1, {len(devices)}] (visible devices)")
     return jax.sharding.Mesh(np.asarray(devices[:n_model]), ("model",))
+
+
+def make_role_meshes(n_prefill: int, n_decode: int, *, devices=None):
+    """Heterogeneous role meshes for disaggregated serving (DESIGN.md §14):
+    two DISJOINT 1-axis ``("model",)`` meshes carved from one device pool —
+    the first ``n_prefill`` devices for the materializer role, the next
+    ``n_decode`` for the decode role. Models the paper's second headline
+    result in one process: a large prefill fleet feeding a deliberately
+    small (weak) decode mesh, with the flash artifact plane between them.
+    Returns ``(prefill_mesh, decode_mesh)``."""
+    import numpy as np
+
+    devices = list(jax.devices() if devices is None else devices)
+    if n_prefill < 1 or n_decode < 1:
+        raise ValueError(f"make_role_meshes: both roles need >=1 device, "
+                         f"got prefill={n_prefill} decode={n_decode}")
+    if n_prefill + n_decode > len(devices):
+        raise ValueError(
+            f"make_role_meshes: prefill={n_prefill} + decode={n_decode} "
+            f"exceeds {len(devices)} visible devices (roles must not share "
+            f"devices — the split is the point)")
+    prefill = jax.sharding.Mesh(np.asarray(devices[:n_prefill]), ("model",))
+    decode = jax.sharding.Mesh(
+        np.asarray(devices[n_prefill:n_prefill + n_decode]), ("model",))
+    return prefill, decode

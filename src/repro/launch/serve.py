@@ -14,10 +14,20 @@ scheduler; ``--paged`` additionally serves over the chunk-shared block pool
 (implies --continuous). Validate without accelerators via
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--role`` runs one side of the disaggregated split (DESIGN.md §14):
+``materialize`` ingests the corpus and writes codec-tagged artifacts (plus
+the work-queue manifest ``<store-dir>/queue.json``) and exits; ``decode``
+loads that manifest, hands requests off to a ``DecodeWorker``, and serves
+over the paged pool without ever prefilling a document token. The two
+roles share nothing but ``--store-dir`` — run them as separate processes
+against one directory. ``both`` (default) is the composed single-process
+engine, bit-identical to the pre-split monolith.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --requests 16 --batch 4 [--mode matkv|vanilla|cacheblend] [--overlap] \
-      [--ssd 9100pro|raid0|pm9a3|dram] [--mesh N] [--continuous] [--paged]
+      [--ssd 9100pro|raid0|pm9a3|dram] [--mesh N] [--continuous] [--paged] \
+      [--role both|materialize|decode --store-dir DIR]
 """
 
 from __future__ import annotations
@@ -25,6 +35,7 @@ from __future__ import annotations
 import argparse
 import tempfile
 import time
+from pathlib import Path
 
 import jax
 
@@ -32,10 +43,20 @@ from repro.configs import ASSIGNED, get_config
 from repro.kvstore import FlashKVStore, SimulatedReader
 from repro.launch.mesh import make_serving_mesh
 from repro.models import build_model
-from repro.serving import BatchScheduler, ContinuousScheduler, RagEngine
+from repro.serving import (BatchScheduler, ContinuousScheduler, DecodeWorker,
+                           HandoffRecord, MaterializerWorker, RagEngine,
+                           WorkQueue)
 
 CORPUS_WORDS = ["amber", "basil", "cedar", "delta", "ember", "fjord",
                 "grove", "haven", "iris", "jade", "karst", "lotus"]
+
+CHUNK_TOKENS = 64
+
+
+def corpus_docs():
+    for i, w in enumerate(CORPUS_WORDS):
+        yield f"doc{i:02d}", (f"the {w} artifact number {i} rests in chamber "
+                              f"{i * 7} of the deep vault. ") * 5
 
 
 def main() -> None:
@@ -44,7 +65,9 @@ def main() -> None:
     ap.add_argument("--mode", default="matkv",
                     choices=["matkv", "vanilla", "cacheblend"])
     ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=None,
+                    help="batch size / decode slots (default 4). Only valid "
+                         "where a batching scheduler runs")
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--overlap", action="store_true")
     ap.add_argument("--ssd", default=None,
@@ -71,7 +94,43 @@ def main() -> None:
                     help="pin the paged decode step to the three-phase "
                          "gather/step/scatter pipeline instead of the fused "
                          "single-launch kernel (parity oracle / fallback)")
+    ap.add_argument("--role", default="both",
+                    choices=["both", "materialize", "decode"],
+                    help="disaggregated role (DESIGN.md §14): 'materialize' "
+                         "writes chunk artifacts + queue manifest to "
+                         "--store-dir and exits; 'decode' serves requests "
+                         "from those artifacts over the paged pool; 'both' "
+                         "composes the two in one process (default)")
     args = ap.parse_args()
+
+    # reject silently-ignored flag combinations up front: running a
+    # different configuration than the one asked for is worse than an error
+    if args.three_phase and not (args.paged or args.role == "decode"):
+        ap.error("--three-phase only affects the paged decode step; it is "
+                 "silently ignored without --paged")
+    if args.overlap and (args.continuous or args.paged):
+        ap.error("--overlap belongs to the fixed BatchScheduler; the "
+                 "continuous scheduler always overlaps loads with decode, "
+                 "so the flag would be silently ignored")
+    if (args.batch is not None and args.mode != "matkv"
+            and not (args.continuous or args.paged)):
+        ap.error("--batch has no effect on the sequential vanilla/cacheblend "
+                 "path (requests are served one by one, with or without a "
+                 "mesh); drop it or serve --mode matkv / --continuous")
+    if args.role != "both":
+        if args.store_dir is None:
+            ap.error(f"--role {args.role} requires --store-dir: the flash "
+                     "artifact plane is the only interface between the "
+                     "roles, so it must outlive each process")
+        if args.mode != "matkv":
+            ap.error(f"--role {args.role} requires --mode matkv (the role "
+                     "split serves materialized artifacts)")
+        if args.rerotate:
+            ap.error(f"--role {args.role} requires rerotate=False (decode "
+                     "serves position-independent shared pages)")
+    if args.role == "decode":
+        args.continuous = True
+        args.paged = True
     if args.paged:
         args.continuous = True
 
@@ -90,12 +149,20 @@ def main() -> None:
         # chunk pages must be position-independent (DESIGN.md §10)
         ap.error("--paged requires rerotate=False: re-rotated keys are "
                  "position-dependent and cannot be shared across rows")
+    batch = args.batch if args.batch is not None else 4
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     mesh = make_serving_mesh(args.mesh) if args.mesh else None
-    print(f"serving {cfg.name} mode={args.mode} "
+    print(f"serving {cfg.name} mode={args.mode} role={args.role} "
           f"devices={len(jax.devices())}"
           + (f" mesh=model:{args.mesh}" if mesh is not None else ""))
+
+    if args.role == "materialize":
+        _run_materialize_role(args, model, params, mesh)
+        return
+    if args.role == "decode":
+        _run_decode_role(args, model, params, mesh, batch)
+        return
 
     root_ctx = (tempfile.TemporaryDirectory() if args.store_dir is None
                 else None)
@@ -104,25 +171,23 @@ def main() -> None:
         store = FlashKVStore(root)
         reader = SimulatedReader(store, args.ssd) if args.ssd else None
         eng = RagEngine(model, params, store, mode=args.mode,
-                        chunk_tokens=64, top_k=2, reader=reader,
+                        chunk_tokens=CHUNK_TOKENS, top_k=2, reader=reader,
                         rerotate=args.rerotate, codec=args.codec,
                         mesh=mesh)
         t0 = time.perf_counter()
         n = 0
-        for i, w in enumerate(CORPUS_WORDS):
-            text = (f"the {w} artifact number {i} rests in chamber "
-                    f"{i * 7} of the deep vault. ") * 5
-            n += len(eng.ingest(f"doc{i:02d}", text))
+        for doc_id, text in corpus_docs():
+            n += len(eng.ingest(doc_id, text))
         print(f"ingest: {n} chunks, {store.total_bytes() / 2**20:.1f} MiB KV, "
               f"{time.perf_counter() - t0:.1f}s")
 
         qs = [f"where is the {CORPUS_WORDS[i % len(CORPUS_WORDS)]} artifact?"
               for i in range(args.requests)]
         if args.continuous:
-            sched = ContinuousScheduler(eng, max_slots=args.batch,
+            sched = ContinuousScheduler(eng, max_slots=batch,
                                         paged=args.paged,
                                         fused=not args.three_phase)
-            sched.run(qs[:args.batch], max_new_tokens=args.new_tokens)  # warm
+            sched.run(qs[:batch], max_new_tokens=args.new_tokens)     # warm
             t0 = time.perf_counter()
             answers, m = sched.run(qs, max_new_tokens=args.new_tokens)
             wall = time.perf_counter() - t0
@@ -140,14 +205,14 @@ def main() -> None:
             print(f"sample answer: {answers[0]!r}")
             return
         if args.mode == "matkv":
-            sched = BatchScheduler(eng, batch_size=args.batch,
+            sched = BatchScheduler(eng, batch_size=batch,
                                    overlap=args.overlap)
-            sched.run(qs[:args.batch], max_new_tokens=args.new_tokens)  # warm
+            sched.run(qs[:batch], max_new_tokens=args.new_tokens)      # warm
             t0 = time.perf_counter()
             answers, t = sched.run(qs, max_new_tokens=args.new_tokens)
             wall = time.perf_counter() - t0
         else:
-            eng.answer(qs[0], max_new_tokens=args.new_tokens)           # warm
+            eng.answer(qs[0], max_new_tokens=args.new_tokens)          # warm
             t0 = time.perf_counter()
             answers = []
             t = None
@@ -165,6 +230,95 @@ def main() -> None:
     finally:
         if root_ctx is not None:
             root_ctx.cleanup()
+
+
+def _load_queue(store_dir: str):
+    path = Path(store_dir) / "queue.json"
+    return (WorkQueue.load(path) if path.exists() else WorkQueue()), path
+
+
+def _frontend_index():
+    """Retrieval front-end state from corpus text alone — chunking +
+    hashing embeddings, zero model compute (what a lightweight router in
+    front of the decode fleet runs)."""
+    from repro.core.chunking import chunk_document
+    from repro.data.tokenizer import ByteTokenizer
+    from repro.retrieval.embed import HashingEmbedder
+    from repro.retrieval.vectordb import VectorDB
+
+    tok = ByteTokenizer()
+    emb = HashingEmbedder()
+    vdb = VectorDB(emb.dim)
+    chunks = {}
+    for doc_id, text in corpus_docs():
+        for c in chunk_document(doc_id, tok.encode(text), CHUNK_TOKENS):
+            chunks[c.chunk_id] = c
+            vdb.add(c.chunk_id, emb.embed_tokens(c.tokens))
+    retrieve = lambda q, k=2: [cid for cid, _ in
+                               vdb.search(emb.embed_tokens(tok.encode(q)), k)]
+    return chunks, retrieve
+
+
+def _run_materialize_role(args, model, params, mesh) -> None:
+    """Materializer role: ingest the corpus, drain any miss jobs a decode
+    process left in the manifest, persist the queue manifest, exit."""
+    store = FlashKVStore(args.store_dir)
+    queue, qpath = _load_queue(args.store_dir)
+    mat = MaterializerWorker(model, params, store, codec=args.codec,
+                             chunk_tokens=CHUNK_TOKENS, queue=queue,
+                             mesh=mesh)
+    t0 = time.perf_counter()
+    n = 0
+    for doc_id, text in corpus_docs():
+        n += len(mat.ingest_document(doc_id, text))
+    jobs = mat.process_jobs()
+    queue.save(qpath)
+    m = mat.metrics
+    print(f"materialized {n} chunks (+{jobs} queued jobs) in "
+          f"{time.perf_counter() - t0:.1f}s: "
+          f"{m.n_materialized_tokens} tokens, "
+          f"{m.materialize_tokens_per_s:.0f} materialize tok/s, "
+          f"{store.total_bytes() / 2**20:.1f} MiB on flash; "
+          f"manifest -> {qpath}")
+
+
+def _run_decode_role(args, model, params, mesh, batch: int) -> None:
+    """Decode role: no retrieval model-side — a front-end index hands
+    requests off through the queue; the worker serves them over the paged
+    pool from the materializer's artifacts."""
+    store = FlashKVStore(args.store_dir)
+    queue, qpath = _load_queue(args.store_dir)
+    chunks, retrieve = _frontend_index()
+    missing = [cid for cid in chunks if not store.exists(cid)]
+    if missing:
+        raise SystemExit(
+            f"decode role: {len(missing)}/{len(chunks)} chunk artifacts "
+            f"missing from {args.store_dir}; run --role materialize against "
+            f"the same --store-dir first")
+    reader = SimulatedReader(store, args.ssd) if args.ssd else None
+    worker = DecodeWorker(model, params, store, codec=args.codec,
+                          chunk_tokens=CHUNK_TOKENS, top_k=2, reader=reader,
+                          queue=queue, mesh=mesh)
+    qs = [f"where is the {CORPUS_WORDS[i % len(CORPUS_WORDS)]} artifact?"
+          for i in range(args.requests)]
+    for q in qs:
+        cids = retrieve(q)
+        queue.submit_handoff(HandoffRecord(
+            q, cids, args.new_tokens,
+            generations=queue.generations_snapshot(cids)))
+    sched = ContinuousScheduler(worker, max_slots=batch, paged=True,
+                                fused=not args.three_phase)
+    t0 = time.perf_counter()
+    answers, m = sched.run(qs, max_new_tokens=args.new_tokens)
+    wall = time.perf_counter() - t0
+    sched.shutdown()
+    worker.shutdown()
+    queue.save(qpath)
+    print(f"decoded {len(answers)} requests in {wall:.2f}s "
+          f"(role={m.role}, {m.decode_tokens_per_s:.1f} decode tok/s, "
+          f"{m.tokens_per_s:.1f} blended tok/s, "
+          f"p95={m.p95_latency_s:.3f}s, hit_rate={m.chunk_hit_rate:.2f})")
+    print(f"sample answer: {answers[0]!r}")
 
 
 if __name__ == "__main__":

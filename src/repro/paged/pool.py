@@ -382,6 +382,22 @@ class PagedKvPool:
         pages = self._entries.get(chunk_id)
         return pages.refs if pages is not None else 0
 
+    def drop_if_unreferenced(self, chunk_id: str) -> bool:
+        """Eagerly evict a refcount-0 entry (its blocks return to the free
+        list); False if absent or still referenced. The stale-generation
+        path (DESIGN.md §14): a decode worker drops a superseded
+        ``cid@gN`` entry the moment it installs ``cid@gN+1``, instead of
+        letting dead pages squat in the LRU until pressure reclaims them.
+        Rows still decoding against the old generation hold refs, so their
+        pages are never pulled out from under them."""
+        pages = self._entries.get(chunk_id)
+        if pages is None or pages.refs > 0:
+            return False
+        self._lru.pop(chunk_id, None)
+        self._entries.pop(chunk_id)
+        self._free.extend(pages.block_ids)
+        return True
+
     # -- slot arithmetic -----------------------------------------------------------
     def token_slot_ids(self, block_ids: Sequence[int],
                        n_tokens: int) -> np.ndarray:

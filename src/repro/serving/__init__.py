@@ -1,12 +1,15 @@
-from repro.serving.continuous import (ContinuousScheduler, RequestRecord,
-                                      ServeMetrics)
+from repro.serving.continuous import ContinuousScheduler, RequestRecord
 from repro.serving.engine import PhaseTimings, RagEngine, RowRequest
+from repro.serving.metrics import ServeMetrics
 from repro.serving.parity import (dense_row_path, paged_row_path,
                                   teacher_forced_rel)
+from repro.serving.queue import HandoffRecord, MaterializeJob, WorkQueue
+from repro.serving.roles import DecodeWorker, MaterializerWorker
 from repro.serving.sampling import greedy, temperature_sample
 from repro.serving.scheduler import BatchScheduler
 
 __all__ = ["ContinuousScheduler", "RequestRecord", "ServeMetrics",
            "PhaseTimings", "RagEngine", "RowRequest", "greedy",
            "temperature_sample", "BatchScheduler", "dense_row_path",
-           "paged_row_path", "teacher_forced_rel"]
+           "paged_row_path", "teacher_forced_rel", "MaterializerWorker",
+           "DecodeWorker", "WorkQueue", "MaterializeJob", "HandoffRecord"]

@@ -40,6 +40,16 @@ arrive KV-head-sharded from the engine's constructors and the decode step
 traces under the mesh's sharding constraints, while every host-side
 decision here (admission, page tables, accounting) is layout-blind
 (DESIGN.md §12).
+
+The scheduler drives the *decode role* surface only (DESIGN.md §14): a
+``RagEngine`` (composed "both") or a standalone ``DecodeWorker`` both
+satisfy it. Pool residency is checked through ``engine.page_key`` (identity
+on the engine, generation-tagged on a decode worker), and a chunk whose
+flash artifact doesn't exist yet is NOT a decode stall: the request parks
+with a materialize job posted on the work queue
+(``engine.request_materialize``) and its flash loads start only once the
+materializer role publishes the artifact — decode slots keep stepping other
+requests meanwhile.
 """
 
 from __future__ import annotations
@@ -57,6 +67,7 @@ from repro.data.tokenizer import EOS
 from repro.kvstore.async_loader import AsyncKvLoader
 from repro.models.cache import insert_cache_row
 from repro.serving.engine import RagEngine, RowRequest
+from repro.serving.metrics import ServeMetrics  # noqa: F401  (re-export)
 from repro.serving.sampling import greedy
 
 
@@ -80,59 +91,14 @@ class RequestRecord:
     flash_bytes: int = 0                   # flash bytes THIS request caused
     to_load: List[str] = field(default_factory=list)  # paged: chunks to read
     expected: List[str] = field(default_factory=list)  # paged: no load needed
+    pending_mat: List[str] = field(default_factory=list)
+                                           # chunks with no flash artifact
+                                           # yet: materialize job posted,
+                                           # loads deferred until published
 
     @property
     def latency_s(self) -> float:
         return (self.finish_s or 0.0) - self.arrival_s
-
-
-@dataclass
-class ServeMetrics:
-    wall_s: float = 0.0
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    n_requests: int = 0
-    n_new_tokens: int = 0
-    kv_bytes_loaded: int = 0               # bytes composed into rows
-    latencies_s: List[float] = field(default_factory=list)
-    # load-link accounting (fed by the paged pool's dedup stats; the
-    # row-slotted path reads every chunk per request, so there hits == 0)
-    flash_bytes_loaded: int = 0            # bytes actually read from flash
-    flash_bytes_per_request: List[int] = field(default_factory=list)
-    chunk_hits: int = 0                    # chunk already GPU-resident
-    chunk_misses: int = 0                  # chunk had to be read + inserted
-    hbm_kv_bytes_resident: int = 0         # peak KV bytes resident in HBM
-    resident_chunks_peak: int = 0          # paged: peak distinct chunks in
-                                           # the pool (codec-sensitive: one
-                                           # byte budget holds ~2x under int8)
-    pool_shard_bytes: List[int] = field(default_factory=list)
-                                           # paged: per-device bytes of the
-                                           # pool's block tensors (one entry
-                                           # on a single device; under a
-                                           # serving mesh the entries sum to
-                                           # the single-device footprint)
-
-    @property
-    def chunk_hit_rate(self) -> float:
-        total = self.chunk_hits + self.chunk_misses
-        return self.chunk_hits / total if total else 0.0
-
-    @property
-    def tokens_per_s(self) -> float:
-        return self.n_new_tokens / self.wall_s if self.wall_s else 0.0
-
-    def latency_quantile(self, q: float) -> float:
-        if not self.latencies_s:
-            return 0.0
-        return float(np.quantile(np.asarray(self.latencies_s), q))
-
-    @property
-    def p50_latency_s(self) -> float:
-        return self.latency_quantile(0.50)
-
-    @property
-    def p95_latency_s(self) -> float:
-        return self.latency_quantile(0.95)
 
 
 class ContinuousScheduler:
@@ -171,10 +137,18 @@ class ContinuousScheduler:
         # HBM byte budget alternative to pool_blocks: the pool's codec
         # decides how many blocks (and so resident chunks) the budget buys
         self.pool_budget_bytes = pool_budget_bytes
-        self.loader = AsyncKvLoader(engine.reader, n_workers=n_load_workers)
+        # a DecodeWorker brings its own loader (one flash-read dedup domain
+        # per worker, shared across scheduler instances); the composed
+        # engine doesn't, so the scheduler owns one
+        self.loader = getattr(engine, "loader", None)
+        self._owns_loader = self.loader is None
+        if self._owns_loader:
+            self.loader = AsyncKvLoader(engine.reader,
+                                        n_workers=n_load_workers)
 
     def shutdown(self):
-        self.loader.shutdown()
+        if self._owns_loader:
+            self.loader.shutdown()
 
     # -- sizing ----------------------------------------------------------------
     def _buf_for(self, records: Sequence[RequestRecord]) -> int:
@@ -209,7 +183,8 @@ class ContinuousScheduler:
         records = [RequestRecord(q, m, a) for q, m, a
                    in zip(questions, max_new_tokens, arrivals_s)]
         order = {id(r): i for i, r in enumerate(records)}
-        metrics = ServeMetrics(n_requests=n)
+        metrics = ServeMetrics(n_requests=n,
+                               role=getattr(self.engine, "role", "both"))
 
         eng = self.engine
         buf = self._buf_for(records)
@@ -231,39 +206,65 @@ class ContinuousScheduler:
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0
 
+        def start_loads(r: RequestRecord):
+            """Classify chunks + kick the flash reads for one request.
+            Requires every artifact to exist (``artifact_ready``)."""
+            if self.paged:
+                # chunks already GPU-resident, or in flight for an
+                # earlier pending request, are *expected*: no flash read
+                # is issued, and admit acquires the shared pages (or
+                # falls back to a synchronous read in the rare case the
+                # pages were reclaimed while this request queued). Only
+                # admitted rows pin pages, so queue depth never inflates
+                # the pinned working set; K queued requests wanting one
+                # cold chunk still cost exactly one flash read.
+                # Residency is checked under the engine's page key: on a
+                # decode worker a refreshed chunk's resident stale
+                # generation is NOT a hit — the fresh artifact is read
+                for cid in r.req.chunk_ids:
+                    if cid in r.to_load:
+                        # within-request duplicate: this request's own
+                        # load serves both occurrences (marking it
+                        # expected would deadlock ready() on a wanted
+                        # count this request itself holds)
+                        continue
+                    if (pcache.pool.has(eng.page_key(cid))
+                            or wanted.get(cid, 0) > 0):
+                        r.expected.append(cid)
+                    else:
+                        r.to_load.append(cid)
+                        wanted[cid] = wanted.get(cid, 0) + 1
+                r.future = self.loader.load_many(r.to_load)
+            else:
+                # start the flash reads immediately: they overlap with
+                # the decode steps below (per-request load/decode
+                # overlap)
+                r.future = self.loader.load_many(r.req.chunk_ids)
+
         def poll_arrivals():
             while upcoming and upcoming[0].arrival_s <= now():
                 r = upcoming.popleft()
                 r.req = eng.prepare_request(r.question, r.max_new_tokens)
-                if self.paged:
-                    # chunks already GPU-resident, or in flight for an
-                    # earlier pending request, are *expected*: no flash read
-                    # is issued, and admit acquires the shared pages (or
-                    # falls back to a synchronous read in the rare case the
-                    # pages were reclaimed while this request queued). Only
-                    # admitted rows pin pages, so queue depth never inflates
-                    # the pinned working set; K queued requests wanting one
-                    # cold chunk still cost exactly one flash read
-                    for cid in r.req.chunk_ids:
-                        if cid in r.to_load:
-                            # within-request duplicate: this request's own
-                            # load serves both occurrences (marking it
-                            # expected would deadlock ready() on a wanted
-                            # count this request itself holds)
-                            continue
-                        if (pcache.pool.has(cid)
-                                or wanted.get(cid, 0) > 0):
-                            r.expected.append(cid)
-                        else:
-                            r.to_load.append(cid)
-                            wanted[cid] = wanted.get(cid, 0) + 1
-                    r.future = self.loader.load_many(r.to_load)
+                # materialize-on-miss (DESIGN.md §14): a chunk with no
+                # flash artifact parks the request behind a materialize
+                # job instead of crashing the loader (or stalling a decode
+                # slot); its loads start once the artifact is published
+                missing = [c for c in r.req.chunk_ids
+                           if not eng.artifact_ready(c)]
+                if missing:
+                    r.pending_mat = missing
+                    for c in missing:
+                        eng.request_materialize(c)
                 else:
-                    # start the flash reads immediately: they overlap with
-                    # the decode steps below (per-request load/decode
-                    # overlap)
-                    r.future = self.loader.load_many(r.req.chunk_ids)
+                    start_loads(r)
                 pending.append(r)
+
+        def poll_materialized():
+            for r in pending:
+                if r.future is None and all(eng.artifact_ready(c)
+                                            for c in r.pending_mat):
+                    r.pending_mat = []
+                    start_loads(r)
 
         def finish(r: RequestRecord):
             ids = r.tokens
@@ -320,16 +321,19 @@ class ContinuousScheduler:
 
         while upcoming or pending or active:
             poll_arrivals()
+            poll_materialized()
             # backfill free slots with loaded requests (FIFO, skip-ahead only
             # past requests whose loads are still in flight)
             def ready(r: RequestRecord) -> bool:
-                if not r.future.done():
-                    return False
+                if r.future is None or not r.future.done():
+                    return False     # loads not started (materializing) /
+                                     # still in flight
                 # paged: a chunk another pending request is loading isn't
                 # admissible until its pages land (wanted drops to 0 once
                 # the loader admits; if the pages were since reclaimed the
                 # compose fallback reads them synchronously)
-                return all(pcache.pool.has(c) or wanted.get(c, 0) == 0
+                return all(pcache.pool.has(eng.page_key(c))
+                           or wanted.get(c, 0) == 0
                            for c in r.expected)
             free = [s for s in range(self.max_slots) if s not in active]
             for slot in free:
@@ -339,12 +343,18 @@ class ContinuousScheduler:
                 pending.remove(ready_r)
                 admit(ready_r, slot)
             if not active:
-                if pending:
+                in_flight = [r.future for r in pending
+                             if r.future is not None]
+                if in_flight:
                     # nothing decoding: wait for the FIRST load to land (not
                     # the oldest — a tiny chunk behind a huge one must not
                     # stall), briefly so arrivals keep being polled
-                    cf.wait([r.future for r in pending], timeout=0.01,
+                    cf.wait(in_flight, timeout=0.01,
                             return_when=cf.FIRST_COMPLETED)
+                elif pending:
+                    # every pending request is parked on materialization:
+                    # yield so the materializer role gets cycles
+                    time.sleep(0.002)
                 elif upcoming:
                     time.sleep(max(0.0, min(
                         upcoming[0].arrival_s - now(), 0.01)))

@@ -1,4 +1,4 @@
-"""The MatKV RAG serving engine (paper Fig. 3b).
+"""The MatKV RAG serving engine (paper Fig. 3b) — the composed "both" role.
 
 Modes:
   vanilla    — full KV recomputation: one prefill over [docs | query], decode.
@@ -10,13 +10,22 @@ Modes:
 Per-request phase timings (load / prefill / decode) mirror the paper's §V-A
 latency breakdown. SSM/hybrid archs serve via prefix-state reuse + chained
 recompute of later chunks (DESIGN.md §4).
+
+Since the role split (DESIGN.md §14) the engine is a composition over
+``serving/roles.py``: the decode-side surface (compose/prefill/step, row
+and paged) is inherited from ``_DecodePlane`` — the same code a standalone
+``DecodeWorker`` runs — and the write path is a ``MaterializerWorker``
+sharing an in-process ``WorkQueue`` with it. Retrieval, the single-request
+``answer`` path, and the recurrent-family compose logic live here. With
+identity page keys and ingest-time materialization, the composition is
+bit-identical to the pre-split monolith on every path.
 """
 
 from __future__ import annotations
 
 import time
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -25,16 +34,18 @@ import numpy as np
 
 from repro.core.blend import blend
 from repro.core.chunking import Chunk, chunk_document
-from repro.core.compose import (compose_attn_cache, compose_attn_cache_rows,
-                                compose_hybrid_cache, compose_ssm_cache)
-from repro.core.materialize import (Materializer, load_artifact,
-                                    load_artifact_encoded)
-from repro.core.quantize import get_codec, quantize_kv
-from repro.data.tokenizer import EOS, SEP, ByteTokenizer
-from repro.models.cache import (AttnCache, RowAttnCache, init_attn_cache,
-                                init_hybrid_cache, init_ssm_cache, write_kv)
+from repro.core.compose import (compose_attn_cache, compose_hybrid_cache,
+                                compose_ssm_cache)
+from repro.core.materialize import load_artifact
+from repro.core.quantize import get_codec
+from repro.data.tokenizer import EOS, ByteTokenizer
+from repro.models.cache import (AttnCache, init_attn_cache, init_hybrid_cache,
+                                init_ssm_cache, write_kv)
 from repro.retrieval.embed import HashingEmbedder
 from repro.retrieval.vectordb import VectorDB
+from repro.serving.queue import WorkQueue
+from repro.serving.roles import (MaterializerWorker, RowRequest,  # noqa: F401
+                                 _DecodePlane)
 from repro.serving.sampling import greedy
 
 
@@ -52,20 +63,9 @@ class PhaseTimings:
         return self.load_s + self.prefill_s + self.decode_s
 
 
-@dataclass(eq=False)
-class RowRequest:
-    """One serving request in row-level form: retrieval done, KV artifacts not
-    necessarily loaded yet (a prefetcher fills ``payloads`` asynchronously).
-    ``chunk_ids == []`` is a legal query-only request (empty retrieval).
-    Identity equality: lifecycle object holding an ndarray prompt."""
-    question: str
-    max_new_tokens: int
-    chunk_ids: List[str]
-    prompt: np.ndarray
-    payloads: Optional[List[bytes]] = None
+class RagEngine(_DecodePlane):
+    role = "both"
 
-
-class RagEngine:
     def __init__(self, model, params, store, mode: str = "matkv",
                  chunk_tokens: int = 256, top_k: int = 2,
                  rerotate: bool = False, blend_ratio: float = 0.18,
@@ -106,32 +106,19 @@ class RagEngine:
         self.tok = ByteTokenizer()
         self.embedder = HashingEmbedder()
         self.vdb = VectorDB(self.embedder.dim)
-        self.materializer = Materializer(model, self.params, store,
-                                         codec=self.codec)
+        # the write path is the materializer role, sharing this engine's
+        # placed params and an in-process work queue (generation tags flow
+        # through it even in the composed engine — harmless extra meta)
+        self.queue = WorkQueue()
+        self.mat = MaterializerWorker(model, self.params, store,
+                                      codec=self.codec,
+                                      chunk_tokens=chunk_tokens,
+                                      queue=self.queue, mesh=mesh,
+                                      rules=self.rules, place_params=False)
+        self.materializer = self.mat.materializer   # compat alias
         self._chunks: Dict[str, Chunk] = {}
-        self._decode_fn = jax.jit(
-            self._meshed(lambda p, c, t: self.model.decode_step(p, c, t)))
-        self._subprefill_fns = {}
         self._vanilla_fns = {}
-        # row-slotted step (continuous batching); jit retraces per shape
-        self._row_step_fn = jax.jit(
-            self._meshed(lambda p, c, t: self.model.decode_step_rows(p, c, t)))
-        # fused paged steps, keyed by (table width, codec, pool geometry)
-        self._fused_step_fns = {}
-
-    def _meshed(self, fn):
-        """Wrap a model fn so jit TRACING runs under the engine's mesh
-        context — the ``shard()`` constraints in the model code read the
-        active (mesh, rules) pair at trace time. Identity without a mesh."""
-        if self.mesh is None:
-            return fn
-        from repro.dist.sharding import mesh_context
-        mesh, rules = self.mesh, self.rules
-
-        def wrapped(*args):
-            with mesh_context(mesh, rules):
-                return fn(*args)
-        return wrapped
+        self._init_decode_plane()
 
     # -- ingest ------------------------------------------------------------------
     def ingest(self, doc_id: str, text: str) -> List[str]:
@@ -141,7 +128,7 @@ class RagEngine:
             self._chunks[c.chunk_id] = c
             self.vdb.add(c.chunk_id, self.embedder.embed_tokens(c.tokens))
             if self.mode != "vanilla" and not self.store.exists(c.chunk_id):
-                self.materializer.ingest(c)
+                self.mat.materialize(c)
             ids.append(c.chunk_id)
         return ids
 
@@ -153,33 +140,6 @@ class RagEngine:
     def retrieve(self, question: str) -> List[str]:
         q = self.embedder.embed_tokens(self.tok.encode(question))
         return [cid for cid, _ in self.vdb.search(q, self.top_k)]
-
-    # -- helpers --------------------------------------------------------------------
-    def _pad_chunk(self, tokens: np.ndarray) -> np.ndarray:
-        out = np.zeros((self.chunk_tokens,), np.int32)
-        out[:len(tokens)] = tokens
-        return out
-
-    def _prompt(self, question: str) -> np.ndarray:
-        return np.concatenate([[SEP], self.tok.encode(" " + question + " "),
-                               [SEP]]).astype(np.int32)
-
-    def _subprefill(self, cache, query: jnp.ndarray):
-        key = (query.shape, type(cache).__name__)
-        if key not in self._subprefill_fns:
-            self._subprefill_fns[key] = jax.jit(
-                self._meshed(lambda p, c, t: self.model.decode_step(p, c, t)))
-        return self._subprefill_fns[key](self.params, cache, query)
-
-    def _decode_loop(self, cache, first_token, max_new_tokens: int
-                     ) -> Tuple[List[np.ndarray], object]:
-        toks = [np.asarray(first_token)]
-        cur = first_token
-        for _ in range(max_new_tokens - 1):
-            logits, cache = self._decode_fn(self.params, cache, cur[:, None])
-            cur = greedy(logits[:, -1])
-            toks.append(np.asarray(cur))
-        return toks, cache
 
     # -- load + compose (the MatKV read path) ---------------------------------------
     def load_and_compose(self, chunk_ids: Sequence[str], buf_size: int,
@@ -236,319 +196,6 @@ class RagEngine:
         else:
             raise ValueError(f"engine: unsupported family {fam}")
         return cache, n_doc, t_bytes
-
-    # -- row-level request API (shared by both schedulers) -----------------------------
-    #
-    # The lifecycle a scheduler drives:
-    #   req  = engine.prepare_request(q, max_new)        # retrieval only
-    #   ...payloads prefetched into req.payloads (AsyncKvLoader) or fetched
-    #      synchronously via engine.fetch_payloads(req)...
-    #   row, n_doc, nbytes = engine.compose_row(req, buf_size)
-    #   first, row = engine.prefill_row(row, req.prompt)  # admit
-    #   logits, cache = engine.step_rows(cache, tokens)   # batched decode
-    #
-    # compose/prefill run at batch=1 (ragged prompt lengths); step_rows runs
-    # the whole slot table in one fixed-shape call.
-
-    def prepare_request(self, question: str, max_new_tokens: int = 20,
-                        chunk_ids: Optional[Sequence[str]] = None
-                        ) -> RowRequest:
-        """Retrieve for one request; no KV bytes are read yet."""
-        cids = list(self.retrieve(question) if chunk_ids is None
-                    else chunk_ids)
-        if not cids:
-            warnings.warn(f"retrieval returned no chunks for {question!r}; "
-                          f"serving query-only")
-        return RowRequest(question=question, max_new_tokens=max_new_tokens,
-                          chunk_ids=cids, prompt=self._prompt(question))
-
-    def fetch_payloads(self, req: RowRequest) -> int:
-        """Synchronously read the request's KV payloads (the non-overlapped
-        path); returns bytes read. No-op if a prefetcher already filled them."""
-        if req.payloads is None:
-            req.payloads = [self.reader.get(c) for c in req.chunk_ids]
-        return sum(len(p) for p in req.payloads)
-
-    def compose_row(self, req: RowRequest, buf_size: int
-                    ) -> Tuple[RowAttnCache, int, int]:
-        """Deserialize + compose one request's artifacts into a batch=1
-        row-slotted cache. Returns (row_cache, n_doc_tokens, bytes_loaded).
-        Empty retrieval composes an empty row (query-only)."""
-        if self.cfg.family not in ("dense", "vlm", "moe"):
-            raise ValueError("row-slotted serving requires an attention-KV "
-                             f"family, got {self.cfg.family}")
-        nbytes = self.fetch_payloads(req)
-        arts = [load_artifact(self.cfg, p)[0] for p in req.payloads]
-        cache = compose_attn_cache_rows(self.cfg, [arts], buf_size,
-                                        rerotate=self.rerotate)
-        return cache, int(cache.length[0]), nbytes
-
-    def prefill_row(self, row_cache: RowAttnCache, prompt: np.ndarray
-                    ) -> Tuple[jnp.ndarray, RowAttnCache]:
-        """Sub-prefill one row's prompt over its composed prefix (batch=1).
-        Returns (first_token (1,), updated row_cache)."""
-        logits, row_cache = self._row_step_fn(
-            self.params, row_cache, jnp.asarray(prompt)[None])
-        return greedy(logits[:, -1]), row_cache
-
-    def step_rows(self, cache: RowAttnCache, tokens: jnp.ndarray
-                  ) -> Tuple[jnp.ndarray, RowAttnCache]:
-        """One batched decode step over the whole slot table: tokens (B,Sq)."""
-        return self._row_step_fn(self.params, cache, tokens)
-
-    def init_row_cache(self, batch: int, buf_size: int) -> RowAttnCache:
-        """Empty row-slotted cache, placed for this engine's mesh: the KV
-        buffers' head axis lands on the model axis (SERVING_RULES), the
-        bookkeeping replicates. Without a mesh this is exactly
-        ``model.init_row_cache`` — schedulers and parity paths go through
-        here so both layouts share one entry point."""
-        cache = self.model.init_row_cache(batch, buf_size)
-        if self.mesh is None:
-            return cache
-        from repro.dist.partition import cache_specs, to_shardings
-        return jax.device_put(
-            cache, to_shardings(self.mesh,
-                                cache_specs(self.mesh, cache, self.rules)))
-
-    # -- paged row-level API (page-table serving over a shared block pool) --------------
-    #
-    # Paged counterparts of compose_row / prefill_row / step_rows. KV bytes
-    # live once in a ``PagedKvPool``: rows that retrieved the same chunk
-    # share its pages (ref-counted); only the prompt/decode tail is private.
-    # Every step gathers the dense RowAttnCache *view* through the page
-    # table and runs the SAME jitted ``_row_step_fn`` as the row-slotted
-    # path, so per-row answers are bit-identical by construction
-    # (repro.paged.runtime docstring).
-
-    def init_paged_cache(self, max_slots: int, buf_size: int,
-                         block_size: int = 64,
-                         n_blocks: Optional[int] = None,
-                         pool_budget_bytes: Optional[int] = None):
-        """Build the pool + page-table cache for ``max_slots`` decode slots.
-
-        The pool stores blocks in the engine codec's layout (int8 pages +
-        f16 scales under ``Int8Codec``); ``pool_budget_bytes`` sizes
-        ``n_blocks`` from an HBM byte budget codec-aware, so one budget
-        holds ~2x the chunks under int8 — the equal-budget comparison the
-        quantized-residency benchmark runs.
-
-        Paged mode requires the paper-faithful restarted-positions mode:
-        shared chunk pages must be position-independent, and ``rerotate``
-        bakes the row-specific global offset into K at compose time.
-
-        Under a serving mesh the pool's block tensors come back KV-head-
-        sharded (DESIGN.md §12); block ids and all pool accounting stay
-        global, so schedulers drive the sharded pool unchanged.
-        """
-        from repro.paged import PagedKvPool, PagedRowCache
-        if self.cfg.family not in ("dense", "vlm", "moe"):
-            raise ValueError("paged serving requires an attention-KV family, "
-                             f"got {self.cfg.family}")
-        if self.rerotate:
-            raise ValueError("paged serving requires rerotate=False: "
-                             "re-rotated keys are position-dependent and "
-                             "cannot be shared across rows")
-        if n_blocks is None and pool_budget_bytes is not None:
-            n_blocks = PagedKvPool.blocks_for_budget(
-                self.cfg, pool_budget_bytes, block_size, self.codec)
-        if n_blocks is None:
-            per_row = -(-buf_size // block_size)
-            # scratch + private tail + worst-case unshared chunk pages
-            chunk_blocks = -(-self.chunk_tokens // block_size)
-            n_blocks = max_slots * (1 + per_row
-                                    + self.top_k * chunk_blocks) + 4
-        pool = PagedKvPool(self.cfg, n_blocks=n_blocks,
-                           block_size=block_size, codec=self.codec,
-                           mesh=self.mesh, rules=self.rules)
-        return PagedRowCache(pool, max_slots, buf_size)
-
-    def compose_row_paged(self, req: RowRequest, pcache, slot: int,
-                          payloads: Optional[Dict[str, bytes]] = None
-                          ) -> Tuple[int, int, int, int, int]:
-        """Install one request's page table into ``slot``: acquire (or
-        insert) each chunk's shared pages, allocate the private tail, and
-        build the gather row. ``payloads`` maps chunk_id -> serialized
-        artifact for chunks the caller prefetched; chunks in neither the
-        pool nor ``payloads`` are read synchronously (the fallback for
-        pages reclaimed while the request queued). Returns (n_doc_tokens,
-        flash_bytes_loaded, composed_bytes, chunk_hits, chunk_misses) —
-        composed_bytes counts every chunk serving the row (hits included),
-        comparable to ``compose_row``'s bytes; flash_bytes only the
-        misses actually read. Artifacts flow into the pool in *encoded*
-        form (``load_artifact_encoded``): an int8 artifact lands in int8
-        pages without ever widening on the host."""
-        from repro.paged import RowPages
-        pool = pcache.pool
-        payloads = payloads or {}
-        handle = RowPages()
-        nbytes = composed = hits = misses = 0
-        gather = pcache.scratch_row(slot)
-        pos = 0
-        for cid in req.chunk_ids:
-            if pool.acquire(cid) is not None:
-                hits += 1
-            else:
-                payload = payloads.get(cid)
-                if payload is None:
-                    payload = self.reader.get(cid)
-                enc, _ = load_artifact_encoded(self.cfg, payload)
-                pool.insert(cid, encoded=enc, nbytes=len(payload))
-                nbytes += len(payload)
-                misses += 1
-            composed += pool.chunk_payload_bytes(cid)
-            handle.chunk_refs.append(cid)
-            slots = pool.chunk_slot_ids(cid)
-            if pos + len(slots) > pcache.buf_size:
-                raise ValueError(
-                    f"compose_row_paged: composed prefix exceeds buf_size "
-                    f"{pcache.buf_size} (the row-slotted path would wrap "
-                    f"here too — size the buffer for the worst-case row)")
-            gather[pos:pos + len(slots)] = slots
-            pos += len(slots)
-        handle.n_doc = pos
-        need = len(req.prompt) + req.max_new_tokens
-        if pos + need > pcache.buf_size:
-            # the dense path would wrap into the row's own buffer here; a
-            # paged row wrapping would scatter decode tokens into SHARED
-            # chunk pages and corrupt co-resident requests — hard error
-            raise ValueError(
-                f"compose_row_paged: prefix {pos} + prompt/decode {need} "
-                f"exceeds buf_size {pcache.buf_size}; size the buffer for "
-                f"the worst-case row")
-        tail = min(need + 4, pcache.buf_size - pos)
-        handle.private_blocks = pool.alloc_private(max(1, tail))
-        tail_slots = pool.token_slot_ids(handle.private_blocks,
-                                         min(len(handle.private_blocks)
-                                             * pool.block_size,
-                                             pcache.buf_size - pos))
-        handle.tail_slots = tail_slots
-        gather[pos:pos + len(tail_slots)] = tail_slots
-        pcache.install_row(slot, handle, gather)
-        # position state mirrors compose_attn_cache_rows exactly: composed
-        # prefix at slots [0, n_doc), -1 padding, per-row length
-        spos = np.full((pcache.buf_size,), -1, np.int32)
-        spos[:pos] = np.arange(pos, dtype=np.int32)
-        pcache.set_row_state(slot, jnp.asarray(spos),
-                             jnp.asarray(pos, jnp.int32))
-        return pos, nbytes, composed, hits, misses
-
-    def prefill_row_paged(self, pcache, slot: int, prompt: np.ndarray
-                          ) -> jnp.ndarray:
-        """Sub-prefill one admitted slot's prompt over its paged prefix
-        (batch=1): gather the dense row view, run the shared row-step fn,
-        scatter the prompt's new KV into the slot's private tail (codec
-        dispatch lives in the runtime). Returns the first token (1,)."""
-        row = pcache.dense_row_view(slot)
-        n_doc = pcache.rows[slot].n_doc
-        first, row = self.prefill_row(row, prompt)
-        sq = len(prompt)
-        # host-side tail map from compose time — no device round-trip
-        pcache.scatter_range(pcache.rows[slot].tail_slots[:sq],
-                             row.k, row.v, n_doc)
-        pcache.set_row_state(slot, row.slot_pos[0], row.length[0])
-        return first
-
-    def fused_step_supported(self, tokens: jnp.ndarray) -> bool:
-        """Whether the fused single-launch kernel can serve this step.
-        Unsupported shapes (multi-token steps, sliding-window configs, a
-        mesh the KV-head count doesn't divide) fall back to the three-phase
-        pipeline — same answers, three HBM round trips."""
-        if tokens.shape[1] != 1:
-            return False
-        if self.cfg.sliding_window is not None:
-            return False
-        if (self.mesh is not None and "model" in self.mesh.shape
-                and self.cfg.num_kv_heads % self.mesh.shape["model"] != 0):
-            return False
-        return True
-
-    def _fused_step_fn(self, pcache, n_max: int):
-        """Jitted fused paged step for one (table width, codec, geometry)
-        key: run ``decode_step_rows_fused`` (one kernel launch per layer),
-        then advance slot_pos/length and persist the new token through the
-        gather table — bit-identical bookkeeping to
-        ``scatter_decode_token(_quant)``, but at token granularity instead
-        of a full dense-buffer scatter."""
-        from repro.kernels.ops import _interpret_default
-        quantized = pcache.quantized
-        buf_size = pcache.buf_size
-        block_size = pcache.pool.block_size
-        key = (n_max, quantized, buf_size, block_size)
-        if key in self._fused_step_fns:
-            return self._fused_step_fns[key]
-        interpret = _interpret_default()
-        mesh = self.mesh
-
-        def fn(params, pool_k, pool_v, k_scale, v_scale, length, slot_pos,
-               gather_idx, tokens, tables, lens, totals):
-            logits, k_new, v_new = self.model.decode_step_rows_fused(
-                params, pool_k, pool_v, k_scale, v_scale, length, tokens,
-                tables, lens, totals, buf_size=buf_size,
-                block_size=block_size, interpret=interpret, mesh=mesh)
-            order_pos = length[:, None].astype(jnp.int32)
-            start = (length % buf_size).astype(jnp.int32)
-            spos = jax.vmap(
-                lambda sp, op, st: jax.lax.dynamic_update_slice(
-                    sp, op.astype(jnp.int32), (st,)))(
-                slot_pos, order_pos, start)
-            phys = jnp.take_along_axis(gather_idx, start[:, None],
-                                       axis=1)[:, 0]
-            if quantized:
-                qk, sk = quantize_kv(k_new)
-                qv, sv = quantize_kv(v_new)
-                pool_k = pool_k.at[:, phys].set(qk)
-                pool_v = pool_v.at[:, phys].set(qv)
-                k_scale = k_scale.at[:, phys].set(
-                    sk[..., 0].astype(k_scale.dtype))
-                v_scale = v_scale.at[:, phys].set(
-                    sv[..., 0].astype(v_scale.dtype))
-            else:
-                pool_k = pool_k.at[:, phys].set(k_new.astype(pool_k.dtype))
-                pool_v = pool_v.at[:, phys].set(v_new.astype(pool_v.dtype))
-            return (logits, pool_k, pool_v, k_scale, v_scale, spos,
-                    length + 1)
-
-        donate = (1, 2, 3, 4) if quantized else (1, 2)
-        self._fused_step_fns[key] = jax.jit(self._meshed(fn),
-                                            donate_argnums=donate)
-        return self._fused_step_fns[key]
-
-    def step_rows_paged(self, pcache, tokens: jnp.ndarray,
-                        fused: Optional[bool] = None) -> jnp.ndarray:
-        """One batched decode step over the whole paged slot table.
-
-        ``fused=True`` serves the step as ONE Pallas launch per layer
-        (``kernels.paged_decode_fused``): KV pages stream from HBM exactly
-        once, straight through the block table, and the only write-back is
-        the new token itself. Steps the kernel can't express (see
-        ``fused_step_supported``) silently fall back. ``fused=None/False``
-        keeps the three-phase gather -> (shared) step_rows -> scatter
-        pipeline — the parity oracle and the stable low-level API default.
-        Returns logits (B,Sq,V)."""
-        if fused and self.fused_step_supported(tokens):
-            # host-built block tables; raises on a shared-page append hazard
-            tables, lens, totals, n_max = pcache.step_tables()
-            fn = self._fused_step_fn(pcache, n_max)
-            pool = pcache.pool
-            (logits, pool.k, pool.v, pool.k_scale, pool.v_scale,
-             pcache.slot_pos, pcache.length) = fn(
-                self.params, pool.k, pool.v, pool.k_scale, pool.v_scale,
-                pcache.length, pcache.slot_pos, pcache.gather_idx, tokens,
-                tables, lens, totals)
-            pcache.note_step()
-            return logits
-        cache = pcache.dense_view()
-        prev_len = cache.length
-        logits, new_cache = self.step_rows(cache, tokens)
-        pcache.scatter_step(prev_len, new_cache.k, new_cache.v)
-        pcache.slot_pos = new_cache.slot_pos
-        pcache.length = new_cache.length
-        pcache.note_step()
-        return logits
-
-    def release_row_paged(self, pcache, slot: int) -> None:
-        """Retire a slot: decref shared pages, free the private tail."""
-        pcache.release_row(slot)
 
     # -- request paths -----------------------------------------------------------------
     def answer(self, question: str, max_new_tokens: int = 20,

@@ -1,0 +1,96 @@
+"""Serving metrics, split per role (DESIGN.md §14).
+
+``ServeMetrics`` lives here (not in ``continuous.py``) so the role facades
+in ``serving/roles.py`` can account against it without importing the
+scheduler. A disaggregated deployment runs materialization and decode on
+different hardware with different clocks, so the blended
+``tokens_per_s = n_new_tokens / wall_s`` is misleading there — use the
+per-role rates:
+
+* ``materialize_tokens_per_s`` — chunk tokens whose KV was computed and
+  durably written to flash, over the time spent doing only that.
+* ``decode_tokens_per_s`` — new tokens emitted over the time spent inside
+  decode steps (the number a weak decode mesh must hold while the
+  materializer fleet scales).
+
+``tokens_per_s`` stays for the composed single-process path ("both" role),
+where one wall clock is the honest end-to-end number.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+
+@dataclass
+class ServeMetrics:
+    role: str = "both"                     # "materialize" | "decode" | "both"
+    wall_s: float = 0.0
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    n_requests: int = 0
+    n_new_tokens: int = 0
+    kv_bytes_loaded: int = 0               # bytes composed into rows
+    latencies_s: List[float] = field(default_factory=list)
+    # load-link accounting (fed by the paged pool's dedup stats; the
+    # row-slotted path reads every chunk per request, so there hits == 0)
+    flash_bytes_loaded: int = 0            # bytes actually read from flash
+    flash_bytes_per_request: List[int] = field(default_factory=list)
+    chunk_hits: int = 0                    # chunk already GPU-resident
+    chunk_misses: int = 0                  # chunk had to be read + inserted
+    hbm_kv_bytes_resident: int = 0         # peak KV bytes resident in HBM
+    resident_chunks_peak: int = 0          # paged: peak distinct chunks in
+                                           # the pool (codec-sensitive: one
+                                           # byte budget holds ~2x under int8)
+    pool_shard_bytes: List[int] = field(default_factory=list)
+                                           # paged: per-device bytes of the
+                                           # pool's block tensors (one entry
+                                           # on a single device; under a
+                                           # serving mesh the entries sum to
+                                           # the single-device footprint)
+    # materializer-role accounting
+    materialize_s: float = 0.0             # time inside materialize calls
+    n_materialized_tokens: int = 0         # chunk tokens written to flash
+    n_materialize_jobs: int = 0            # jobs processed off the queue
+    flash_bytes_written: int = 0           # artifact bytes put to flash
+
+    @property
+    def chunk_hit_rate(self) -> float:
+        total = self.chunk_hits + self.chunk_misses
+        return self.chunk_hits / total if total else 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Blended end-to-end rate over one wall clock. Honest only for the
+        composed "both" role; disaggregated runs report the per-role rates
+        below instead."""
+        return self.n_new_tokens / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def materialize_tokens_per_s(self) -> float:
+        """Chunk tokens durably materialized per second of materializer
+        work — the prefill fleet's scaling axis."""
+        return (self.n_materialized_tokens / self.materialize_s
+                if self.materialize_s else 0.0)
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        """New tokens per second of decode-step time — the rate a weak
+        decode mesh must hold under a scaling materializer fleet."""
+        return self.n_new_tokens / self.decode_s if self.decode_s else 0.0
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        return float(np.quantile(np.asarray(self.latencies_s), q))
+
+    @property
+    def p50_latency_s(self) -> float:
+        return self.latency_quantile(0.50)
+
+    @property
+    def p95_latency_s(self) -> float:
+        return self.latency_quantile(0.95)

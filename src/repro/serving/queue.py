@@ -1,0 +1,191 @@
+"""Cross-role work queue for disaggregated serving (DESIGN.md §14).
+
+The materializer and decode roles share exactly two things: the flash
+artifact plane (``FlashKVStore`` / ``TieredStore``) and this queue. Nothing
+else crosses the role boundary — no params, no device buffers, no Python
+objects holding KV. The queue carries three kinds of state:
+
+* **Materialize jobs** (``MaterializeJob``): "chunk X needs an artifact".
+  Posted by ingest pipelines and by the decode role when admission finds a
+  chunk with no flash artifact (materialize-on-miss). Jobs carry only the
+  chunk id + a reason — the materializer resolves token content from its
+  own chunk registry, so the decode role never needs to see tokens.
+* **Request hand-off records** (``HandoffRecord``): a front-end's finished
+  retrieval for one request — question, chunk ids, decode budget, and the
+  artifact generations the retrieval saw. A decode-role worker serves
+  requests from these records instead of running retrieval itself.
+* **Artifact generations**: a monotonically increasing integer per chunk
+  id, bumped by the materializer every time it (re-)writes the chunk's
+  artifact and published here only *after* the durable flash put. The
+  decode role keys its resident pool pages by ``(chunk_id, generation)``
+  (``DecodeWorker.page_key``), so a refreshed artifact — new params, codec
+  migration — can never be served from stale resident pages: the new
+  generation is a pool miss by construction, and old-generation pages age
+  out of the refcount-0 LRU.
+
+In one process the queue is a lock-guarded object shared by both workers
+(``RagEngine`` wires one through its internal facades). Across processes
+the JSON manifest (``save``/``load``) carries the generation table and any
+unconsumed jobs/hand-offs through the filesystem — the launcher's
+``--role materialize`` then ``--role decode`` flow; a deployment would back
+the same interface with a real queue service.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional
+
+
+@dataclass(eq=False)
+class MaterializeJob:
+    """One chunk that needs (re-)materialization. ``reason`` is one of
+    ``"ingest"`` / ``"miss"`` / ``"refresh"`` — accounting only."""
+    chunk_id: str
+    reason: str = "ingest"
+    doc_id: Optional[str] = None
+
+
+@dataclass(eq=False)
+class HandoffRecord:
+    """A front-end's retrieval result handed to the decode role.
+    ``generations`` snapshots the artifact generation the front-end saw per
+    chunk id (decode admits against the *current* table — a refresh landing
+    between hand-off and admit simply serves the fresher artifact)."""
+    question: str
+    chunk_ids: List[str]
+    max_new_tokens: int = 20
+    generations: Dict[str, int] = field(default_factory=dict)
+
+
+class WorkQueue:
+    """Thread-safe in-process work queue + generation registry."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._jobs: "deque[MaterializeJob]" = deque()
+        self._queued_ids: set = set()      # dedup: one open job per chunk
+        self._handoffs: "deque[HandoffRecord]" = deque()
+        self._generations: Dict[str, int] = {}
+
+    # -- materialize jobs -------------------------------------------------------
+    def submit_job(self, job: MaterializeJob) -> bool:
+        """Queue a materialize job; returns False if the chunk already has
+        an open job (K decode workers missing one cold chunk cost one
+        materialization, mirroring the loader's in-flight read dedup)."""
+        with self._lock:
+            if job.chunk_id in self._queued_ids:
+                return False
+            self._queued_ids.add(job.chunk_id)
+            self._jobs.append(job)
+            return True
+
+    def next_job(self) -> Optional[MaterializeJob]:
+        with self._lock:
+            if not self._jobs:
+                return None
+            job = self._jobs.popleft()
+            self._queued_ids.discard(job.chunk_id)
+            return job
+
+    @property
+    def n_jobs(self) -> int:
+        with self._lock:
+            return len(self._jobs)
+
+    # -- request hand-off -------------------------------------------------------
+    def submit_handoff(self, rec: HandoffRecord) -> None:
+        with self._lock:
+            self._handoffs.append(rec)
+
+    def take_handoff(self, question: Optional[str] = None
+                     ) -> Optional[HandoffRecord]:
+        """Pop the oldest hand-off record — or, with ``question``, the
+        oldest record for that question (duplicate questions are distinct
+        requests and resolve FIFO)."""
+        with self._lock:
+            if question is None:
+                return self._handoffs.popleft() if self._handoffs else None
+            for i, rec in enumerate(self._handoffs):
+                if rec.question == question:
+                    del self._handoffs[i]
+                    return rec
+            return None
+
+    @property
+    def n_handoffs(self) -> int:
+        with self._lock:
+            return len(self._handoffs)
+
+    # -- artifact generations ---------------------------------------------------
+    def generation(self, chunk_id: str) -> Optional[int]:
+        """Currently published generation for a chunk, or None if the
+        materializer has never announced an artifact for it."""
+        with self._lock:
+            return self._generations.get(chunk_id)
+
+    def next_generation(self, chunk_id: str) -> int:
+        """The generation a re-materialization should stamp into its
+        artifact meta (current + 1; 0 for a first materialization). The
+        materializer writes the artifact with this tag FIRST and calls
+        ``publish`` after the durable flash put — so a published generation
+        always has its artifact on flash."""
+        with self._lock:
+            cur = self._generations.get(chunk_id)
+            return 0 if cur is None else cur + 1
+
+    def publish(self, chunk_id: str, generation: int) -> None:
+        """Announce a durably-stored artifact generation. Monotonic: a
+        stale publish (concurrent materializers racing) never rolls the
+        table backward."""
+        with self._lock:
+            cur = self._generations.get(chunk_id, -1)
+            if generation > cur:
+                self._generations[chunk_id] = generation
+
+    def generations_snapshot(self, chunk_ids) -> Dict[str, int]:
+        with self._lock:
+            return {c: self._generations[c] for c in chunk_ids
+                    if c in self._generations}
+
+    # -- manifest persistence (the cross-process form) --------------------------
+    def to_manifest(self) -> dict:
+        with self._lock:
+            return {
+                "generations": dict(self._generations),
+                "jobs": [{"chunk_id": j.chunk_id, "reason": j.reason,
+                          "doc_id": j.doc_id} for j in self._jobs],
+                "handoffs": [{"question": h.question,
+                              "chunk_ids": list(h.chunk_ids),
+                              "max_new_tokens": h.max_new_tokens,
+                              "generations": dict(h.generations)}
+                             for h in self._handoffs],
+            }
+
+    @classmethod
+    def from_manifest(cls, manifest: dict) -> "WorkQueue":
+        q = cls()
+        q._generations = {k: int(v)
+                          for k, v in manifest.get("generations", {}).items()}
+        for j in manifest.get("jobs", []):
+            q.submit_job(MaterializeJob(chunk_id=j["chunk_id"],
+                                        reason=j.get("reason", "ingest"),
+                                        doc_id=j.get("doc_id")))
+        for h in manifest.get("handoffs", []):
+            q.submit_handoff(HandoffRecord(
+                question=h["question"], chunk_ids=list(h["chunk_ids"]),
+                max_new_tokens=int(h.get("max_new_tokens", 20)),
+                generations={k: int(v)
+                             for k, v in h.get("generations", {}).items()}))
+        return q
+
+    def save(self, path) -> None:
+        Path(path).write_text(json.dumps(self.to_manifest(), indent=1))
+
+    @classmethod
+    def load(cls, path) -> "WorkQueue":
+        return cls.from_manifest(json.loads(Path(path).read_text()))

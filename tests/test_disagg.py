@@ -1,0 +1,333 @@
+"""Disaggregated materializer/decode roles (DESIGN.md §14).
+
+The flash artifact plane + the ``WorkQueue`` are the roles' SOLE interface;
+the contract tested here: any artifact a ``MaterializerWorker`` writes —
+either codec, mesh or no mesh — must land in a ``DecodeWorker``'s paged
+pool byte-for-byte, refreshed artifacts must never alias stale resident
+pages (generation-tagged page keys), and the composed ``--role both``
+engine must stay bit-identical to the standalone decode role.
+"""
+
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.materialize import load_artifact_encoded
+from repro.kvstore import FlashKVStore
+from repro.launch.mesh import make_serving_mesh
+from repro.models import build_model
+from repro.serving import (ContinuousScheduler, DecodeWorker, HandoffRecord,
+                           MaterializeJob, MaterializerWorker, RagEngine,
+                           WorkQueue)
+
+CORPUS = {
+    "d1": "the amber gate stands in hall nine beyond the long stair. " * 4,
+    "d2": "the cedar door opens with a brass song at dusk hour. " * 4,
+    "d3": "the brass lamp hums beside the tall window all night. " * 4,
+}
+QUESTIONS = ["where is the amber gate?", "where is the cedar door?",
+             "where is the brass lamp?"]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-135m").reduced(vocab_size=300)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    return cfg, model, params
+
+
+def _engine(model, params, store, **kw):
+    kw.setdefault("top_k", 2)
+    eng = RagEngine(model, params, store, mode="matkv", chunk_tokens=48, **kw)
+    for d, text in CORPUS.items():
+        eng.ingest(d, text)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# cross-role artifact contract (the satellite-6 sweep)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", ["bf16", "int8"])
+@pytest.mark.parametrize("with_mesh", [False, True],
+                         ids=["no_mesh", "mesh1"])
+def test_decode_pool_ingests_any_materializer_artifact(setup, codec,
+                                                       with_mesh, tmp_path):
+    """Golden round-trip: a materializer-role artifact (either codec), read
+    back through a decode-role pool (mesh or not), must be byte-for-byte
+    the flash artifact's encoded tensors — no widening, no transcode."""
+    cfg, model, params = setup
+    store = FlashKVStore(tmp_path)
+    queue = WorkQueue()
+    mat = MaterializerWorker(model, params, store, codec=codec,
+                             chunk_tokens=48, queue=queue)
+    cids = mat.ingest_document("d1", CORPUS["d1"])
+    assert all(queue.generation(c) == 0 for c in cids)
+    assert all(store.get_meta(c)["generation"] == 0 for c in cids)
+
+    mesh = make_serving_mesh(1) if with_mesh else None
+    worker = DecodeWorker(model, params, store, codec=codec, chunk_tokens=48,
+                          top_k=len(cids), queue=queue, mesh=mesh)
+    req = worker.prepare_request("where is the amber gate?", 4,
+                                 chunk_ids=cids)
+    pcache = worker.init_paged_cache(1, 384, block_size=16)
+    pool = pcache.pool
+    worker.compose_row_paged(req, pcache, 0)
+    for cid in cids:
+        key = worker.page_key(cid)
+        assert key == f"{cid}@g0"          # generation-tagged pool entries
+        slots = pool.chunk_slot_ids(key)
+        enc, _ = load_artifact_encoded(cfg, store.get(cid))
+        ek, ev = np.asarray(enc.k), np.asarray(enc.v)
+        pk, pv = np.asarray(pool.k[:, slots]), np.asarray(pool.v[:, slots])
+        assert pk.dtype == ek.dtype and pv.dtype == ev.dtype
+        np.testing.assert_array_equal(pk, ek)
+        np.testing.assert_array_equal(pv, ev)
+        if codec == "int8":
+            np.testing.assert_array_equal(
+                np.asarray(pool.k_scale[:, slots]),
+                np.asarray(enc.k_scale)[..., 0].astype(
+                    pool.k_scale.dtype))
+            np.testing.assert_array_equal(
+                np.asarray(pool.v_scale[:, slots]),
+                np.asarray(enc.v_scale)[..., 0].astype(
+                    pool.v_scale.dtype))
+    worker.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# decode role == composed engine, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_decode_worker_answers_match_composed_engine(setup):
+    """A standalone DecodeWorker fed HandoffRecords must answer bit-identically
+    to RagEngine.answer — the role split moves code, never math."""
+    cfg, model, params = setup
+    qs = [QUESTIONS[i % 3] for i in range(4)]      # a duplicate question too
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng = _engine(model, params, store)
+        refs = [eng.answer(q, max_new_tokens=5)[0] for q in qs]
+
+        queue = WorkQueue()
+        worker = DecodeWorker(model, params, store, chunk_tokens=48, top_k=2,
+                              queue=queue)
+        for q in qs:
+            queue.submit_handoff(HandoffRecord(q, eng.retrieve(q), 5))
+        sched = ContinuousScheduler(worker, max_slots=2, paged=True,
+                                    block_size=32)
+        answers, m = sched.run(qs, max_new_tokens=5)
+        sched.shutdown()
+        worker.shutdown()
+        assert answers == refs
+        assert queue.n_handoffs == 0               # all records consumed
+        # per-role metrics: decode work only, ever
+        assert m.role == "decode"
+        assert m.n_new_tokens > 0 and m.decode_tokens_per_s > 0
+        assert m.materialize_s == 0 and m.n_materialized_tokens == 0
+
+
+def test_decode_worker_without_handoff_is_an_error(setup):
+    """No retrieval on the decode role: a request with no HandoffRecord and
+    no explicit chunk_ids is a deployment error, not a silent query-only."""
+    cfg, model, params = setup
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        worker = DecodeWorker(model, params, store, queue=WorkQueue())
+        with pytest.raises(LookupError, match="no HandoffRecord"):
+            worker.prepare_request("who goes there?", 4)
+        # ...and with no queue at all, a miss cannot even be requested
+        bare = DecodeWorker(model, params, store)
+        with pytest.raises(LookupError, match="no work queue"):
+            bare.request_materialize("deadbeef")
+        worker.shutdown()
+        bare.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# artifact generations: refresh never mixes with stale resident pages
+# ---------------------------------------------------------------------------
+
+def test_generation_refresh_is_a_pool_miss_by_construction(setup, tmp_path):
+    """Re-materializing the SAME chunk id (new params — a finetune push)
+    bumps the generation: the decode worker's page key changes, so the
+    fresh artifact can never be served from the stale resident entry, and
+    the superseded refcount-0 entry is dropped eagerly at next compose."""
+    cfg, model, params = setup
+    store = FlashKVStore(tmp_path)
+    queue = WorkQueue()
+    mat = MaterializerWorker(model, params, store, chunk_tokens=48,
+                             queue=queue)
+    cids = mat.ingest_document("d1", CORPUS["d1"])
+    cid = cids[0]
+
+    worker = DecodeWorker(model, params, store, chunk_tokens=48,
+                          top_k=len(cids), queue=queue)
+    pcache = worker.init_paged_cache(2, 384, block_size=16)
+    pool = pcache.pool
+    req = worker.prepare_request("where is the amber gate?", 4,
+                                 chunk_ids=cids)
+    worker.compose_row_paged(req, pcache, 0)
+    key0 = worker.page_key(cid)
+    assert key0 == f"{cid}@g0" and pool.has(key0)
+    old_k = np.asarray(pool.k[:, pool.chunk_slot_ids(key0)])
+
+    # refresh with DIFFERENT params: same chunk id, new artifact bytes
+    params2 = model.init(jax.random.PRNGKey(7))
+    mat2 = MaterializerWorker(model, params2, store, chunk_tokens=48,
+                              queue=queue)
+    for c in cids:
+        mat2.register_chunk(mat.chunk(c))
+    assert mat2.refresh(cid) == 1
+    assert queue.generation(cid) == 1
+    key1 = worker.page_key(cid)
+    assert key1 == f"{cid}@g1"
+    assert pool.has(key0) and not pool.has(key1)   # stale copy still resident
+
+    # release the old row, compose a fresh one: the new generation is a pool
+    # miss (fresh flash read), and the superseded entry is dropped eagerly
+    worker.release_row_paged(pcache, 0)
+    req2 = worker.prepare_request("where is the amber gate?", 4,
+                                  chunk_ids=cids)
+    _, nbytes, _, hits, misses = worker.compose_row_paged(req2, pcache, 1)
+    assert misses >= 1 and nbytes > 0              # g1 came from flash
+    assert pool.has(key1) and not pool.has(key0)   # stale entry evicted
+    new_k = np.asarray(pool.k[:, pool.chunk_slot_ids(key1)])
+    enc, _ = load_artifact_encoded(cfg, store.get(cid))
+    np.testing.assert_array_equal(new_k, np.asarray(enc.k))
+    assert not np.array_equal(new_k, old_k)        # genuinely new bytes
+    assert store.get_meta(cid)["generation"] == 1
+    worker.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# materialize-on-miss through the scheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_materializes_cold_chunk_instead_of_stalling(setup):
+    """Admission finding a chunk with no flash artifact parks THAT request
+    behind a queue job (decode keeps stepping everything else); a
+    materializer draining the queue un-parks it, and answers stay exact."""
+    cfg, model, params = setup
+    qs = list(QUESTIONS)
+    with tempfile.TemporaryDirectory() as d:
+        store = FlashKVStore(d)
+        eng = _engine(model, params, store)
+        refs = [eng.answer(q, max_new_tokens=5)[0] for q in qs]
+
+        queue = WorkQueue()
+        mat = MaterializerWorker(model, params, store, chunk_tokens=48,
+                                 queue=queue)
+        for c in eng._chunks.values():
+            mat.register_chunk(c)
+        worker = DecodeWorker(model, params, store, chunk_tokens=48, top_k=2,
+                              queue=queue)
+        for q in qs:
+            queue.submit_handoff(HandoffRecord(q, eng.retrieve(q), 5))
+        victim = eng.retrieve(qs[0])[0]
+        assert store.delete(victim)
+
+        stop = threading.Event()
+
+        def pump():
+            while not stop.is_set():
+                mat.process_jobs()
+                time.sleep(0.002)
+
+        t = threading.Thread(target=pump, daemon=True)
+        t.start()
+        try:
+            sched = ContinuousScheduler(worker, max_slots=2, paged=True,
+                                        block_size=32)
+            answers, m = sched.run(qs, max_new_tokens=5)
+            sched.shutdown()
+        finally:
+            stop.set()
+            t.join()
+        worker.shutdown()
+        assert answers == refs                     # same params -> same bytes
+        assert mat.metrics.n_materialize_jobs >= 1
+        assert store.exists(victim)
+        assert mat.metrics.flash_bytes_written > 0
+
+
+def test_process_jobs_rejects_unregistered_chunk():
+    """A miss job for a chunk the materializer never ingested is a
+    deployment error — the decode role cannot supply token content."""
+    queue = WorkQueue()
+    cfg = get_config("smollm-135m").reduced(vocab_size=300, num_layers=1)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        mat = MaterializerWorker(model, params, FlashKVStore(d), queue=queue)
+        queue.submit_job(MaterializeJob("not-a-chunk", reason="miss"))
+        with pytest.raises(KeyError, match="no registered chunk"):
+            mat.process_jobs()
+
+
+# ---------------------------------------------------------------------------
+# WorkQueue units
+# ---------------------------------------------------------------------------
+
+def test_work_queue_job_dedup_and_fifo():
+    q = WorkQueue()
+    assert q.submit_job(MaterializeJob("a"))
+    assert not q.submit_job(MaterializeJob("a", reason="miss"))  # dedup
+    assert q.submit_job(MaterializeJob("b"))
+    assert q.n_jobs == 2
+    assert q.next_job().chunk_id == "a"
+    assert q.submit_job(MaterializeJob("a"))       # reopens after drain
+    assert [q.next_job().chunk_id for _ in range(2)] == ["b", "a"]
+    assert q.next_job() is None
+
+
+def test_work_queue_generations_monotonic():
+    q = WorkQueue()
+    assert q.generation("c") is None
+    assert q.next_generation("c") == 0
+    q.publish("c", 0)
+    assert q.generation("c") == 0
+    assert q.next_generation("c") == 1
+    q.publish("c", 1)
+    q.publish("c", 0)                              # stale publish: no-op
+    assert q.generation("c") == 1
+    assert q.generations_snapshot(["c", "missing"]) == {"c": 1}
+
+
+def test_work_queue_handoffs_fifo_per_question():
+    q = WorkQueue()
+    q.submit_handoff(HandoffRecord("q1", ["a"], 3))
+    q.submit_handoff(HandoffRecord("q2", ["b"], 4))
+    q.submit_handoff(HandoffRecord("q1", ["c"], 5))
+    assert q.take_handoff("q1").chunk_ids == ["a"]  # oldest q1 first
+    assert q.take_handoff().question == "q2"        # plain FIFO
+    assert q.take_handoff("q2") is None
+    assert q.take_handoff("q1").chunk_ids == ["c"]
+    assert q.n_handoffs == 0
+
+
+def test_work_queue_manifest_roundtrip(tmp_path):
+    q = WorkQueue()
+    q.publish("c1", 2)
+    q.publish("c2", 0)
+    q.submit_job(MaterializeJob("c3", reason="miss", doc_id="d9"))
+    q.submit_handoff(HandoffRecord("q?", ["c1", "c2"], 7,
+                                   generations={"c1": 2}))
+    path = tmp_path / "queue.json"
+    q.save(path)
+    q2 = WorkQueue.load(path)
+    assert q2.generation("c1") == 2 and q2.generation("c2") == 0
+    job = q2.next_job()
+    assert (job.chunk_id, job.reason, job.doc_id) == ("c3", "miss", "d9")
+    rec = q2.take_handoff("q?")
+    assert rec.chunk_ids == ["c1", "c2"] and rec.max_new_tokens == 7
+    assert rec.generations == {"c1": 2}
+    # round-trip is lossless both ways
+    assert WorkQueue.from_manifest(q.to_manifest()).to_manifest() \
+        == q.to_manifest()

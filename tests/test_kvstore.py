@@ -244,6 +244,41 @@ def test_async_loader_load_many_empty_and_error(tmp_path):
     loader.shutdown()
 
 
+def test_async_loader_shutdown_races_inflight_load_many(tmp_path):
+    """Regression: ``shutdown(cancel=True)`` racing an in-flight
+    ``load_many``. Per-chunk done callbacks used to call ``f.exception()``
+    bare; on a cancelled future that RAISES CancelledError — a BaseException
+    since py3.8 — which escapes ``Future._invoke_callbacks``'s ``except
+    Exception`` and silently aborts every later callback on the future, so
+    the gather never resolved (this test then timed out) and the in-flight
+    dedup registry kept the cancelled entry."""
+    import concurrent.futures as cf
+
+    store = FlashKVStore(tmp_path)
+    store.put("a", b"x" * 64)
+    store.put("b", b"y" * 64)
+    picked_up = threading.Event()
+    release = threading.Event()
+
+    class BlockingReader:
+        def get(self, cid):
+            picked_up.set()
+            assert release.wait(timeout=10)
+            return store.get(cid)
+
+    loader = AsyncKvLoader(BlockingReader(), n_workers=1)
+    fut = loader.load_many(["a", "b"])   # "a" occupies the only worker;
+    assert picked_up.wait(timeout=10)    # "b" sits queued behind it
+    loader.shutdown(wait=False, cancel=True)   # cancels queued "b"
+    release.set()                              # ... then "a" completes
+    with pytest.raises(cf.CancelledError):
+        fut.result(timeout=10)           # hung forever before the fix
+    deadline = time.monotonic() + 5      # callbacks may still be finishing
+    while loader._inflight and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert loader._inflight == {}        # cancelled reads must not leak
+
+
 def test_prefetch_pipeline_releases_consumed_payloads():
     """Completed futures used to stay in ``inflight`` for the whole run,
     pinning every payload in memory. Live payloads must stay bounded by the
