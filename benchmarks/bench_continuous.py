@@ -26,7 +26,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import QUESTIONS, make_engine, row
+from benchmarks.common import QUESTIONS, emit_result, make_engine, row
 from repro.serving import BatchScheduler, ContinuousScheduler
 
 MAX_NEW_CHOICES = (2, 4, 8, 16)
@@ -84,6 +84,9 @@ def run(n_requests: int = 16, batch_size: int = 4, seed: int = 0,
                        f"n={n_requests};slots={batch_size}"))
         out.append(row("continuous/p50_latency_us", m.p50_latency_s * 1e6))
         out.append(row("continuous/p95_latency_us", m.p95_latency_s * 1e6))
+        out.append(row("continuous/p95_ttft_us", m.p95_ttft_s * 1e6))
+        emit_result("continuous_batching", "continuous", metrics=m,
+                    n_requests=n_requests, slots=batch_size)
 
         _serve_fixed(eng, qs, max_new, [0.0] * n_requests,
                      batch_size)                               # warm jit
@@ -100,6 +103,10 @@ def run(n_requests: int = 16, batch_size: int = 4, seed: int = 0,
             "continuous_vs_fixed/speedup",
             m.tokens_per_s / fixed_tps if fixed_tps else 0.0,
             f"p95_ratio={np.quantile(lats, 0.95) / max(m.p95_latency_s, 1e-9):.2f}"))
+        emit_result("continuous_batching", "fixed_overlap",
+                    tokens_per_s=fixed_tps,
+                    p95_latency_s=float(np.quantile(lats, 0.95)),
+                    n_requests=n_requests, batch_size=batch_size)
     return out
 
 

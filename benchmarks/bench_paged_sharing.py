@@ -20,7 +20,7 @@ import tempfile
 
 import numpy as np
 
-from benchmarks.common import DOCS, make_engine, row
+from benchmarks.common import DOCS, emit_result, make_engine, row
 from repro.analysis.roofline import paged_step_kv_bytes_for_pool
 from repro.serving import ContinuousScheduler
 
@@ -85,6 +85,12 @@ def run(n_requests: int = 24, slot_sweep=(4, 8), max_new: int = 4,
                 f"paged/s{slots}/flash_bytes", flash_pg,
                 f"hbm_resident={m_pg.hbm_kv_bytes_resident};"
                 f"hit_rate={m_pg.chunk_hit_rate:.2f}"))
+            emit_result("paged_sharing", f"row_slotted/s{slots}",
+                        metrics=m_row, flash_bytes=int(flash_row),
+                        slots=slots, n_requests=n_requests)
+            emit_result("paged_sharing", f"paged/s{slots}",
+                        metrics=m_pg, flash_bytes=int(flash_pg),
+                        slots=slots, n_requests=n_requests)
             out.append(row(
                 f"paged_vs_row/s{slots}/savings", 0.0,
                 f"flash_ratio={flash_pg / max(flash_row, 1):.3f};"

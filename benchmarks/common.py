@@ -3,14 +3,20 @@
 CPU wall-times here are for *relative* comparisons (MatKV vs Vanilla vs
 CacheBlend phase structure); absolute H100/SSD-scale numbers come from the
 analytical model in repro.core.economics with the paper's constants. Each
-benchmark prints ``name,us_per_call,derived`` CSV rows.
+benchmark prints ``name,us_per_call,derived`` CSV rows, and the serving
+benches additionally append machine-readable records to
+``experiments/serving/results.jsonl`` via :func:`emit_result` — the file
+``analysis/report.py`` renders (DESIGN.md §15).
 """
 
 from __future__ import annotations
 
 import functools
+import json
+import os
 import tempfile
 import time
+from pathlib import Path
 from typing import Dict, List, Tuple
 
 import jax
@@ -20,6 +26,10 @@ from repro.configs import get_config
 from repro.kvstore import FlashKVStore
 from repro.models import build_model
 from repro.serving import RagEngine
+
+# schema for results.jsonl records (bump on breaking field changes; the
+# report skips records whose schema it doesn't know)
+RESULTS_SCHEMA = 1
 
 DOCS = {
     f"doc{i:02d}": (f"the {w} artifact number {i} rests in chamber {i * 7}. "
@@ -65,3 +75,36 @@ def timeit(fn, warmup: int = 1, iters: int = 3) -> float:
 
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def results_path() -> Path:
+    """Where ``emit_result`` appends: ``$REPRO_RESULTS`` if set, else
+    ``experiments/serving/results.jsonl`` under the repo root. Relative
+    overrides resolve against the repo root so subprocess benches (which
+    run with ``cwd=root``) and direct invocations agree on one file."""
+    root = Path(__file__).resolve().parent.parent
+    override = os.environ.get("REPRO_RESULTS")
+    if override:
+        p = Path(override)
+        return p if p.is_absolute() else root / p
+    return root / "experiments" / "serving" / "results.jsonl"
+
+
+def emit_result(suite: str, name: str, metrics=None, **derived) -> dict:
+    """Append one machine-readable benchmark record to results.jsonl.
+
+    ``metrics`` may be a ``ServeMetrics`` (serialized via ``as_dict()``,
+    schema-tagged) or any plain dict; ``derived`` carries scalar
+    suite-specific fields (ratios, tok/s, trace paths). Returns the record
+    so callers can assert on what was written."""
+    rec = {"schema": RESULTS_SCHEMA, "suite": suite, "name": name,
+           "time": time.time()}
+    rec.update(derived)
+    if metrics is not None:
+        rec["metrics"] = (metrics.as_dict() if hasattr(metrics, "as_dict")
+                          else dict(metrics))
+    path = results_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return rec

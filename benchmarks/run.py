@@ -88,8 +88,58 @@ def main() -> None:
             failures += 1
             print(f"suite/{name},0,FAILED", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.smoke:
+        failures += _validate_traces()
     if failures:
         sys.exit(1)
+
+
+def _validate_traces() -> int:
+    """Smoke-mode trace check (DESIGN.md §15): round-trip a threaded tracer
+    through the Chrome exporter + validator, then validate every trace the
+    benches dropped under experiments/traces/. Returns failure count."""
+    import tempfile
+    import threading
+
+    t0 = time.perf_counter()
+    try:
+        from repro.obs import Tracer, load_chrome, validate_chrome
+
+        tr = Tracer(role="smoke")
+        def worker(i):
+            with tr.span("outer", req=i):
+                with tr.span("inner", req=i):
+                    tr.instant("tick", req=i)
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        with tempfile.TemporaryDirectory() as d:
+            path = pathlib.Path(d) / "smoke.trace.json"
+            tr.to_chrome(path)
+            stats = validate_chrome(load_chrome(path))
+        checked, bad = 1, 0
+        for p in sorted((_ROOT / "experiments" / "traces").glob("*.json")):
+            try:
+                s = validate_chrome(load_chrome(p))
+                stats["events"] += s["events"]
+                stats["spans"] += s["spans"]
+                checked += 1
+            except ValueError as e:
+                bad += 1
+                print(f"trace/validate,0,INVALID:{p.name}", flush=True)
+                traceback.print_exc(file=sys.stderr)
+        status = (f"{checked}-traces-{stats['events']}ev-{stats['spans']}sp"
+                  if not bad else f"{bad}-invalid")
+        print(f"trace/validate,{(time.perf_counter() - t0) * 1e6:.0f},"
+              f"{status}", flush=True)
+        return bad
+    except Exception:
+        print("trace/validate,0,FAILED", flush=True)
+        traceback.print_exc(file=sys.stderr)
+        return 1
 
 
 if __name__ == '__main__':

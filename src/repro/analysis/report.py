@@ -1,8 +1,12 @@
 """Render the EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run's
-results.jsonl.
+results.jsonl — and, when the serving benches have appended records to
+``experiments/serving/results.jsonl`` (``benchmarks.common.emit_result``),
+the §Serving tables: per-run throughput/latency/TTFT and the
+predicted-vs-measured per-step KV bytes join (DESIGN.md §15).
 
 Usage:
   PYTHONPATH=src python -m repro.analysis.report [--results PATH] [--mesh 16x16]
+      [--serving PATH]
 """
 
 from __future__ import annotations
@@ -92,11 +96,73 @@ def pick_hillclimb_pairs(rows, mesh: str = "16x16"):
     return worst, coll
 
 
+def load_serving_rows(path: str):
+    """All serving records with a known schema, append order preserved
+    (unlike the dry-run, repeated runs of one bench are distinct rows)."""
+    rows = []
+    p = Path(path)
+    if not p.exists():
+        return rows
+    for line in p.read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if r.get("schema") == 1 and "suite" in r:
+            rows.append(r)
+    return rows
+
+
+def serving_table(rows) -> str:
+    out = ["| suite | run | role | tok/s | decode tok/s | p95 lat | "
+           "p95 TTFT | hit rate |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        m = r.get("metrics")
+        if not m:
+            continue
+        d = m.get("derived", {})
+        out.append(
+            f"| {r['suite']} | {r['name']} | {m.get('role', '?')} | "
+            f"{d.get('tokens_per_s', 0.0):.1f} | "
+            f"{d.get('decode_tokens_per_s', 0.0):.1f} | "
+            f"{_fmt_s(d.get('p95_latency_s', 0.0))} | "
+            f"{_fmt_s(d.get('p95_ttft_s', 0.0))} | "
+            f"{d.get('chunk_hit_rate', 0.0):.2f} |")
+    return "\n".join(out)
+
+
+def serving_report(path: str) -> str:
+    """The §Serving section, or "" when no serving results exist (the
+    default dry-run-only report is then unchanged)."""
+    rows = load_serving_rows(path)
+    if not rows:
+        return ""
+    out = ["## Serving — results.jsonl", serving_table(rows)]
+    pm = [dict(r, name=f"{r['suite']}/{r['name']}") for r in rows
+          if "predicted_step_bytes" in r]
+    if pm:
+        from repro.obs import comparison_table
+        out += ["", "## Predicted vs measured — per-step KV bytes",
+                comparison_table(pm)]
+    return "\n".join(out)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default="experiments/dryrun/results.jsonl")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--serving", default="experiments/serving/results.jsonl",
+                    help="serving-bench results.jsonl (rendered only when "
+                         "present)")
     args = ap.parse_args()
+    serving = serving_report(args.serving)
+    if not Path(args.results).exists():
+        if serving:
+            print(serving)
+            return
+        raise SystemExit(f"error: no results at {args.results} and no "
+                         f"serving results at {args.serving}")
     rows = load_rows(args.results)
     rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
                              if r["shape"] in SHAPE_ORDER else 9,
@@ -113,6 +179,9 @@ def main() -> None:
     print(f"most collective-bound pair: {c['arch']} x {c['shape']} "
           f"(coll {_fmt_s(c['collective_s'])} vs "
           f"max(comp,mem) {_fmt_s(max(c['compute_s'], c['memory_s']))})")
+    if serving:
+        print()
+        print(serving)
 
 
 if __name__ == "__main__":

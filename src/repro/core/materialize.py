@@ -25,6 +25,7 @@ from repro.core.chunking import Chunk
 from repro.core.quantize import (EncodedKV, KvCodec, codec_for_meta,
                                  get_codec)
 from repro.kvstore.serialization import deserialize, serialize
+from repro.obs import NULL_TRACER
 
 # logical tensor names the codec applies to; recurrent states (conv/h) stay
 # at full width — they are O(1) per chunk, not per-token
@@ -41,11 +42,12 @@ def _bucket(n: int) -> int:
 
 class Materializer:
     def __init__(self, model, params, store,
-                 codec: Union[str, KvCodec, None] = None):
+                 codec: Union[str, KvCodec, None] = None, tracer=None):
         self.model = model
         self.params = params
         self.store = store
         self.codec = get_codec(codec)
+        self.tracer = tracer or NULL_TRACER
         self.cfg = model.cfg
         self._jitted = {}
 
@@ -132,18 +134,22 @@ class Materializer:
         ``extra_meta`` entries (e.g. the role split's ``generation`` tag,
         DESIGN.md §14) ride along in the artifact header — readers that
         don't know a key ignore it."""
-        if self.cfg.family in ("ssm", "hybrid"):
-            artifact = self._prefill_exact(chunk.tokens)
-        else:
-            artifact = self.compute_artifact(chunk.tokens)
-        tensors = self.artifact_tensors(artifact)
+        with self.tracer.span("chunk_prefill", chunk=chunk.chunk_id,
+                              tokens=len(chunk)):
+            if self.cfg.family in ("ssm", "hybrid"):
+                artifact = self._prefill_exact(chunk.tokens)
+            else:
+                artifact = self.compute_artifact(chunk.tokens)
+            tensors = self.artifact_tensors(artifact)
         meta = {"arch": self.cfg.name, "family": self.cfg.family,
                 "n_tokens": len(chunk), "chunk_id": chunk.chunk_id,
                 "doc_id": chunk.doc_id, "codec": self.codec.codec_id}
         if extra_meta:
             meta.update(extra_meta)
         payload = serialize(tensors, meta)
-        self.store.put(chunk.chunk_id, payload)
+        with self.tracer.span("durable_put", chunk=chunk.chunk_id,
+                              bytes=len(payload)):
+            self.store.put(chunk.chunk_id, payload)
         return len(payload)
 
     def ingest_corpus(self, chunks: Sequence[Chunk]) -> int:

@@ -33,11 +33,15 @@ class AsyncKvLoader:
     entry), so it never grows into a payload cache; persistent reuse is the
     paged pool's job."""
 
-    def __init__(self, reader, n_workers: int = 4):
+    def __init__(self, reader, n_workers: int = 4, tracer=None):
+        from repro.obs import NULL_TRACER
         self.reader = reader
         self.pool = cf.ThreadPoolExecutor(max_workers=n_workers,
                                           thread_name_prefix="kvload")
         self.stats = LoaderStats()
+        # late-bindable: a scheduler may attach its tracer after construction;
+        # each read closure looks the attribute up at call time
+        self.tracer = tracer or NULL_TRACER
         self._inflight: Dict[str, "cf.Future[bytes]"] = {}
         self._inflight_lock = threading.Lock()
 
@@ -64,7 +68,17 @@ class AsyncKvLoader:
             fut = self._inflight.get(chunk_id)
             if fut is not None:
                 return fut, False           # coalesce onto the pending read
-            fut = self.pool.submit(self.reader.get, chunk_id)
+            if self.tracer.enabled:
+                def _read(cid: str = chunk_id) -> bytes:
+                    # the span runs on the worker thread — in a Chrome trace
+                    # the flash reads show up on their own lanes, visibly
+                    # overlapping the scheduler thread's decode_step spans
+                    with self.tracer.span("flash_read", chunk=cid):
+                        return self.reader.get(cid)
+                fut = self.pool.submit(_read)
+            else:
+                # untraced: submit the bound read itself, no wrapper frame
+                fut = self.pool.submit(self.reader.get, chunk_id)
             self._inflight[chunk_id] = fut
 
         def _forget(f: cf.Future) -> None:

@@ -27,7 +27,13 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --requests 16 --batch 4 [--mode matkv|vanilla|cacheblend] [--overlap] \
       [--ssd 9100pro|raid0|pm9a3|dram] [--mesh N] [--continuous] [--paged] \
-      [--role both|materialize|decode --store-dir DIR]
+      [--role both|materialize|decode --store-dir DIR] [--trace PATH]
+
+``--trace PATH`` exports the run as a Chrome ``trace_event`` JSON
+(chrome://tracing / Perfetto): spans for flash reads, pool inserts,
+compose/prefill, decode steps, and materialize jobs (DESIGN.md §15). Each
+role process writes its own file; ``repro.obs.merge_chrome`` joins them
+into one timeline keyed on chunk/request ids.
 """
 
 from __future__ import annotations
@@ -43,6 +49,7 @@ from repro.configs import ASSIGNED, get_config
 from repro.kvstore import FlashKVStore, SimulatedReader
 from repro.launch.mesh import make_serving_mesh
 from repro.models import build_model
+from repro.obs import Tracer
 from repro.serving import (BatchScheduler, ContinuousScheduler, DecodeWorker,
                            HandoffRecord, MaterializerWorker, RagEngine,
                            WorkQueue)
@@ -101,6 +108,13 @@ def main() -> None:
                          "--store-dir and exits; 'decode' serves requests "
                          "from those artifacts over the paged pool; 'both' "
                          "composes the two in one process (default)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export a Chrome trace_event JSON of the run to "
+                         "PATH (load it in chrome://tracing or Perfetto). "
+                         "Spans cover flash reads, pool inserts, compose, "
+                         "prefill, decode steps, materialize; role runs "
+                         "write one file per role that merge_chrome can "
+                         "join on chunk/request ids (DESIGN.md §15)")
     args = ap.parse_args()
 
     # reject silently-ignored flag combinations up front: running a
@@ -133,6 +147,10 @@ def main() -> None:
         args.paged = True
     if args.paged:
         args.continuous = True
+    if args.trace is not None and args.role == "both" and not args.continuous:
+        ap.error("--trace instruments the continuous/paged schedulers and "
+                 "the role workers; the fixed-batch and sequential paths "
+                 "are untraced — add --continuous/--paged or a --role")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -157,11 +175,15 @@ def main() -> None:
           f"devices={len(jax.devices())}"
           + (f" mesh=model:{args.mesh}" if mesh is not None else ""))
 
+    tracer = Tracer(role=args.role) if args.trace else None
+
     if args.role == "materialize":
-        _run_materialize_role(args, model, params, mesh)
+        _run_materialize_role(args, model, params, mesh, tracer)
+        _export_trace(args, tracer)
         return
     if args.role == "decode":
-        _run_decode_role(args, model, params, mesh, batch)
+        _run_decode_role(args, model, params, mesh, batch, tracer)
+        _export_trace(args, tracer)
         return
 
     root_ctx = (tempfile.TemporaryDirectory() if args.store_dir is None
@@ -173,7 +195,7 @@ def main() -> None:
         eng = RagEngine(model, params, store, mode=args.mode,
                         chunk_tokens=CHUNK_TOKENS, top_k=2, reader=reader,
                         rerotate=args.rerotate, codec=args.codec,
-                        mesh=mesh)
+                        mesh=mesh, tracer=tracer)
         t0 = time.perf_counter()
         n = 0
         for doc_id, text in corpus_docs():
@@ -188,6 +210,8 @@ def main() -> None:
                                         paged=args.paged,
                                         fused=not args.three_phase)
             sched.run(qs[:batch], max_new_tokens=args.new_tokens)     # warm
+            if tracer is not None:
+                tracer.clear()          # trace the timed run, not the warmup
             t0 = time.perf_counter()
             answers, m = sched.run(qs, max_new_tokens=args.new_tokens)
             wall = time.perf_counter() - t0
@@ -203,6 +227,7 @@ def main() -> None:
                       f"MiB over {len(shard_mb)} shard(s) "
                       f"({', '.join(f'{s:.2f}' for s in shard_mb)} MiB each)")
             print(f"sample answer: {answers[0]!r}")
+            _export_trace(args, tracer)
             return
         if args.mode == "matkv":
             sched = BatchScheduler(eng, batch_size=batch,
@@ -232,6 +257,16 @@ def main() -> None:
             root_ctx.cleanup()
 
 
+def _export_trace(args, tracer) -> None:
+    if tracer is None:
+        return
+    path = Path(args.trace)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tracer.to_chrome(path)
+    n = len(tracer.events)
+    print(f"trace: {n} events (role={tracer.role}) -> {path}")
+
+
 def _load_queue(store_dir: str):
     path = Path(store_dir) / "queue.json"
     return (WorkQueue.load(path) if path.exists() else WorkQueue()), path
@@ -259,14 +294,16 @@ def _frontend_index():
     return chunks, retrieve
 
 
-def _run_materialize_role(args, model, params, mesh) -> None:
+def _run_materialize_role(args, model, params, mesh, tracer=None) -> None:
     """Materializer role: ingest the corpus, drain any miss jobs a decode
     process left in the manifest, persist the queue manifest, exit."""
     store = FlashKVStore(args.store_dir)
     queue, qpath = _load_queue(args.store_dir)
+    if tracer is not None:
+        queue.tracer = tracer
     mat = MaterializerWorker(model, params, store, codec=args.codec,
                              chunk_tokens=CHUNK_TOKENS, queue=queue,
-                             mesh=mesh)
+                             mesh=mesh, tracer=tracer)
     t0 = time.perf_counter()
     n = 0
     for doc_id, text in corpus_docs():
@@ -282,12 +319,15 @@ def _run_materialize_role(args, model, params, mesh) -> None:
           f"manifest -> {qpath}")
 
 
-def _run_decode_role(args, model, params, mesh, batch: int) -> None:
+def _run_decode_role(args, model, params, mesh, batch: int,
+                     tracer=None) -> None:
     """Decode role: no retrieval model-side — a front-end index hands
     requests off through the queue; the worker serves them over the paged
     pool from the materializer's artifacts."""
     store = FlashKVStore(args.store_dir)
     queue, qpath = _load_queue(args.store_dir)
+    if tracer is not None:
+        queue.tracer = tracer
     chunks, retrieve = _frontend_index()
     missing = [cid for cid in chunks if not store.exists(cid)]
     if missing:
@@ -298,7 +338,7 @@ def _run_decode_role(args, model, params, mesh, batch: int) -> None:
     reader = SimulatedReader(store, args.ssd) if args.ssd else None
     worker = DecodeWorker(model, params, store, codec=args.codec,
                           chunk_tokens=CHUNK_TOKENS, top_k=2, reader=reader,
-                          queue=queue, mesh=mesh)
+                          queue=queue, mesh=mesh, tracer=tracer)
     qs = [f"where is the {CORPUS_WORDS[i % len(CORPUS_WORDS)]} artifact?"
           for i in range(args.requests)]
     for q in qs:

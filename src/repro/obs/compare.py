@@ -1,0 +1,96 @@
+"""Predicted-vs-measured: join the roofline byte model against live counters.
+
+``analysis/roofline.paged_step_kv_bytes`` predicts the HBM KV traffic of one
+paged decode step from shapes alone.  The instrumented scheduler now counts
+the *measured* side — for the fused kernel, bytes derived from the block
+tables actually staged each step (``PagedRowCache.step_tables`` records how
+many live blocks it laid out); for the three-phase fallback, the dense
+round-trip model evaluated at the step's true geometry.  This module joins
+the two into a ratio the benches assert (fused decode must land within
+1.25x of the model) and a table ``analysis/report.py`` renders.
+
+The prediction is *per-row at the workload's expected row length*, scaled by
+the measured average row occupancy.  Occupancy is an observable of the
+arrival process (how full the batch ran), not of byte accounting, so using
+the measured value does not make the comparison circular: the model's job
+is to predict bytes *given* a step shape, and the block tables are free to
+disagree with it (e.g. if stale rows or partial pages were accounted
+wrongly, the ratio drifts out of bounds).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.analysis.roofline import paged_step_kv_bytes_for_pool
+
+from .registry import MetricsRegistry
+
+
+def fused_step_kv_bytes_measured(pool, blocks_live: int,
+                                 rows_live: int) -> int:
+    """Measured-side fused-step bytes from the block tables actually staged:
+    each live block streams once at storage width, each live row writes one
+    token back — ``2 * n_layers * (...)`` for K+V, same widths the model
+    reads off the pool."""
+    import jax.numpy as jnp
+    scale_b = (0 if pool.k_scale is None
+               else jnp.dtype(pool.k_scale.dtype).itemsize)
+    vec_store = pool.cfg.num_kv_heads * (
+        pool.cfg.head_dim * jnp.dtype(pool.storage_dtype).itemsize + scale_b)
+    page_read = blocks_live * pool.block_size * vec_store
+    token_write = rows_live * vec_store
+    return 2 * pool.n_layers * (page_read + token_write)
+
+
+def predicted_vs_measured(reg: MetricsRegistry, *, pool, buf_size: int,
+                          expected_row_tokens: int,
+                          fused: bool = True) -> Dict[str, Any]:
+    """Join the roofline model against the run's measured per-step KV bytes.
+
+    ``expected_row_tokens`` is the workload's expected tokens per live row
+    (doc chunks + prompt + half the decode budget); the model is evaluated
+    for one such row and scaled by the measured mean rows-per-step.
+    Returns a dict with both sides, the ratio, and the raw counters.
+    """
+    steps = int(reg.value("decode.steps"))
+    row_steps = int(reg.value("decode.row_steps"))
+    measured_total = reg.value("decode.kv_bytes_measured")
+    stale_total = reg.value("decode.kv_bytes_stale")
+    if steps == 0:
+        return {"steps": 0, "predicted_step_bytes": 0.0,
+                "measured_step_bytes": 0.0, "ratio": 0.0,
+                "occupancy": 0.0, "stale_step_bytes": 0.0, "fused": fused,
+                "expected_row_tokens": expected_row_tokens}
+    occupancy = row_steps / steps
+    per_row = paged_step_kv_bytes_for_pool(
+        pool, [expected_row_tokens], buf_size=buf_size, fused=fused)
+    predicted = per_row * occupancy
+    measured = measured_total / steps
+    return {
+        "steps": steps,
+        "occupancy": occupancy,
+        "expected_row_tokens": expected_row_tokens,
+        "fused": fused,
+        "predicted_step_bytes": float(predicted),
+        "measured_step_bytes": float(measured),
+        "stale_step_bytes": float(stale_total / steps),
+        "ratio": float(measured / predicted) if predicted else 0.0,
+    }
+
+
+def comparison_table(rows) -> str:
+    """Markdown table over ``predicted_vs_measured`` dicts tagged with a
+    ``name`` key (what ``analysis/report.py`` renders)."""
+    lines = [
+        "| run | steps | occ | predicted B/step | measured B/step "
+        "| ratio | stale B/step |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r.get('name', '?')} | {r['steps']} | {r['occupancy']:.2f} "
+            f"| {r['predicted_step_bytes']:,.0f} "
+            f"| {r['measured_step_bytes']:,.0f} | {r['ratio']:.3f} "
+            f"| {r['stale_step_bytes']:,.0f} |")
+    return "\n".join(lines)

@@ -1,0 +1,146 @@
+"""Named metrics primitives: counters, gauges, histograms (DESIGN.md §15).
+
+A :class:`MetricsRegistry` is the single sink the scheduler, pool, loader
+and role workers write into, replacing the hand-threaded int plumbing that
+previously fed ``ServeMetrics`` field by field.  ``ServeMetrics`` is now a
+*view* over a registry (``ServeMetrics.from_registry``), so adding a new
+measurement means adding one ``reg.counter(...).inc(...)`` call, not a new
+dataclass field threaded through four layers.
+
+Conventions (enforced only by usage, kept flat on purpose):
+
+* ``serve.*``    — whole-run counts (requests, tokens, bytes, hits/misses)
+* ``phase.*_s``  — wall-clock seconds per lifecycle phase (float counters)
+* ``request.*``  — per-request histograms (latency, TTFT, queue wait, bytes)
+* ``decode.*``   — per-step measurement (steps, row-steps, measured KV bytes)
+* ``pool.*`` / ``mat.*`` — pool residency gauges / materializer-role counts
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Union
+
+Number = Union[int, float]
+
+
+class Counter:
+    """Monotone accumulator (ints or float seconds/bytes)."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.value: Number = 0
+
+    def inc(self, n: Number = 1) -> None:
+        if n < 0:
+            raise ValueError(
+                f"counter {self.name!r} is monotone; cannot inc by {n}")
+        self.value += n
+
+
+class Gauge:
+    """Last-value metric that also tracks its peak."""
+
+    __slots__ = ("name", "value", "peak")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.value: Number = 0
+        self.peak: Number = 0
+
+    def set(self, v: Number) -> None:
+        self.value = v
+        if v > self.peak:
+            self.peak = v
+
+
+class Histogram:
+    """Stores raw observations; quantiles computed on demand (runs are
+    small enough that reservoir sampling would only add noise)."""
+
+    __slots__ = ("name", "values")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.values: List[Number] = []
+
+    def observe(self, v: Number) -> None:
+        self.values.append(v)
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    @property
+    def total(self) -> Number:
+        return sum(self.values)
+
+    def quantile(self, q: float) -> float:
+        if not self.values:
+            return 0.0
+        xs = sorted(self.values)
+        return float(xs[min(len(xs) - 1, int(q * len(xs)))])
+
+
+class MetricsRegistry:
+    """Get-or-create store of named metrics; name collisions across metric
+    kinds raise instead of silently shadowing."""
+
+    def __init__(self) -> None:
+        self._metrics: Dict[str, object] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name)
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def hist(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    # -- read side -----------------------------------------------------------
+
+    def value(self, name: str, default: Number = 0) -> Number:
+        m = self._metrics.get(name)
+        if isinstance(m, (Counter, Gauge)):
+            return m.value
+        return default
+
+    def peak(self, name: str, default: Number = 0) -> Number:
+        m = self._metrics.get(name)
+        if isinstance(m, Gauge):
+            return m.peak
+        return default
+
+    def hist_values(self, name: str) -> List[Number]:
+        m = self._metrics.get(name)
+        return list(m.values) if isinstance(m, Histogram) else []
+
+    def counters_under(self, prefix: str) -> Dict[str, Number]:
+        return {n[len(prefix):]: m.value
+                for n, m in sorted(self._metrics.items())
+                if n.startswith(prefix) and isinstance(m, Counter)}
+
+    def as_dict(self) -> Dict[str, Dict[str, object]]:
+        out: Dict[str, Dict[str, object]] = {
+            "counters": {}, "gauges": {}, "histograms": {}}
+        for name, m in sorted(self._metrics.items()):
+            if isinstance(m, Counter):
+                out["counters"][name] = m.value
+            elif isinstance(m, Gauge):
+                out["gauges"][name] = {"value": m.value, "peak": m.peak}
+            elif isinstance(m, Histogram):
+                out["histograms"][name] = {
+                    "count": m.count, "total": m.total,
+                    "p50": m.quantile(0.50), "p95": m.quantile(0.95)}
+        return out

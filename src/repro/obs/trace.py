@@ -1,0 +1,272 @@
+"""Request-lifecycle tracing: nested spans + instant events (DESIGN.md §15).
+
+A :class:`Tracer` records begin/end span pairs and instant events into an
+in-memory buffer, one event per ``list.append`` (GIL-atomic, so loader
+threads and the scheduler thread can share a tracer without locks).  The
+buffer exports to Chrome ``trace_event`` JSON — loadable in
+``chrome://tracing`` / Perfetto — and to line-per-event JSONL.
+
+Design points:
+
+* **Negligible overhead when disabled.**  ``Tracer(enabled=False).span(...)``
+  returns a module-level singleton null context manager and records nothing;
+  the per-call cost is one attribute check.  Use the shared
+  :data:`NULL_TRACER` when a component takes an optional tracer.
+* **Injectable clock.**  The constructor takes ``clock=`` (defaults to
+  ``time.perf_counter``) so tests can drive deterministic timelines.
+* **Per-role process ids.**  Each tracer carries a ``role`` label; the
+  Chrome export emits it as the process name, so a disaggregated run's
+  materializer and decode traces merge into one timeline with two process
+  lanes (:func:`merge_chrome`).  Spans carry ``req=``/``chunk=`` args that
+  act as the cross-role join keys.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+
+TRACE_SCHEMA = 1
+
+# event tuple layout: (ts_seconds, thread_ident, phase, name, args_or_None)
+_Event = Tuple[float, int, str, str, Optional[Dict[str, Any]]]
+
+
+class _NullSpan:
+    """No-op context manager returned by a disabled tracer.
+
+    A single module-level instance is shared by every disabled ``span()``
+    call — the disabled fast path allocates nothing (asserted in tests).
+    """
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc: object) -> bool:
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """Live span handle; closing records the matching E event."""
+
+    __slots__ = ("_tracer", "name")
+
+    def __init__(self, tracer: "Tracer", name: str,
+                 args: Optional[Dict[str, Any]]) -> None:
+        self._tracer = tracer
+        self.name = name
+        tracer._record("B", name, args)
+
+    def __enter__(self) -> "_Span":
+        return self
+
+    def __exit__(self, *exc: object) -> bool:
+        self._tracer._record("E", self.name, None)
+        return False
+
+
+class Tracer:
+    """Collects span/instant events for one role (process lane)."""
+
+    def __init__(self, enabled: bool = True, *, role: str = "serve",
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        self.enabled = enabled
+        self.role = role
+        self.clock = clock
+        self.events: List[_Event] = []
+
+    # -- recording -----------------------------------------------------------
+
+    def _record(self, ph: str, name: str,
+                args: Optional[Dict[str, Any]]) -> None:
+        self.events.append(
+            (self.clock(), threading.get_ident(), ph, name, args or None))
+
+    def span(self, name: str, **args: Any) -> Any:
+        """Open a nested span; use as a context manager.
+
+        ``with tracer.span("flash_read", chunk=cid): ...``
+        """
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, args)
+
+    def instant(self, name: str, **args: Any) -> None:
+        if self.enabled:
+            self._record("i", name, args)
+
+    def clear(self) -> None:
+        self.events = []
+
+    # -- analysis ------------------------------------------------------------
+
+    def spans(self) -> Iterator[Tuple[str, float, float, int,
+                                      Optional[Dict[str, Any]]]]:
+        """Yield completed spans as ``(name, t0, dur, tid, args)``.
+
+        Replays the event buffer with a per-thread stack; raises
+        ``ValueError`` on mismatched begin/end pairs (spans must strictly
+        nest per thread — the invariant the tests pin).
+        """
+        stacks: Dict[int, List[Tuple[str, float,
+                                     Optional[Dict[str, Any]]]]] = {}
+        for ts, tid, ph, name, args in self.events:
+            if ph == "B":
+                stacks.setdefault(tid, []).append((name, ts, args))
+            elif ph == "E":
+                stack = stacks.get(tid)
+                if not stack or stack[-1][0] != name:
+                    raise ValueError(
+                        f"unbalanced span end {name!r} on thread {tid}")
+                bname, t0, bargs = stack.pop()
+                yield bname, t0, ts - t0, tid, bargs
+        for tid, stack in stacks.items():
+            if stack:
+                raise ValueError(
+                    f"unclosed spans on thread {tid}: "
+                    f"{[s[0] for s in stack]}")
+
+    def totals(self) -> Dict[str, Tuple[int, float]]:
+        """Inclusive ``{span_name: (count, total_seconds)}``."""
+        out: Dict[str, Tuple[int, float]] = {}
+        for name, _t0, dur, _tid, _args in self.spans():
+            n, tot = out.get(name, (0, 0.0))
+            out[name] = (n + 1, tot + dur)
+        return out
+
+    # -- export --------------------------------------------------------------
+
+    def to_chrome_dict(self, pid: int = 1) -> Dict[str, Any]:
+        """Chrome ``trace_event`` document (``{"traceEvents": [...]}``)."""
+        tid_map: Dict[int, int] = {}
+        evs: List[Dict[str, Any]] = [
+            {"name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+             "args": {"name": self.role}},
+        ]
+        for ts, raw_tid, ph, name, args in self.events:
+            tid = tid_map.setdefault(raw_tid, len(tid_map) + 1)
+            ev: Dict[str, Any] = {"name": name, "ph": ph, "pid": pid,
+                                  "tid": tid, "ts": ts * 1e6}
+            if args:
+                ev["args"] = dict(args)
+            if ph == "i":
+                ev["s"] = "t"
+            evs.append(ev)
+        return {"traceEvents": evs, "displayTimeUnit": "ms",
+                "otherData": {"role": self.role, "schema": TRACE_SCHEMA}}
+
+    def to_chrome(self, path: str) -> Dict[str, Any]:
+        doc = self.to_chrome_dict()
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return doc
+
+    def to_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(json.dumps({"schema": TRACE_SCHEMA,
+                                "role": self.role}) + "\n")
+            for ts, tid, ph, name, args in self.events:
+                rec: Dict[str, Any] = {"ts": ts, "tid": tid, "ph": ph,
+                                       "name": name}
+                if args:
+                    rec["args"] = args
+                f.write(json.dumps(rec) + "\n")
+
+
+NULL_TRACER = Tracer(enabled=False, role="null")
+
+
+# ---------------------------------------------------------------------------
+# Chrome-document level helpers (merge + validate)
+# ---------------------------------------------------------------------------
+
+def merge_chrome(*docs: Dict[str, Any]) -> Dict[str, Any]:
+    """Merge per-role Chrome trace documents into one timeline.
+
+    Each input document gets a distinct pid (its process lane); events are
+    otherwise untouched, so the shared wall clock lines the roles up and
+    ``req=``/``chunk=`` span args join work across roles.
+    """
+    merged: List[Dict[str, Any]] = []
+    roles = []
+    for pid, doc in enumerate(docs, start=1):
+        roles.append(str(doc.get("otherData", {}).get("role", f"role{pid}")))
+        for ev in doc["traceEvents"]:
+            ev = dict(ev)
+            ev["pid"] = pid
+            merged.append(ev)
+    return {"traceEvents": merged, "displayTimeUnit": "ms",
+            "otherData": {"roles": roles, "schema": TRACE_SCHEMA}}
+
+
+def arg_values(doc: Dict[str, Any], key: str) -> set:
+    """All values of span/instant arg ``key`` in a Chrome document — the
+    join-key extractor used to check that per-role traces actually merge."""
+    out = set()
+    for ev in doc["traceEvents"]:
+        args = ev.get("args")
+        if isinstance(args, dict) and key in args:
+            out.add(args[key])
+    return out
+
+
+def validate_chrome(doc: Dict[str, Any]) -> Dict[str, int]:
+    """Validate a Chrome trace document's schema; raise ``ValueError``.
+
+    Checks: ``traceEvents`` is a list of dicts with name/ph/pid/tid; B/E
+    events pair up per (pid, tid) with non-decreasing timestamps; instant
+    events carry numeric ``ts``.  Returns ``{"events": n, "spans": m}``.
+    """
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list):
+        raise ValueError("traceEvents missing or not a list")
+    stacks: Dict[Tuple[Any, Any], List[Tuple[str, float]]] = {}
+    n_spans = 0
+    for i, ev in enumerate(evs):
+        if not isinstance(ev, dict):
+            raise ValueError(f"event {i} is not an object")
+        for k in ("name", "ph", "pid", "tid"):
+            if k not in ev:
+                raise ValueError(f"event {i} missing {k!r}")
+        ph = ev["ph"]
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            raise ValueError(f"event {i} ({ev['name']!r}) has no numeric ts")
+        key = (ev["pid"], ev["tid"])
+        if ph == "B":
+            stacks.setdefault(key, []).append((ev["name"], ts))
+        elif ph == "E":
+            stack = stacks.get(key)
+            if not stack:
+                raise ValueError(
+                    f"event {i}: E {ev['name']!r} without matching B")
+            bname, bts = stack.pop()
+            if bname != ev["name"]:
+                raise ValueError(
+                    f"event {i}: E {ev['name']!r} closes B {bname!r} "
+                    f"(spans must nest)")
+            if ts < bts:
+                raise ValueError(
+                    f"event {i}: span {bname!r} ends before it begins")
+            n_spans += 1
+        elif ph != "i":
+            raise ValueError(f"event {i}: unknown phase {ph!r}")
+    for key, stack in stacks.items():
+        if stack:
+            raise ValueError(
+                f"unclosed B events on {key}: {[s[0] for s in stack]}")
+    return {"events": len(evs), "spans": n_spans}
+
+
+def load_chrome(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)

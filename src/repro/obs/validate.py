@@ -1,0 +1,35 @@
+"""CLI trace-schema validator: ``python -m repro.obs.validate trace.json...``
+
+Exits non-zero (with a one-line reason) if any file fails
+:func:`repro.obs.trace.validate_chrome` — the CI smoke step that keeps
+exported traces loadable in Perfetto.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from .trace import load_chrome, validate_chrome
+
+
+def main(argv=None) -> int:
+    paths = list(sys.argv[1:] if argv is None else argv)
+    if not paths:
+        print("usage: python -m repro.obs.validate TRACE.json [...]",
+              file=sys.stderr)
+        return 2
+    rc = 0
+    for path in paths:
+        try:
+            stats = validate_chrome(load_chrome(path))
+        except (OSError, ValueError) as e:
+            print(f"{path}: INVALID: {e}", file=sys.stderr)
+            rc = 1
+            continue
+        print(f"{path}: ok ({stats['events']} events, "
+              f"{stats['spans']} spans)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -136,6 +136,9 @@ class PagedKvPool:
         else:
             self.k_scale = self.v_scale = None
         self.stats = PoolStats()
+        # observability: schedulers attach their tracer post-construction
+        from repro.obs import NULL_TRACER
+        self.tracer = NULL_TRACER
         self._free: List[int] = list(range(self.n_blocks))
         self._entries: Dict[str, _ChunkPages] = {}
         self._lru: "OrderedDict[str, None]" = OrderedDict()  # refs == 0
@@ -252,6 +255,8 @@ class PagedKvPool:
             pages = self._entries.pop(victim)
             self._free.extend(pages.block_ids)
             self.stats.reclaims += 1
+            self.tracer.instant("pool_reclaim", chunk=victim,
+                                blocks=len(pages.block_ids))
         if len(self._free) < n:
             raise RuntimeError(
                 f"PagedKvPool exhausted: need {n} blocks, "
@@ -346,16 +351,18 @@ class PagedKvPool:
                 k_art, v_art = k_art[:, 0], v_art[:, 0]
             k_enc, v_enc, k_sc, v_sc = self._encode_artifact(k_art, v_art)
         n_tokens = int(k_enc.shape[1])
-        blocks = self._alloc(self.blocks_for(n_tokens))
-        slots = self.token_slot_ids(blocks, n_tokens)
-        self.k = self.k.at[:, slots].set(k_enc.astype(self.storage_dtype))
-        self.v = self.v.at[:, slots].set(v_enc.astype(self.storage_dtype))
-        if self.k_scale is not None:
-            sd = self.codec.scale_dtype
-            self.k_scale = self.k_scale.at[:, slots].set(
-                jnp.asarray(k_sc)[..., 0].astype(sd))
-            self.v_scale = self.v_scale.at[:, slots].set(
-                jnp.asarray(v_sc)[..., 0].astype(sd))
+        with self.tracer.span("pool_insert", chunk=chunk_id,
+                              tokens=n_tokens):
+            blocks = self._alloc(self.blocks_for(n_tokens))
+            slots = self.token_slot_ids(blocks, n_tokens)
+            self.k = self.k.at[:, slots].set(k_enc.astype(self.storage_dtype))
+            self.v = self.v.at[:, slots].set(v_enc.astype(self.storage_dtype))
+            if self.k_scale is not None:
+                sd = self.codec.scale_dtype
+                self.k_scale = self.k_scale.at[:, slots].set(
+                    jnp.asarray(k_sc)[..., 0].astype(sd))
+                self.v_scale = self.v_scale.at[:, slots].set(
+                    jnp.asarray(v_sc)[..., 0].astype(sd))
         self._entries[chunk_id] = _ChunkPages(block_ids=blocks,
                                               n_tokens=n_tokens,
                                               nbytes=nbytes, refs=1)

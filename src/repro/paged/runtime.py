@@ -197,6 +197,18 @@ class PagedRowCache:
                 entries.append((blk, run))
                 p += run
             per_row.append(entries)
+        # measured-bytes accounting (repro.obs.compare): how much KV the
+        # fused kernel will actually stream this step. Live rows (installed
+        # tail) are real traffic; stale slots keep stepping into scratch and
+        # are reported separately so the roofline join stays honest.
+        live = [self.rows[s].tail_slots is not None
+                for s in range(self.max_slots)]
+        self.last_step_stats = {
+            "blocks_live": sum(len(e) for e, lv in zip(per_row, live) if lv),
+            "blocks_stale": sum(len(e) for e, lv in zip(per_row, live)
+                                if not lv),
+            "rows_live": sum(live),
+        }
         n_max = max((len(e) for e in per_row), default=0)
         n_max = max(1, -(-n_max // bucket) * bucket)
         tables = np.full((self.max_slots, n_max), self._scratch, np.int32)

@@ -63,9 +63,12 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.roofline import paged_step_kv_bytes_for_pool
 from repro.data.tokenizer import EOS
 from repro.kvstore.async_loader import AsyncKvLoader
 from repro.models.cache import insert_cache_row
+from repro.obs import (MetricsRegistry, NULL_TRACER,
+                       fused_step_kv_bytes_measured)
 from repro.serving.engine import RagEngine, RowRequest
 from repro.serving.metrics import ServeMetrics  # noqa: F401  (re-export)
 from repro.serving.sampling import greedy
@@ -95,10 +98,34 @@ class RequestRecord:
                                            # chunks with no flash artifact
                                            # yet: materialize job posted,
                                            # loads deferred until published
+    # per-request phase split (seconds; DESIGN.md §15). queue_wait covers
+    # arrival -> admission start (materialize parking included); load_stall
+    # is the flash-read wait at admit; decode_share accumulates the full
+    # duration of every decode step this row was live in. Their sum plus
+    # compose + prefill ≈ latency (scheduler bookkeeping is the remainder).
+    first_token_s: Optional[float] = None  # offset from run start
+    queue_wait_s: float = 0.0
+    load_stall_s: float = 0.0
+    compose_s: float = 0.0
+    prefill_s: float = 0.0
+    decode_share_s: float = 0.0
 
     @property
     def latency_s(self) -> float:
         return (self.finish_s or 0.0) - self.arrival_s
+
+    @property
+    def ttft_s(self) -> float:
+        """Arrival to first emitted token (the cold-load stall the paper's
+        load/decode-overlap claim is about)."""
+        return (self.first_token_s or self.finish_s or 0.0) - self.arrival_s
+
+    @property
+    def phase_sum_s(self) -> float:
+        """Sum of attributed phases — asserted ≈ latency (within scheduler
+        bookkeeping) by the trace-invariant tests."""
+        return (self.queue_wait_s + self.load_stall_s + self.compose_s
+                + self.prefill_s + self.decode_share_s)
 
 
 class ContinuousScheduler:
@@ -111,7 +138,7 @@ class ContinuousScheduler:
                  paged: bool = False, block_size: int = 64,
                  pool_blocks: Optional[int] = None,
                  pool_budget_bytes: Optional[int] = None,
-                 fused: bool = True):
+                 fused: bool = True, tracer=None):
         if engine.cfg.family not in ("dense", "vlm", "moe"):
             raise ValueError("ContinuousScheduler requires an attention-KV "
                              "family")
@@ -137,6 +164,18 @@ class ContinuousScheduler:
         # HBM byte budget alternative to pool_blocks: the pool's codec
         # decides how many blocks (and so resident chunks) the budget buys
         self.pool_budget_bytes = pool_budget_bytes
+        # observability (DESIGN.md §15): spans go to the given tracer (or
+        # the engine's, or the shared disabled singleton); per-run counters
+        # land in a fresh MetricsRegistry that ``ServeMetrics`` is computed
+        # from at the end of each run (kept as ``last_registry``)
+        self.tracer = (tracer or getattr(engine, "tracer", None)
+                       or NULL_TRACER)
+        self.last_registry: Optional[MetricsRegistry] = None
+        self.last_records: List[RequestRecord] = []
+        self.last_buf_size: Optional[int] = None
+        self.last_pool = None              # paged: the run's block pool
+                                           # (predicted_vs_measured reads
+                                           # widths/geometry off it)
         # a DecodeWorker brings its own loader (one flash-read dedup domain
         # per worker, shared across scheduler instances); the composed
         # engine doesn't, so the scheduler owns one
@@ -144,7 +183,13 @@ class ContinuousScheduler:
         self._owns_loader = self.loader is None
         if self._owns_loader:
             self.loader = AsyncKvLoader(engine.reader,
-                                        n_workers=n_load_workers)
+                                        n_workers=n_load_workers,
+                                        tracer=self.tracer)
+        elif (self.tracer.enabled
+              and not getattr(self.loader, "tracer", NULL_TRACER).enabled):
+            # engine-owned loader with no tracer of its own: adopt ours so
+            # flash_read spans land in this run's trace
+            self.loader.tracer = self.tracer
 
     def shutdown(self):
         if self._owns_loader:
@@ -183,11 +228,15 @@ class ContinuousScheduler:
         records = [RequestRecord(q, m, a) for q, m, a
                    in zip(questions, max_new_tokens, arrivals_s)]
         order = {id(r): i for i, r in enumerate(records)}
-        metrics = ServeMetrics(n_requests=n,
-                               role=getattr(self.engine, "role", "both"))
+        reg = MetricsRegistry()
+        tr = self.tracer
+        self.last_registry = reg
+        self.last_records = records
+        reg.counter("serve.requests").inc(n)
 
         eng = self.engine
         buf = self._buf_for(records)
+        self.last_buf_size = buf
         pcache = None
         cache = None
         if self.paged:
@@ -195,6 +244,9 @@ class ContinuousScheduler:
                 self.max_slots, buf, block_size=self.block_size,
                 n_blocks=self.pool_blocks,
                 pool_budget_bytes=self.pool_budget_bytes)
+            self.last_pool = pcache.pool
+            if tr.enabled:
+                pcache.pool.tracer = tr
         else:
             # engine-placed: KV-head-sharded under a serving mesh
             cache = eng.init_row_cache(self.max_slots, buf)
@@ -244,6 +296,7 @@ class ContinuousScheduler:
         def poll_arrivals():
             while upcoming and upcoming[0].arrival_s <= now():
                 r = upcoming.popleft()
+                tr.instant("arrive", req=order[id(r)])
                 r.req = eng.prepare_request(r.question, r.max_new_tokens)
                 # materialize-on-miss (DESIGN.md §14): a chunk with no
                 # flash artifact parks the request behind a materialize
@@ -253,6 +306,8 @@ class ContinuousScheduler:
                            if not eng.artifact_ready(c)]
                 if missing:
                     r.pending_mat = missing
+                    tr.instant("park_materialize", req=order[id(r)],
+                               chunks=len(missing))
                     for c in missing:
                         eng.request_materialize(c)
                 else:
@@ -272,42 +327,86 @@ class ContinuousScheduler:
                 ids = ids[:ids.index(EOS)]
             r.answer = eng.tok.decode(ids)
             r.finish_s = now()
-            metrics.n_new_tokens += len(r.tokens)
-            metrics.latencies_s.append(r.latency_s)
-            metrics.flash_bytes_per_request.append(r.flash_bytes)
+            reg.counter("serve.new_tokens").inc(len(r.tokens))
+            reg.hist("request.latency_s").observe(r.latency_s)
+            reg.hist("request.ttft_s").observe(r.ttft_s)
+            reg.hist("request.queue_wait_s").observe(r.queue_wait_s)
+            reg.hist("request.flash_bytes").observe(r.flash_bytes)
+            tr.instant("finish", req=order[id(r)], tokens=len(r.tokens))
 
         def admit(r: RequestRecord, slot: int) -> bool:
             """Compose + sub-prefill one row into ``slot``. Returns False if
-            the request finished at its first token (slot stays free)."""
+            the request finished at its first token (slot stays free).
+
+            The admission window is phase-split (DESIGN.md §15): flash-read
+            wait, compose, and prefill compute are separate spans/counters —
+            ``metrics.prefill_s`` means compose + prefill COMPUTE only,
+            where it used to lump the whole ``t_adm`` window (admission
+            bookkeeping and load stall included)."""
             nonlocal cache
+            i = order[id(r)]
+            r.queue_wait_s = now() - r.arrival_s
             t_adm = time.perf_counter()
-            if self.paged:
-                payloads = dict(zip(r.to_load, r.future.result()))
-                n_doc, flash_bytes, nbytes, hits, misses = \
-                    eng.compose_row_paged(r.req, pcache, slot, payloads)
-                for cid in r.to_load:
-                    wanted[cid] -= 1
-                first = eng.prefill_row_paged(pcache, slot, r.req.prompt)
-                metrics.chunk_hits += hits
-                metrics.chunk_misses += misses
-            else:
-                r.req.payloads = r.future.result()
-                row, n_doc, nbytes = eng.compose_row(r.req, buf)
-                first, row = eng.prefill_row(row, r.req.prompt)
-                # flash bytes are attributed to the request that initiated
-                # each read; coalesced in-flight duplicates cost 0 here
-                flags = getattr(r.future, "initiated_flags",
-                                [True] * len(r.req.payloads))
-                flash_bytes = sum(len(p) for p, owned
-                                  in zip(r.req.payloads, flags) if owned)
-                metrics.chunk_misses += len(r.req.chunk_ids)
-            metrics.prefill_s += time.perf_counter() - t_adm
-            metrics.kv_bytes_loaded += nbytes     # composed into the row
-            metrics.flash_bytes_loaded += flash_bytes  # actually read
+            with tr.span("admit", req=i, slot=slot):
+                if self.paged:
+                    with tr.span("load_wait", req=i):
+                        t = time.perf_counter()
+                        payloads = dict(zip(r.to_load, r.future.result()))
+                        r.load_stall_s = time.perf_counter() - t
+                    with tr.span("compose", req=i,
+                                 chunks=len(r.req.chunk_ids)):
+                        t = time.perf_counter()
+                        n_doc, flash_bytes, nbytes, hits, misses = \
+                            eng.compose_row_paged(r.req, pcache, slot,
+                                                  payloads)
+                        r.compose_s = time.perf_counter() - t
+                    for cid in r.to_load:
+                        wanted[cid] -= 1
+                    with tr.span("prefill", req=i):
+                        t = time.perf_counter()
+                        first = eng.prefill_row_paged(pcache, slot,
+                                                      r.req.prompt)
+                        r.prefill_s = time.perf_counter() - t
+                    reg.counter("serve.chunk_hits").inc(hits)
+                    reg.counter("serve.chunk_misses").inc(misses)
+                else:
+                    with tr.span("load_wait", req=i):
+                        t = time.perf_counter()
+                        r.req.payloads = r.future.result()
+                        r.load_stall_s = time.perf_counter() - t
+                    with tr.span("compose", req=i,
+                                 chunks=len(r.req.chunk_ids)):
+                        t = time.perf_counter()
+                        row, n_doc, nbytes = eng.compose_row(r.req, buf)
+                        r.compose_s = time.perf_counter() - t
+                    with tr.span("prefill", req=i):
+                        t = time.perf_counter()
+                        first, row = eng.prefill_row(row, r.req.prompt)
+                        r.prefill_s = time.perf_counter() - t
+                    # flash bytes are attributed to the request that
+                    # initiated each read; coalesced in-flight duplicates
+                    # cost 0 here
+                    flags = getattr(r.future, "initiated_flags",
+                                    [True] * len(r.req.payloads))
+                    flash_bytes = sum(len(p) for p, owned
+                                      in zip(r.req.payloads, flags) if owned)
+                    reg.counter("serve.chunk_misses").inc(
+                        len(r.req.chunk_ids))
+            adm_total = time.perf_counter() - t_adm
+            reg.counter("phase.load_stall_s").inc(r.load_stall_s)
+            reg.counter("phase.compose_s").inc(r.compose_s)
+            reg.counter("phase.prefill_s").inc(r.prefill_s)
+            # what's left of the window is genuine admission bookkeeping
+            reg.counter("phase.admission_s").inc(max(
+                0.0, adm_total - r.load_stall_s - r.compose_s - r.prefill_s))
+            reg.counter("serve.kv_bytes_composed").inc(nbytes)
+            reg.counter("serve.flash_bytes").inc(flash_bytes)
             r.flash_bytes = flash_bytes
             r.n_doc_tokens = n_doc
             r.admit_s = now()
             r.tokens = [int(first[0])]
+            r.first_token_s = now()
+            tr.instant("first_token", req=i)
             if r.tokens[0] == EOS or r.max_new_tokens <= 1:
                 if self.paged:
                     eng.release_row_paged(pcache, slot)
@@ -360,15 +459,45 @@ class ContinuousScheduler:
                         upcoming[0].arrival_s - now(), 0.01)))
                 continue
             t_dec = time.perf_counter()
+            tokens = jnp.asarray(cur)[:, None]
+            with tr.span("decode_step", rows=len(active)):
+                if self.paged:
+                    fused_step = self.fused and eng.fused_step_supported(
+                        tokens)
+                    logits = eng.step_rows_paged(pcache, tokens,
+                                                 fused=self.fused)
+                else:
+                    fused_step = False
+                    logits, cache = eng.step_rows(cache, tokens)
+                nxt = np.asarray(greedy(logits[:, -1]))
+            step_dur = time.perf_counter() - t_dec
+            reg.counter("phase.decode_step_s").inc(step_dur)
+            reg.counter("decode.steps").inc()
+            reg.counter("decode.row_steps").inc(len(active))
             if self.paged:
-                logits = eng.step_rows_paged(pcache,
-                                             jnp.asarray(cur)[:, None],
-                                             fused=self.fused)
-            else:
-                logits, cache = eng.step_rows(cache,
-                                              jnp.asarray(cur)[:, None])
-            nxt = np.asarray(greedy(logits[:, -1]))
-            metrics.decode_s += time.perf_counter() - t_dec
+                pool = pcache.pool
+                stats = getattr(pcache, "last_step_stats", None)
+                if fused_step and stats is not None:
+                    # measured side of the roofline join: bytes implied by
+                    # the block tables actually staged this step
+                    reg.counter("decode.kv_bytes_measured").inc(
+                        fused_step_kv_bytes_measured(
+                            pool, stats["blocks_live"], stats["rows_live"]))
+                    reg.counter("decode.kv_bytes_stale").inc(
+                        fused_step_kv_bytes_measured(
+                            pool, stats["blocks_stale"],
+                            self.max_slots - stats["rows_live"]))
+                else:
+                    # three-phase fallback moves the full dense working set
+                    # regardless of occupancy — the model IS the measurement
+                    reg.counter("decode.kv_bytes_measured").inc(
+                        paged_step_kv_bytes_for_pool(
+                            pool, [0] * self.max_slots, buf_size=buf,
+                            fused=False))
+            for r in active.values():
+                # every live row waited out the whole step — latency
+                # attribution, so the per-request phases sum to ≈ latency
+                r.decode_share_s += step_dur
             for slot, r in list(active.items()):
                 tok = int(nxt[slot])
                 r.tokens.append(tok)
@@ -381,19 +510,24 @@ class ContinuousScheduler:
                     finish(r)
                     del active[slot]
 
-        metrics.wall_s = now()
+        reg.gauge("serve.wall_s").set(now())
         if self.paged:
             # required working set only: refs>0 shared pages + private
             # tails. Refcount-0 LRU pages are a reclaimable hot-set cache
             # (the flash-read savings), not required residency.
             pool = pcache.pool
-            metrics.hbm_kv_bytes_resident = (pool.stats.peak_pinned_blocks
-                                             * pool.bytes_per_block)
-            metrics.resident_chunks_peak = pool.stats.peak_resident_chunks
-            metrics.pool_shard_bytes = pool.device_bytes_per_shard()
+            reg.gauge("pool.hbm_kv_bytes_resident").set(
+                pool.stats.peak_pinned_blocks * pool.bytes_per_block)
+            reg.gauge("pool.resident_chunks").set(
+                pool.stats.peak_resident_chunks)
         else:
-            metrics.hbm_kv_bytes_resident = (cache.k.nbytes
-                                             + cache.v.nbytes)
+            reg.gauge("pool.hbm_kv_bytes_resident").set(
+                cache.k.nbytes + cache.v.nbytes)
+        # ServeMetrics is a derived view over the run's registry
+        metrics = ServeMetrics.from_registry(
+            reg, role=getattr(self.engine, "role", "both"))
+        if self.paged:
+            metrics.pool_shard_bytes = pcache.pool.device_bytes_per_shard()
         answers = [None] * n
         for r in records:
             answers[order[id(r)]] = r.answer

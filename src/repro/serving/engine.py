@@ -69,7 +69,8 @@ class RagEngine(_DecodePlane):
     def __init__(self, model, params, store, mode: str = "matkv",
                  chunk_tokens: int = 256, top_k: int = 2,
                  rerotate: bool = False, blend_ratio: float = 0.18,
-                 codec=None, reader=None, mesh=None, rules=None):
+                 codec=None, reader=None, mesh=None, rules=None,
+                 tracer=None):
         assert mode in ("vanilla", "matkv", "cacheblend")
         self.model = model
         self.cfg = model.cfg
@@ -109,12 +110,14 @@ class RagEngine(_DecodePlane):
         # the write path is the materializer role, sharing this engine's
         # placed params and an in-process work queue (generation tags flow
         # through it even in the composed engine — harmless extra meta)
-        self.queue = WorkQueue()
+        self.tracer = tracer          # _init_decode_plane defaults the None
+        self.queue = WorkQueue(tracer=tracer)
         self.mat = MaterializerWorker(model, self.params, store,
                                       codec=self.codec,
                                       chunk_tokens=chunk_tokens,
                                       queue=self.queue, mesh=mesh,
-                                      rules=self.rules, place_params=False)
+                                      rules=self.rules, place_params=False,
+                                      tracer=tracer)
         self.materializer = self.mat.materializer   # compat alias
         self._chunks: Dict[str, Chunk] = {}
         self._vanilla_fns = {}

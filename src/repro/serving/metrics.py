@@ -1,4 +1,5 @@
-"""Serving metrics, split per role (DESIGN.md §14).
+"""Serving metrics, split per role (DESIGN.md §14) — now a *view* over the
+observability registry (DESIGN.md §15).
 
 ``ServeMetrics`` lives here (not in ``continuous.py``) so the role facades
 in ``serving/roles.py`` can account against it without importing the
@@ -15,26 +16,47 @@ per-role rates:
 
 ``tokens_per_s`` stays for the composed single-process path ("both" role),
 where one wall clock is the honest end-to-end number.
+
+Since PR 8 the scheduler and the materializer role no longer mutate these
+fields directly: they write named counters/gauges/histograms into a
+:class:`repro.obs.MetricsRegistry`, and ``ServeMetrics.from_registry``
+computes this dataclass from it at the end of a run.  The dataclass keeps
+its flat field layout (tests and benches read it), gains TTFT and the
+per-phase ``phase_s`` breakdown, and round-trips through
+``as_dict``/``from_dict`` with a schema version for ``results.jsonl``.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List
 
 import numpy as np
+
+METRICS_SCHEMA = 1
 
 
 @dataclass
 class ServeMetrics:
     role: str = "both"                     # "materialize" | "decode" | "both"
     wall_s: float = 0.0
-    prefill_s: float = 0.0
+    prefill_s: float = 0.0                 # compose + prefill COMPUTE only
+                                           # (admission bookkeeping and flash
+                                           # wait live in phase_s, not here)
     decode_s: float = 0.0
     n_requests: int = 0
     n_new_tokens: int = 0
     kv_bytes_loaded: int = 0               # bytes composed into rows
     latencies_s: List[float] = field(default_factory=list)
+    ttft_s: List[float] = field(default_factory=list)
+                                           # request arrival -> first emitted
+                                           # token (the cold-load stall the
+                                           # overlap claim is about)
+    phase_s: Dict[str, float] = field(default_factory=dict)
+                                           # wall seconds per lifecycle phase
+                                           # (admission / load_stall / compose
+                                           # / prefill / decode_step / ...);
+                                           # per-request these sum ≈ latency
     # load-link accounting (fed by the paged pool's dedup stats; the
     # row-slotted path reads every chunk per request, so there hits == 0)
     flash_bytes_loaded: int = 0            # bytes actually read from flash
@@ -51,6 +73,10 @@ class ServeMetrics:
                                            # on a single device; under a
                                            # serving mesh the entries sum to
                                            # the single-device footprint)
+    # per-step measurement (fused paged path: bytes derived from the block
+    # tables actually staged; see repro.obs.compare)
+    n_decode_steps: int = 0
+    decode_kv_bytes_measured: int = 0
     # materializer-role accounting
     materialize_s: float = 0.0             # time inside materialize calls
     n_materialized_tokens: int = 0         # chunk tokens written to flash
@@ -94,3 +120,86 @@ class ServeMetrics:
     @property
     def p95_latency_s(self) -> float:
         return self.latency_quantile(0.95)
+
+    def ttft_quantile(self, q: float) -> float:
+        if not self.ttft_s:
+            return 0.0
+        return float(np.quantile(np.asarray(self.ttft_s), q))
+
+    @property
+    def p50_ttft_s(self) -> float:
+        return self.ttft_quantile(0.50)
+
+    @property
+    def p95_ttft_s(self) -> float:
+        return self.ttft_quantile(0.95)
+
+    # -- registry view -------------------------------------------------------
+
+    @classmethod
+    def from_registry(cls, reg, role: str = "both") -> "ServeMetrics":
+        """Compute the dataclass from a ``repro.obs.MetricsRegistry`` — the
+        only constructor the instrumented scheduler / roles use.  Field
+        semantics are unchanged; ``prefill_s`` is now compose + prefill
+        compute only (the satellite fix), with the full split in
+        ``phase_s``."""
+        phases = {k[:-2] if k.endswith("_s") else k: float(v)
+                  for k, v in reg.counters_under("phase.").items()}
+        m = cls(
+            role=role,
+            wall_s=float(reg.value("serve.wall_s")),
+            prefill_s=phases.get("compose", 0.0) + phases.get("prefill", 0.0),
+            decode_s=phases.get("decode_step", 0.0),
+            n_requests=int(reg.value("serve.requests")),
+            n_new_tokens=int(reg.value("serve.new_tokens")),
+            kv_bytes_loaded=int(reg.value("serve.kv_bytes_composed")),
+            latencies_s=[float(x)
+                         for x in reg.hist_values("request.latency_s")],
+            ttft_s=[float(x) for x in reg.hist_values("request.ttft_s")],
+            phase_s=phases,
+            flash_bytes_loaded=int(reg.value("serve.flash_bytes")),
+            flash_bytes_per_request=[
+                int(x) for x in reg.hist_values("request.flash_bytes")],
+            chunk_hits=int(reg.value("serve.chunk_hits")),
+            chunk_misses=int(reg.value("serve.chunk_misses")),
+            hbm_kv_bytes_resident=int(
+                reg.peak("pool.hbm_kv_bytes_resident")),
+            resident_chunks_peak=int(reg.peak("pool.resident_chunks")),
+            n_decode_steps=int(reg.value("decode.steps")),
+            decode_kv_bytes_measured=int(
+                reg.value("decode.kv_bytes_measured")),
+            materialize_s=float(reg.value("phase.materialize_s")),
+            n_materialized_tokens=int(reg.value("mat.tokens")),
+            n_materialize_jobs=int(reg.value("mat.jobs")),
+            flash_bytes_written=int(reg.value("mat.flash_bytes_written")),
+        )
+        return m
+
+    # -- serialization -------------------------------------------------------
+
+    def as_dict(self) -> dict:
+        d = asdict(self)
+        d["schema"] = METRICS_SCHEMA
+        # derived rates included read-only for results.jsonl consumers;
+        # from_dict drops them (they recompute from the fields)
+        d["derived"] = {
+            "tokens_per_s": self.tokens_per_s,
+            "decode_tokens_per_s": self.decode_tokens_per_s,
+            "materialize_tokens_per_s": self.materialize_tokens_per_s,
+            "chunk_hit_rate": self.chunk_hit_rate,
+            "p50_latency_s": self.p50_latency_s,
+            "p95_latency_s": self.p95_latency_s,
+            "p50_ttft_s": self.p50_ttft_s,
+            "p95_ttft_s": self.p95_ttft_s,
+        }
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeMetrics":
+        d = dict(d)
+        schema = d.pop("schema", None)
+        if schema != METRICS_SCHEMA:
+            raise ValueError(f"unknown ServeMetrics schema {schema!r} "
+                             f"(expected {METRICS_SCHEMA})")
+        d.pop("derived", None)
+        return cls(**d)

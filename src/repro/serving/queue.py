@@ -65,8 +65,13 @@ class HandoffRecord:
 class WorkQueue:
     """Thread-safe in-process work queue + generation registry."""
 
-    def __init__(self):
+    def __init__(self, tracer=None):
+        from repro.obs import NULL_TRACER
         self._lock = threading.Lock()
+        # queue events are instants (no duration): who posted/consumed what
+        # crosses the role boundary, stamped on whichever role's tracer is
+        # attached (assignable post-construction)
+        self.tracer = tracer or NULL_TRACER
         self._jobs: "deque[MaterializeJob]" = deque()
         self._queued_ids: set = set()      # dedup: one open job per chunk
         self._handoffs: "deque[HandoffRecord]" = deque()
@@ -82,7 +87,9 @@ class WorkQueue:
                 return False
             self._queued_ids.add(job.chunk_id)
             self._jobs.append(job)
-            return True
+        self.tracer.instant("queue_job", chunk=job.chunk_id,
+                            reason=job.reason)
+        return True
 
     def next_job(self) -> Optional[MaterializeJob]:
         with self._lock:
@@ -101,6 +108,8 @@ class WorkQueue:
     def submit_handoff(self, rec: HandoffRecord) -> None:
         with self._lock:
             self._handoffs.append(rec)
+        self.tracer.instant("queue_handoff", question=rec.question,
+                            chunks=len(rec.chunk_ids))
 
     def take_handoff(self, question: Optional[str] = None
                      ) -> Optional[HandoffRecord]:
@@ -146,6 +155,8 @@ class WorkQueue:
             cur = self._generations.get(chunk_id, -1)
             if generation > cur:
                 self._generations[chunk_id] = generation
+        self.tracer.instant("queue_publish", chunk=chunk_id,
+                            generation=generation)
 
     def generations_snapshot(self, chunk_ids) -> Dict[str, int]:
         with self._lock:

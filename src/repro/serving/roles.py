@@ -55,6 +55,7 @@ from repro.core.quantize import get_codec, quantize_kv
 from repro.data.tokenizer import SEP, ByteTokenizer
 from repro.kvstore.async_loader import AsyncKvLoader
 from repro.models.cache import RowAttnCache
+from repro.obs import MetricsRegistry, NULL_TRACER
 from repro.serving.metrics import ServeMetrics
 from repro.serving.queue import MaterializeJob, WorkQueue
 from repro.serving.sampling import greedy
@@ -102,6 +103,8 @@ class _DecodePlane:
     role = "both"
 
     def _init_decode_plane(self):
+        # span sink (DESIGN.md §15); constructors may have set one already
+        self.tracer = getattr(self, "tracer", None) or NULL_TRACER
         self._decode_fn = jax.jit(
             self._meshed(lambda p, c, t: self.model.decode_step(p, c, t)))
         self._subprefill_fns = {}
@@ -342,7 +345,10 @@ class _DecodePlane:
             else:
                 payload = payloads.get(cid)
                 if payload is None:
-                    payload = self.reader.get(cid)
+                    # reclaimed-while-queued fallback: a synchronous read on
+                    # the scheduler thread — worth seeing in a trace
+                    with self.tracer.span("flash_read", chunk=cid, sync=True):
+                        payload = self.reader.get(cid)
                 enc, _ = load_artifact_encoded(self.cfg, payload)
                 pool.insert(key, encoded=enc, nbytes=len(payload))
                 nbytes += len(payload)
@@ -522,7 +528,8 @@ class MaterializerWorker:
 
     def __init__(self, model, params, store, *, codec=None,
                  chunk_tokens: int = 256, queue: Optional[WorkQueue] = None,
-                 mesh=None, rules=None, place_params: bool = True):
+                 mesh=None, rules=None, place_params: bool = True,
+                 tracer=None):
         self.model = model
         self.cfg = model.cfg
         self.store = store
@@ -538,10 +545,18 @@ class MaterializerWorker:
         self.params = params
         self.codec = get_codec(codec)
         self.tok = ByteTokenizer()
+        self.tracer = tracer or NULL_TRACER
         self.materializer = Materializer(model, self.params, store,
-                                         codec=self.codec)
+                                         codec=self.codec,
+                                         tracer=self.tracer)
         self._chunks: Dict[str, Chunk] = {}
-        self.metrics = ServeMetrics(role="materialize")
+        # accounting goes through the obs registry; ``metrics`` below is a
+        # derived view (DESIGN.md §15)
+        self.registry = MetricsRegistry()
+
+    @property
+    def metrics(self) -> ServeMetrics:
+        return ServeMetrics.from_registry(self.registry, role="materialize")
 
     # -- chunk registry ----------------------------------------------------------
     def register_chunk(self, chunk: Chunk) -> None:
@@ -558,15 +573,18 @@ class MaterializerWorker:
         be lost to a crash between compute and rename."""
         self.register_chunk(chunk)
         t0 = time.perf_counter()
-        gen = (self.queue.next_generation(chunk.chunk_id)
-               if self.queue is not None else 0)
-        nbytes = self.materializer.ingest(chunk,
-                                          extra_meta={"generation": gen})
-        if self.queue is not None:
-            self.queue.publish(chunk.chunk_id, gen)
-        self.metrics.materialize_s += time.perf_counter() - t0
-        self.metrics.n_materialized_tokens += len(chunk)
-        self.metrics.flash_bytes_written += nbytes
+        with self.tracer.span("materialize", chunk=chunk.chunk_id,
+                              reason=reason):
+            gen = (self.queue.next_generation(chunk.chunk_id)
+                   if self.queue is not None else 0)
+            nbytes = self.materializer.ingest(chunk,
+                                              extra_meta={"generation": gen})
+            if self.queue is not None:
+                self.queue.publish(chunk.chunk_id, gen)
+        reg = self.registry
+        reg.counter("phase.materialize_s").inc(time.perf_counter() - t0)
+        reg.counter("mat.tokens").inc(len(chunk))
+        reg.counter("mat.flash_bytes_written").inc(nbytes)
         return gen
 
     def refresh(self, chunk_id: str) -> int:
@@ -609,7 +627,7 @@ class MaterializerWorker:
                     f"materializer has no registered chunk for job "
                     f"{job.chunk_id!r} (reason={job.reason}); ingest the "
                     f"document on the materializer role first")
-            self.metrics.n_materialize_jobs += 1
+            self.registry.counter("mat.jobs").inc()
             self.materialize(chunk, reason=job.reason)
             done += 1
         return done
@@ -638,7 +656,7 @@ class DecodeWorker(_DecodePlane):
                  chunk_tokens: int = 256, top_k: int = 2, reader=None,
                  queue: Optional[WorkQueue] = None, mesh=None, rules=None,
                  rerotate: bool = False, n_load_workers: int = 4,
-                 place_params: bool = True):
+                 place_params: bool = True, tracer=None):
         if model.cfg.family not in ("dense", "vlm", "moe"):
             raise ValueError("DecodeWorker serves attention-KV families "
                              f"only, got {model.cfg.family}")
@@ -660,7 +678,9 @@ class DecodeWorker(_DecodePlane):
         self.params = params
         self.codec = get_codec(codec)
         self.tok = ByteTokenizer()
-        self.loader = AsyncKvLoader(self.reader, n_workers=n_load_workers)
+        self.tracer = tracer or NULL_TRACER
+        self.loader = AsyncKvLoader(self.reader, n_workers=n_load_workers,
+                                    tracer=self.tracer)
         self.metrics = ServeMetrics(role="decode")
         self._init_decode_plane()
 

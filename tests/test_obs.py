@@ -1,0 +1,316 @@
+"""Observability plane (DESIGN.md §15): tracer invariants, registry
+semantics, Chrome export validity, metrics round-trip, and the instrumented
+scheduler's per-request phase accounting."""
+
+import json
+import tempfile
+import threading
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.kvstore import FlashKVStore
+from repro.models import build_model
+from repro.obs import (NULL_TRACER, Counter, MetricsRegistry, Tracer,
+                       arg_values, load_chrome, merge_chrome,
+                       validate_chrome)
+from repro.obs.trace import _NULL_SPAN
+from repro.serving import ContinuousScheduler, RagEngine
+from repro.serving.metrics import METRICS_SCHEMA, ServeMetrics
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+
+def test_spans_nest_and_time_with_injectable_clock():
+    t = [0.0]
+
+    def clock():
+        t[0] += 1.0
+        return t[0]
+
+    tr = Tracer(role="test", clock=clock)
+    with tr.span("outer", req=1):
+        with tr.span("inner", chunk="c0"):
+            tr.instant("tick")
+    spans = list(tr.spans())
+    # inner closes first (stack replay yields in close order)
+    assert [s[0] for s in spans] == ["inner", "outer"]
+    by_name = {s[0]: s for s in spans}
+    # deterministic clock: outer B=1, inner B=2, tick=3, inner E=4, outer E=5
+    assert by_name["inner"][2] == 2.0 and by_name["outer"][2] == 4.0
+    assert by_name["inner"][4] == {"chunk": "c0"}
+    assert tr.totals()["outer"] == (1, 4.0)
+
+
+def test_unbalanced_spans_raise():
+    tr = Tracer()
+    tr._record("B", "a", None)
+    tr._record("E", "b", None)
+    with pytest.raises(ValueError, match="unbalanced"):
+        list(tr.spans())
+    tr.clear()
+    tr._record("B", "a", None)
+    with pytest.raises(ValueError, match="unclosed"):
+        list(tr.spans())
+
+
+def test_threads_get_independent_span_stacks():
+    tr = Tracer()
+    barrier = threading.Barrier(8)     # all threads alive at once, so their
+                                       # idents are distinct and interleave
+
+    def worker(i):
+        with tr.span("outer", req=i):
+            barrier.wait()
+            with tr.span("inner", req=i):
+                pass
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    spans = list(tr.spans())           # must not raise despite interleaving
+    assert len(spans) == 16
+    assert len({s[3] for s in spans}) == 8   # eight distinct thread lanes
+
+
+def test_disabled_tracer_allocates_nothing():
+    tr = Tracer(enabled=False)
+    s1 = tr.span("a", req=1)
+    s2 = tr.span("b")
+    # the disabled fast path returns one shared module-level singleton
+    assert s1 is s2 is _NULL_SPAN
+    with s1:
+        tr.instant("x")
+    assert tr.events == []
+    assert NULL_TRACER.events == [] and not NULL_TRACER.enabled
+
+
+# ---------------------------------------------------------------------------
+# chrome export + merge
+# ---------------------------------------------------------------------------
+
+
+def test_chrome_export_is_valid_and_round_trips(tmp_path):
+    tr = Tracer(role="decode")
+    with tr.span("flash_read", chunk="c1"):
+        tr.instant("arrive", req=0)
+    path = tmp_path / "t.trace.json"
+    doc = tr.to_chrome(path)
+    stats = validate_chrome(doc)
+    assert stats["spans"] == 1 and stats["events"] == 4  # M + B + i + E
+    loaded = load_chrome(path)
+    assert validate_chrome(loaded) == stats
+    json.dumps(loaded)                  # plain-JSON serializable
+    assert arg_values(loaded, "chunk") == {"c1"}
+    assert arg_values(loaded, "req") == {0}
+
+
+def test_validate_chrome_rejects_malformed():
+    ok = {"name": "s", "ph": "B", "pid": 1, "tid": 1, "ts": 0.0}
+    with pytest.raises(ValueError, match="not a list"):
+        validate_chrome({})
+    with pytest.raises(ValueError, match="without matching B"):
+        validate_chrome({"traceEvents": [dict(ok, ph="E")]})
+    with pytest.raises(ValueError, match="unclosed"):
+        validate_chrome({"traceEvents": [ok]})
+    with pytest.raises(ValueError, match="must nest"):
+        validate_chrome({"traceEvents": [
+            ok, dict(ok, name="other", ts=1.0),
+            dict(ok, ph="E", ts=2.0),
+            dict(ok, name="other", ph="E", ts=3.0)]})
+    with pytest.raises(ValueError, match="unknown phase"):
+        validate_chrome({"traceEvents": [dict(ok, ph="Z")]})
+
+
+def test_merge_chrome_gives_each_role_a_pid_lane():
+    a, b = Tracer(role="materialize"), Tracer(role="decode")
+    with a.span("materialize", chunk="c9"):
+        pass
+    with b.span("flash_read", chunk="c9"):
+        pass
+    merged = merge_chrome(a.to_chrome_dict(), b.to_chrome_dict())
+    validate_chrome(merged)
+    assert merged["otherData"]["roles"] == ["materialize", "decode"]
+    assert {ev["pid"] for ev in merged["traceEvents"]} == {1, 2}
+    assert arg_values(merged, "chunk") == {"c9"}  # the cross-role join key
+
+
+def test_jsonl_export(tmp_path):
+    tr = Tracer(role="serve")
+    with tr.span("s"):
+        pass
+    p = tmp_path / "t.jsonl"
+    tr.to_jsonl(p)
+    lines = [json.loads(l) for l in p.read_text().splitlines()]
+    assert lines[0] == {"schema": 1, "role": "serve"}
+    assert [l["ph"] for l in lines[1:]] == ["B", "E"]
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_counters_are_monotone():
+    reg = MetricsRegistry()
+    c = reg.counter("serve.requests")
+    c.inc(3)
+    c.inc(0)
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert reg.value("serve.requests") == 3
+    assert isinstance(c, Counter)
+
+
+def test_gauge_tracks_peak_and_hist_quantiles():
+    reg = MetricsRegistry()
+    g = reg.gauge("pool.hbm_kv_bytes_resident")
+    g.set(10)
+    g.set(4)
+    assert reg.value("pool.hbm_kv_bytes_resident") == 4
+    assert reg.peak("pool.hbm_kv_bytes_resident") == 10
+    h = reg.hist("request.latency_s")
+    for v in [5.0, 1.0, 3.0, 2.0, 4.0]:
+        h.observe(v)
+    assert h.quantile(0.5) == 3.0 and h.quantile(0.95) == 5.0
+    assert reg.hist_values("request.latency_s") == [5.0, 1.0, 3.0, 2.0, 4.0]
+
+
+def test_registry_rejects_kind_collisions_and_strips_prefixes():
+    reg = MetricsRegistry()
+    reg.counter("phase.compose_s").inc(2.5)
+    reg.counter("phase.prefill_s").inc(1.5)
+    with pytest.raises(TypeError):
+        reg.gauge("phase.compose_s")
+    assert reg.counters_under("phase.") == {"compose_s": 2.5,
+                                            "prefill_s": 1.5}
+    assert reg.value("never.written") == 0
+
+
+# ---------------------------------------------------------------------------
+# metrics view + round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_servemetrics_dict_round_trip_and_schema_gate():
+    m = ServeMetrics(role="decode", wall_s=2.0, n_new_tokens=10,
+                     latencies_s=[0.5, 1.0], ttft_s=[0.1, 0.2],
+                     phase_s={"compose": 0.3, "prefill": 0.2})
+    d = m.as_dict()
+    assert d["schema"] == METRICS_SCHEMA
+    assert d["derived"]["tokens_per_s"] == pytest.approx(5.0)
+    assert d["derived"]["p95_ttft_s"] == pytest.approx(
+        m.p95_ttft_s)
+    json.dumps(d)                        # results.jsonl-serializable
+    back = ServeMetrics.from_dict(json.loads(json.dumps(d)))
+    assert back == m
+    with pytest.raises(ValueError, match="schema"):
+        ServeMetrics.from_dict(dict(d, schema=99))
+
+
+def test_servemetrics_from_registry_prefill_split():
+    """The satellite fix: ``prefill_s`` is compose + prefill COMPUTE only;
+    admission bookkeeping and flash-read wait live in ``phase_s``."""
+    reg = MetricsRegistry()
+    reg.counter("phase.compose_s").inc(0.3)
+    reg.counter("phase.prefill_s").inc(0.2)
+    reg.counter("phase.load_stall_s").inc(0.4)
+    reg.counter("phase.admission_s").inc(0.1)
+    reg.counter("serve.requests").inc(2)
+    reg.gauge("serve.wall_s").set(1.5)
+    m = ServeMetrics.from_registry(reg, role="both")
+    assert m.prefill_s == pytest.approx(0.5)
+    assert m.phase_s["load_stall"] == pytest.approx(0.4)
+    assert m.phase_s["admission"] == pytest.approx(0.1)
+    assert m.n_requests == 2 and m.wall_s == 1.5
+
+
+# ---------------------------------------------------------------------------
+# instrumented scheduler end to end
+# ---------------------------------------------------------------------------
+
+CORPUS = {
+    "d1": "the amber gate stands in hall nine beyond the long stair. " * 4,
+    "d2": "the cedar door opens with a brass song at dusk hour. " * 4,
+}
+QUESTIONS = ["where is the amber gate?", "where is the cedar door?"]
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One traced paged run; every invariant test reads off it."""
+    cfg = get_config("smollm-135m").reduced(vocab_size=300)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    with tempfile.TemporaryDirectory() as d:
+        eng = RagEngine(model, params, FlashKVStore(d), chunk_tokens=48,
+                        top_k=2)
+        for doc, text in CORPUS.items():
+            eng.ingest(doc, text)
+        qs = [QUESTIONS[i % 2] for i in range(4)]
+        tracer = Tracer(role="serve")
+        sched = ContinuousScheduler(eng, max_slots=2, paged=True,
+                                    tracer=tracer)
+        sched.run(qs, max_new_tokens=4)              # warm jit
+        tracer.clear()
+        ans, m = sched.run(qs, max_new_tokens=4)
+        sched.shutdown()
+        yield ans, m, sched, tracer
+
+
+def test_run_metrics_have_ttft_and_phases(served):
+    ans, m, sched, _ = served
+    assert m.n_requests == 4 and len(m.ttft_s) == 4
+    for ttft, lat in zip(sorted(m.ttft_s), sorted(m.latencies_s)):
+        assert 0 < ttft <= lat + 1e-6
+    assert m.p95_ttft_s >= m.p50_ttft_s > 0
+    # the split phases exist and prefill_s means compute only
+    for phase in ("admission", "compose", "prefill", "decode_step"):
+        assert phase in m.phase_s, sorted(m.phase_s)
+    assert m.prefill_s == pytest.approx(
+        m.phase_s["compose"] + m.phase_s["prefill"])
+    assert m.n_decode_steps > 0 and m.decode_kv_bytes_measured > 0
+
+
+def test_per_request_phase_sum_approximates_latency(served):
+    """Per request, queue wait + load stall + compose + prefill + decode
+    share must sum to ≈ the request's latency: nothing a request lived
+    through escapes phase attribution (loop bookkeeping between decode
+    steps is the only un-attributed slack)."""
+    _, m, sched, _ = served
+    for r, lat in zip(sched.last_records, m.latencies_s):
+        assert r.finish_s is not None
+        assert r.phase_sum_s <= lat * 1.05 + 0.02, (
+            f"phases over-count: {r.phase_sum_s:.4f}s vs latency {lat:.4f}s")
+        assert r.phase_sum_s >= lat * 0.5, (
+            f"phases under-count: {r.phase_sum_s:.4f}s vs latency {lat:.4f}s")
+
+
+def test_trace_covers_lifecycle_and_exports_valid(served, tmp_path):
+    _, m, _, tracer = served
+    totals = tracer.totals()             # also asserts strict nesting
+    for name in ("admit", "compose", "prefill", "decode_step", "flash_read",
+                 "pool_insert"):
+        assert name in totals, (name, sorted(totals))
+    doc = tracer.to_chrome(tmp_path / "serve.trace.json")
+    validate_chrome(doc)
+    assert arg_values(doc, "req") == {0, 1, 2, 3}
+    names = {ev["name"] for ev in doc["traceEvents"]}
+    assert {"arrive", "first_token", "finish"} <= names
+
+
+def test_tracing_does_not_change_answers(served):
+    """Spans are pure observers: a traced run's answers match an untraced
+    scheduler over the same engine state (fixture ran traced; compare
+    against a fresh untraced run)."""
+    ans, _, sched, _ = served
+    qs = [QUESTIONS[i % 2] for i in range(4)]
+    untraced = ContinuousScheduler(sched.engine, max_slots=2, paged=True)
+    ans2, _ = untraced.run(qs, max_new_tokens=4)
+    untraced.shutdown()
+    assert ans == ans2
