@@ -32,7 +32,7 @@ from __future__ import annotations
 import tempfile
 import time
 
-from benchmarks.common import DOCS, make_engine, row
+from benchmarks.common import DOCS, emit_result, make_engine, row
 from repro.analysis.roofline import paged_step_kv_bytes_for_pool
 from repro.serving import ContinuousScheduler
 
@@ -93,6 +93,10 @@ def run(n_requests: int = 16, slots: int = 4, max_new: int = 6,
             out.append(row(f"fused_decode/{codec}/fused_tokens_per_s",
                            mf.tokens_per_s,
                            f"wall_s={wf:.2f};answers_exact=True"))
+            emit_result("fused_decode", f"three_phase-{codec}", metrics=m3,
+                        wall_s=w3)
+            emit_result("fused_decode", f"fused-{codec}", metrics=mf,
+                        wall_s=wf, answers_exact=True)
             _roofline_rows(eng, slots, codec, out)
     return out
 

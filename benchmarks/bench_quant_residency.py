@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import DOCS, make_engine, row
+from benchmarks.common import DOCS, emit_result, make_engine, row
 from repro.core.quantize import quantize_kv
 from repro.kernels import ref
 from repro.kernels.paged_decode_quant import paged_decode_quant
@@ -139,6 +139,10 @@ def run(n_requests: int = 32, max_new: int = 4, seed: int = 0,
                 f"budget={budget};resident_chunks={m.resident_chunks_peak};"
                 f"hit_rate={m.chunk_hit_rate:.2f};"
                 f"tokens_per_s={m.tokens_per_s:.1f}"))
+            emit_result("quant_residency", codec, metrics=m,
+                        flash_bytes=int(flash[codec]), budget_bytes=budget,
+                        resident_chunks_peak=m.resident_chunks_peak,
+                        chunk_hit_rate=m.chunk_hit_rate)
         flash_ratio = flash["int8"] / max(flash["bf16"], 1)
         chunks_ratio = (metrics["int8"].resident_chunks_peak
                         / max(metrics["bf16"].resident_chunks_peak, 1))
@@ -148,6 +152,9 @@ def run(n_requests: int = 32, max_new: int = 4, seed: int = 0,
             f"stored_ratio={stored['int8'] / max(stored['bf16'], 1):.3f};"
             f"hit_rate_bf16={metrics['bf16'].chunk_hit_rate:.2f};"
             f"hit_rate_int8={metrics['int8'].chunk_hit_rate:.2f}"))
+        emit_result("quant_residency", "int8_vs_bf16",
+                    flash_ratio=flash_ratio, chunks_ratio=chunks_ratio,
+                    stored_ratio=stored["int8"] / max(stored["bf16"], 1))
         # acceptance: equal budget, int8 must halve flash traffic and
         # near-double residency (the hit-rate gain follows from the latter)
         assert flash_ratio <= 0.55, (

@@ -1,0 +1,288 @@
+"""Streaming decode-under-load admission (DESIGN.md §16).
+
+A cold request's admission used to be all-or-nothing: wait for every chunk
+artifact to finish its flash read, then compose + prefill in one burst. With
+``ContinuousScheduler(streaming=True)`` the per-chunk reads land block by
+block — each block extends the chunk's resident frontier in the pool and
+folds into the request's online-softmax carry between decode steps — so by
+the time the last page lands, admission is just the finalize step and the
+first token comes out ~the link time, not link + compose + prefill.
+
+Four phases, all asserted:
+
+* **TTFT** — one cold request per run, served over a *shared-link*
+  ``SimulatedReader`` whose bandwidth is calibrated against this machine's
+  measured baseline admission window (``LINK_FRAC``), so the equal-bandwidth
+  comparison is meaningful on any host. Two bounds:
+
+  - the analytic join (``streaming_ttft_model`` fed the MEASURED link,
+    compose, prefill and finalize) must predict streamed TTFT <=
+    ``TTFT_RATIO_BOUND_MODEL`` x baseline — this is the paper-level claim,
+    with the fold riding the link's shadow and only finalize left serial;
+  - the raw wall-clock median must come in <= ``TTFT_RATIO_BOUND_MEASURED``
+    x baseline. The measured bound is looser than the model's because a
+    single-core host serializes the fold against the link simulator's
+    sleeps and adds a fixed ~20-30 ms thread-handoff + admit tail after
+    the last block that no amount of link time hides; on multi-core hosts
+    the measured ratio converges toward the model's.
+* **answers** — the streamed run's answers are IDENTICAL to the
+  non-streaming paged scheduler's under both codecs (bf16: the carry fold is
+  greedy-token-exact vs the all-at-once prefill; int8: both paths decode the
+  same stored quantized pages, which bounds any drift below an argmax flip
+  on this workload).
+* **host tier** — a deliberately tight pool with a host-DRAM demotion tier:
+  reclaimed refs-0 pages pack into host bytes, and a later request for the
+  demoted chunk re-promotes with ZERO flash bytes (``promotions >= 1`` and
+  the repeat request's flash attribution is 0).
+* **overlap** — with spaced arrivals, later requests' flash reads run in
+  earlier requests' decode shadow: the trace-derived
+  ``load_overlap_frac`` must be > 0.
+
+Each phase appends machine-readable records to results.jsonl
+(``emit_result``), including the ``streaming_ttft_model`` analytic join and
+the PR-8 ``predicted_vs_measured`` per-step KV-bytes join, so
+``analysis/report.py --serving`` renders this bench alongside the other
+serving suites.
+"""
+
+from __future__ import annotations
+
+import sys
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import QUESTIONS, emit_result, make_engine, row
+from repro.analysis.roofline import streaming_ttft_model
+from repro.core.economics import SsdSpec
+from repro.kvstore import SimulatedReader
+from repro.obs import Tracer, predicted_vs_measured
+from repro.serving import ContinuousScheduler, RagEngine
+
+BLOCK = 64               # == chunk_tokens: whole-token-axis blocks coalesce
+                         # to one range read per tensor (streaming.py)
+TTFT_RATIO_BOUND_MODEL = 0.6
+TTFT_RATIO_BOUND_MEASURED = 0.9
+TTFT_TOP_K = 24          # TTFT probes retrieve wide: admission work scales
+                         # with k while the streamed finalize step does not,
+                         # so this is the compose-dominated regime streaming
+                         # admission is for (and the finalize floor — fixed
+                         # dispatch overhead on this toy model — stays small
+                         # against the admission window)
+LINK_FRAC = 1.0          # calibrated link time / baseline admission window:
+                         # ~1 so the fold (which shares this host's core
+                         # with the link simulator) keeps pace with arrival
+                         # while the link still isn't the whole TTFT
+HOST_TIER_MB = 8
+
+
+def _clone_engine(base, codec: str, reader=None, top_k=None) -> RagEngine:
+    """Same store/retrieval state, fresh reader (each arm gets its own
+    simulated flash link) and optionally a wider retrieval fan-out."""
+    eng = RagEngine(base.model, base.params, base.store, mode="matkv",
+                    chunk_tokens=base.chunk_tokens,
+                    top_k=top_k or base.top_k, codec=codec, reader=reader)
+    eng._chunks, eng.vdb = base._chunks, base.vdb
+    return eng
+
+
+def _serve(eng, qs, max_new, *, streaming, arrivals=None, slots=2,
+           tracer=None, workers=2, **kw):
+    # two loader workers: enough to keep the shared link saturated while
+    # arrival order still tracks submission (= retrieval) order, which the
+    # strict in-order carry fold wants
+    sched = ContinuousScheduler(eng, max_slots=slots, paged=True,
+                                block_size=BLOCK, streaming=streaming,
+                                tracer=tracer, n_load_workers=workers, **kw)
+    answers, m = sched.run(qs, max_new_tokens=max_new, arrivals_s=arrivals)
+    sched.shutdown()
+    return answers, m, sched
+
+
+def _ttft_phase(base, out, max_new: int, n_probes: int):
+    """Calibrate the link against the measured all-or-nothing admission
+    window, then race the two admission modes over identical shared links.
+    One cold request per run (fresh pool every ``run()``), median over
+    repeated disjoint-doc probes."""
+    qs = QUESTIONS[:n_probes]
+    # unthrottled baseline: measures this machine's admission window and the
+    # cold payload bytes, and warms every jitted shape both arms will hit
+    eng0 = _clone_engine(base, "bf16", top_k=TTFT_TOP_K)
+    for q in qs:                                       # compile every shape
+        _serve(eng0, [q], max_new, streaming=False)
+        _serve(eng0, [q], max_new, streaming=True)
+    w0, fins, payload = [], [], 0
+    for q in qs:
+        _, m, _ = _serve(eng0, [q], max_new, streaming=False)
+        # the admission window is the hideable work: compose + prefill.
+        # Phase timings are much stabler than end-to-end TTFT here, and
+        # taking the max biases the link long — an undersized link starves
+        # the fold (which shares this core) and stalls EVERY streamed run,
+        # while an oversized one just shifts both arms equally
+        w0.append((m.phase_s.get("compose", 0.0),
+                   m.phase_s.get("prefill", 0.0)))
+        payload = max(payload, m.flash_bytes_loaded)
+        # the streamed arm's finalize (its "prefill" phase) measured the
+        # same way: unthrottled and warm, so the analytic model below is
+        # fed clean CPU timings rather than link-contended ones
+        _, m, _ = _serve(eng0, [q], max_new, streaming=True)
+        fins.append(m.phase_s.get("prefill", 0.0))
+    compose_s = float(np.median([c for c, _ in w0]))
+    prefill_s = float(np.median([p for _, p in w0]))
+    finalize_s = float(np.median(fins))
+    window = float(np.max([c + p for c, p in w0]))
+    gbps = payload / (LINK_FRAC * window) / 1e9
+    spec = SsdSpec("calibrated", 0.1, gbps, 7.0)
+
+    ttft = {}
+    for name, streaming in (("baseline", False), ("streamed", True)):
+        eng = _clone_engine(base, "bf16", top_k=TTFT_TOP_K,
+                            reader=SimulatedReader(base.store, spec,
+                                                   shared_link=True))
+        for q in qs:                                   # warm this clone
+            _serve(eng, [q], max_new, streaming=streaming)
+        vals = []
+        for q in qs:
+            for _ in range(2):
+                _, m, sched = _serve(eng, [q], max_new, streaming=streaming)
+                vals.append(m.ttft_s[0])
+        ttft[name] = float(np.median(vals))
+        out.append(row(f"streaming_admission/{name}/ttft_us",
+                       ttft[name] * 1e6,
+                       f"link_gbps={gbps:.4f};payload={payload}"))
+        pm = predicted_vs_measured(sched.last_registry, pool=sched.last_pool,
+                                   buf_size=sched.last_buf_size,
+                                   expected_row_tokens=TTFT_TOP_K
+                                   * base.chunk_tokens + max_new)
+        emit_result("streaming_admission", name, metrics=m,
+                    ttft_s=ttft[name], link_gbps=gbps, **pm)
+
+    ratio = ttft["streamed"] / ttft["baseline"]
+    # the analytic side of the claim: same payload/link, with the
+    # compose/prefill/finalize medians measured warm and unthrottled above
+    # (the streamed arm's admission-side compose rides the link's shadow,
+    # leaving finalize as its only serial admission work)
+    model = streaming_ttft_model(payload, gbps, compose_s=compose_s,
+                                 prefill_s=prefill_s,
+                                 finalize_s=finalize_s)
+    out.append(row("streaming_admission/ttft_ratio", 0.0,
+                   f"measured={ratio:.3f};"
+                   f"bound={TTFT_RATIO_BOUND_MEASURED};"
+                   f"predicted={model['predicted_ratio']:.3f};"
+                   f"model_bound={TTFT_RATIO_BOUND_MODEL}"))
+    emit_result("streaming_admission", "ttft_ratio", measured_ratio=ratio,
+                bound=TTFT_RATIO_BOUND_MEASURED,
+                model_bound=TTFT_RATIO_BOUND_MODEL, **model)
+    assert model["predicted_ratio"] <= TTFT_RATIO_BOUND_MODEL, (
+        f"analytic streamed/baseline TTFT ratio is "
+        f"{model['predicted_ratio']:.3f} (bound {TTFT_RATIO_BOUND_MODEL}) "
+        f"at the measured link/compose/prefill/finalize — the finalize "
+        f"step grew until streaming stopped paying for itself")
+    assert ratio <= TTFT_RATIO_BOUND_MEASURED, (
+        f"streamed cold-request TTFT is {ratio:.3f}x the all-or-nothing "
+        f"baseline at equal flash bandwidth "
+        f"(bound {TTFT_RATIO_BOUND_MEASURED}) — block-granular admission "
+        f"stopped hiding the compose/prefill work")
+    return ratio
+
+
+def _answers_phase(tmp, out, codecs, max_new: int):
+    for codec in codecs:
+        eng = make_engine("matkv", f"{tmp}/ans-{codec}", codec=codec)
+        a0, m0, _ = _serve(eng, QUESTIONS, max_new, streaming=False)
+        a1, m1, s1 = _serve(eng, QUESTIONS, max_new, streaming=True)
+        assert a0 == a1, (
+            f"streamed admission changed answers under codec={codec} — the "
+            f"online-softmax carry fold must be token-exact vs the "
+            f"all-at-once prefill")
+        n_str = int(s1.last_registry.value("serve.streamed_admits"))
+        out.append(row(f"streaming_admission/{codec}/answers", 0.0,
+                       f"identical=True;streamed_admits={n_str}"))
+        emit_result("streaming_admission", f"answers-{codec}", metrics=m1,
+                    answers_identical=True, streamed_admits=n_str)
+
+
+def _host_tier_phase(tmp, out, max_new: int):
+    """Tight pool + host tier, one slot: by the time the later requests
+    serve, the first doc's pages were reclaimed and demoted to host DRAM;
+    the repeat request re-promotes them with zero flash bytes."""
+    eng = make_engine("matkv", f"{tmp}/host", codec="bf16")
+    qs = QUESTIONS[:3] + [QUESTIONS[0]]
+    # fix the row geometry so the pool can be sized exactly: one active
+    # row + one request's chunk pages + a single spare block. Serving the
+    # next request then MUST reclaim the previous one's refs-0 pages,
+    # which is what routes them through the demotion tier
+    buf = -(-(eng.top_k * eng.chunk_tokens + 64 + max_new + 8) // 64) * 64
+    per_row = -(-buf // BLOCK)
+    chunk_blocks = -(-eng.chunk_tokens // BLOCK)
+    pool_blocks = per_row + eng.top_k * chunk_blocks + 1
+    _, m, sched = _serve(eng, qs, max_new, streaming=True, slots=1,
+                         pool_blocks=pool_blocks, buf_size=buf,
+                         host_tier=HOST_TIER_MB * 2**20)
+    stats = sched.last_pool.stats
+    repeat_flash = m.flash_bytes_per_request[-1]
+    out.append(row("streaming_admission/host_tier", 0.0,
+                   f"demotions={stats.demotions};"
+                   f"promotions={stats.promotions};"
+                   f"repeat_flash_bytes={repeat_flash}"))
+    emit_result("streaming_admission", "host_tier", metrics=m,
+                demotions=stats.demotions, promotions=stats.promotions,
+                repeat_flash_bytes=int(repeat_flash),
+                pool_blocks=pool_blocks)
+    assert stats.promotions >= 1, (
+        f"host tier never re-promoted (demotions={stats.demotions}): the "
+        f"pool was sized too large to reclaim, or demotion broke")
+    assert repeat_flash == 0, (
+        f"re-requesting a demoted chunk read {repeat_flash} flash bytes — "
+        f"host-tier re-promotion must skip flash entirely")
+
+
+def _overlap_phase(base, out, max_new: int):
+    """Spaced arrivals: the later requests' block streams run while the
+    first request decodes, so part of the flash-read wall time is hidden
+    behind decode_step spans."""
+    spec = SsdSpec("overlap", 0.1, 0.002, 7.0)       # slow link: reads last
+    eng = _clone_engine(base, "bf16",
+                        reader=SimulatedReader(base.store, spec,
+                                               shared_link=True))
+    qs = QUESTIONS[:4]
+    _serve(eng, qs[:1], max_new, streaming=True)     # warm
+    tr = Tracer(role="bench")
+    arrivals = [0.0, 0.03, 0.06, 0.09]
+    _, m, _ = _serve(eng, qs, max_new, streaming=True, arrivals=arrivals,
+                     tracer=tr)
+    out.append(row("streaming_admission/load_overlap_frac",
+                   m.load_overlap_frac,
+                   f"n_flash_reads={len(m.flash_read_s)}"))
+    emit_result("streaming_admission", "overlap", metrics=m,
+                load_overlap_frac=m.load_overlap_frac)
+    assert m.load_overlap_frac > 0.0, (
+        "no flash-read time overlapped decode steps under spaced arrivals "
+        "— the streaming pump stopped hiding loads behind decode")
+
+
+def run(max_new: int = 8, smoke: bool = False):
+    out = []
+    n_probes = 2 if smoke else 3
+    codecs = ["bf16"] if smoke else ["bf16", "int8"]
+    if smoke:
+        max_new = 4
+    # shrink the GIL switch interval for the duration: the link simulator,
+    # loader workers and the fold all share one core here, and the default
+    # 5 ms slice is the same order as a block's link time
+    prev_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.0005)
+    try:
+        with tempfile.TemporaryDirectory() as d:
+            base = make_engine("matkv", f"{d}/base", codec="bf16")
+            _ttft_phase(base, out, max_new, n_probes)
+            _answers_phase(d, out, codecs, max_new)
+            _host_tier_phase(d, out, max_new)
+            _overlap_phase(base, out, max_new)
+    finally:
+        sys.setswitchinterval(prev_switch)
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

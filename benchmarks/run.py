@@ -33,6 +33,7 @@ SUITES = {
     "tp_serving": "benchmarks.bench_tp_serving",
     "disagg": "benchmarks.bench_disagg",
     "fig7_overlap": "benchmarks.bench_overlap",
+    "streaming_admission": "benchmarks.bench_streaming_admission",
     "table45_power": "benchmarks.bench_power",
     "fig8_lengths": "benchmarks.bench_lengths",
     "fig9_model_scaling": "benchmarks.bench_model_scaling",

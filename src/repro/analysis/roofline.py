@@ -239,6 +239,44 @@ def paged_step_kv_bytes_for_pool(pool, row_lengths, *, buf_size: int,
         fused=fused)
 
 
+def streaming_ttft_model(payload_bytes: int, read_gbps: float, *,
+                         compose_s: float, prefill_s: float,
+                         fold_s: float = 0.0,
+                         finalize_s: float) -> dict:
+    """Analytic TTFT for one cold request, baseline vs streamed admission
+    (DESIGN.md §16) — the predicted side of the bench's
+    predicted-vs-measured join.
+
+    Baseline (all-or-nothing): the request waits for the FULL artifact
+    payload on the flash link, then composes the document KV into its row
+    and runs the prompt prefill:
+
+        baseline = link_s + compose_s + prefill_s
+
+    Streamed: blocks fold into the online-softmax carry as they land, so
+    the admission-side work rides in the link's shadow; what remains on
+    the critical path after the last block is the finalize step (the
+    streamed prompt prefill against the completed carry):
+
+        streaming = max(link_s, fold_s) + finalize_s
+
+    ``fold_s`` is the total per-block fold compute (usually link-dominated
+    and therefore free); ``finalize_s`` is the measured streamed-prefill
+    step. All times in seconds, ``read_gbps`` in GB/s (1e9 bytes).
+    """
+    link_s = payload_bytes / (read_gbps * 1e9) if read_gbps else 0.0
+    baseline = link_s + compose_s + prefill_s
+    streaming = max(link_s, fold_s) + finalize_s
+    return {
+        "payload_bytes": int(payload_bytes),
+        "read_gbps": float(read_gbps),
+        "link_s": link_s,
+        "baseline_ttft_s": baseline,
+        "streaming_ttft_s": streaming,
+        "predicted_ratio": streaming / baseline if baseline else 0.0,
+    }
+
+
 def analyze(arch: str, shape, mesh_name: str, chips: int, compiled,
             cfg) -> Roofline:
     cost = compiled.cost_analysis()

@@ -17,11 +17,13 @@ each other (their KVs are already frozen) — the paper's key accuracy insight.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.streaming_prefix import carry_init, carry_update
 from repro.models.cache import (AttnCache, EncDecCache, HybridCache,
                                 RowAttnCache, SSMCache, init_attn_cache)
 from repro.models.rope import rerotate_keys
@@ -128,6 +130,54 @@ def compose_attn_cache_rows(cfg, row_artifacts, buf_size: int,
         v=jnp.concatenate(row_vs, axis=1),
         slot_pos=jnp.stack(row_pos),
         length=jnp.asarray(row_len, jnp.int32))
+
+
+@dataclass
+class StreamingPrefix:
+    """Streamed composition state for one row (streaming admission, §16).
+
+    Holds the row's roped layer-0 prompt queries ``q0`` and the
+    flash-attention (m, l, acc) carry over however much of the document
+    prefix has landed. The scheduler folds blocks *in retrieval-token
+    order* as the loader delivers them (``update``), then hands the carry
+    to ``decode_step_rows_streamed`` for the finalize step — so the
+    prompt-over-document attention work is already done by the time the
+    last page lands, and the first token still matches the all-at-once
+    composition (the carry restates ``_flash_fwd``'s exact online body).
+    """
+    q0: jnp.ndarray          # (1, Sq, H, hd) — layer-0 prompt queries, roped
+    m: jnp.ndarray           # (1, KV, G, Sq, 1) f32 running max
+    l: jnp.ndarray           # (1, KV, G, Sq, 1) f32 running denominator
+    acc: jnp.ndarray         # (1, Sq, KV, G, hd) f32 weighted-V accumulator
+    n_seen: int = 0          # document tokens folded so far
+    bucket: int = 64         # pad widths to multiples of this (retrace bound)
+
+    @classmethod
+    def begin(cls, q0: jnp.ndarray, n_kv_heads: int,
+              bucket: int = 64) -> "StreamingPrefix":
+        b, sq, h, hd = q0.shape
+        m, l, acc = carry_init(b, sq, h, n_kv_heads, hd)
+        return cls(q0=q0, m=m, l=l, acc=acc, n_seen=0, bucket=max(1, bucket))
+
+    def update(self, k_blk, v_blk) -> int:
+        """Fold one decoded document block (k/v ``(n, KV, hd)`` or batched
+        ``(1, n, KV, hd)``), padded to a bucket width so the jitted update
+        retraces once per bucket rather than once per arrival width.
+        Returns the new folded-token count."""
+        k = jnp.asarray(k_blk).astype(self.q0.dtype)
+        v = jnp.asarray(v_blk).astype(self.q0.dtype)
+        if k.ndim == 3:
+            k, v = k[None], v[None]
+        n = k.shape[1]
+        w = -(-n // self.bucket) * self.bucket
+        if w != n:
+            z = jnp.zeros((k.shape[0], w - n) + k.shape[2:], k.dtype)
+            k = jnp.concatenate([k, z], axis=1)
+            v = jnp.concatenate([v, z], axis=1)
+        self.m, self.l, self.acc = carry_update(
+            self.m, self.l, self.acc, self.q0, k, v, n)
+        self.n_seen += int(n)
+        return self.n_seen
 
 
 def compose_ssm_cache(cfg, artifact, n_tokens: int) -> SSMCache:

@@ -1,0 +1,87 @@
+"""Online-softmax carry over an *arriving* KV prefix (streaming admission,
+DESIGN.md §16).
+
+A cold request's document KV lands block-by-block off flash. Its layer-0
+prompt queries depend only on the prompt tokens (embed -> ln1 -> Wq -> RoPE),
+so layer-0 prompt-over-document attention can run *incrementally*: one
+flash-attention-style (m, l, acc) carry update per arriving block, in arrival
+order, while the loader races the tail pages. These ops restate the exact
+online body of ``models.attention._flash_fwd`` — same score einsum and scale,
+same ``m0 = -1e29`` init, same ``NEG_INF`` masking, same f32 accumulators —
+so folding the blocks one at a time computes the same softmax the all-at-once
+path computes, up to f32 summation order. That is what makes the first
+sampled token of a streamed admission match the all-or-nothing path (bf16
+greedy-identical; int8 inside the shared parity bound).
+
+Document blocks need no position mask: every document token is causally
+visible to every prompt query (order positions 0..n_doc-1 < n_doc..), and
+block *padding* is handled by a validity mask whose ``exp`` contributes an
+exact 0.0. Callers pad arriving blocks to bucketed widths (multiples of the
+pool block size) so ``carry_update`` retraces once per bucket, not per
+arrival width.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30     # masked score (matches models.attention.NEG_INF)
+M_INIT = -1e29      # running-max init (matches _flash_fwd's m0)
+
+
+def carry_init(b: int, sq: int, n_heads: int, n_kv_heads: int, hd: int):
+    """Fresh (m, l, acc) for ``sq`` prompt queries — _flash_fwd's carry init."""
+    g = n_heads // n_kv_heads
+    m0 = jnp.full((b, n_kv_heads, g, sq, 1), M_INIT, jnp.float32)
+    l0 = jnp.zeros((b, n_kv_heads, g, sq, 1), jnp.float32)
+    acc0 = jnp.zeros((b, sq, n_kv_heads, g, hd), jnp.float32)
+    return m0, l0, acc0
+
+
+def carry_block(m, l, acc, qr, k_blk, v_blk, mask=None):
+    """One online-softmax block fold (the ``_flash_fwd`` scan body).
+
+    qr (B,Sq,KV,G,hd) pre-grouped queries, k/v_blk (B,W,KV,hd),
+    mask (B,Sq,W) bool or None (None = every slot valid and visible).
+    Pure jnp so larger jitted functions (the streamed decode step) can
+    inline it; ``carry_update`` below is the jitted eager-path wrapper.
+    """
+    scale = qr.shape[-1] ** -0.5
+    s = jnp.einsum("bqcgd,bscd->bcgqs", qr, k_blk,
+                   preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m - m_new)               # rescale of old accumulators
+    p = jnp.exp(s - m_new)
+    l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jnp.einsum("bcgqs,bscd->bqcgd", p, v_blk,
+                    preferred_element_type=jnp.float32)
+    return m_new, l_new, acc * alpha.transpose(0, 3, 1, 2, 4) + pv
+
+
+@jax.jit
+def carry_update(m, l, acc, q, k_blk, v_blk, n_valid):
+    """Fold one arriving document block into the carry.
+
+    q (B,Sq,H,hd) roped layer-0 prompt queries; k/v_blk (B,W,KV,hd) padded
+    to a bucketed width W with the first ``n_valid`` (traced scalar) tokens
+    real. Document tokens take no position mask — only padding validity.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k_blk.shape[2]
+    qr = q.reshape(b, sq, kvh, h // kvh, hd)
+    w = k_blk.shape[1]
+    valid = jnp.broadcast_to(
+        (jnp.arange(w, dtype=jnp.int32) < n_valid)[None, None, :],
+        (b, sq, w))
+    return carry_block(m, l, acc, qr, k_blk, v_blk, valid)
+
+
+def carry_finalize(m, l, acc, dtype):
+    """(m, l, acc) -> attention output (B,Sq,H,hd) — _flash_fwd's epilogue."""
+    del m
+    b, sq, kvh, g, hd = acc.shape
+    out = acc / jnp.maximum(l.transpose(0, 3, 1, 2, 4), 1e-30)
+    return out.astype(dtype).reshape(b, sq, kvh * g, hd)

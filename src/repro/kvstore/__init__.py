@@ -1,11 +1,15 @@
-from repro.kvstore.async_loader import (AsyncKvLoader, LoaderStats,
-                                        PrefetchPipeline)
+from repro.kvstore.async_loader import (AsyncKvLoader, ChunkStream,
+                                        LoaderStats, PrefetchPipeline)
 from repro.kvstore.cache_tier import LruBytesCache, TieredStore
 from repro.kvstore.serialization import (deserialize, payload_bytes,
                                          read_meta, serialize)
 from repro.kvstore.simulated import PROFILES, SimulatedReader
 from repro.kvstore.store import FlashKVStore
+from repro.kvstore.streaming import (ArtifactIndex, block_payload_bytes,
+                                     read_block_encoded)
 
-__all__ = ["AsyncKvLoader", "LoaderStats", "PrefetchPipeline", "LruBytesCache",
-           "TieredStore", "deserialize", "payload_bytes", "read_meta",
-           "serialize", "PROFILES", "SimulatedReader", "FlashKVStore"]
+__all__ = ["AsyncKvLoader", "ChunkStream", "LoaderStats", "PrefetchPipeline",
+           "LruBytesCache", "TieredStore", "deserialize", "payload_bytes",
+           "read_meta", "serialize", "PROFILES", "SimulatedReader",
+           "FlashKVStore", "ArtifactIndex", "block_payload_bytes",
+           "read_block_encoded"]

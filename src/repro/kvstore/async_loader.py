@@ -25,6 +25,59 @@ class LoaderStats:
     bytes_loaded: int = 0
 
 
+class ChunkStream:
+    """Handle for one chunk's block-granular flash read (DESIGN.md §16).
+
+    A single loader worker walks the chunk's token blocks in file order (the
+    sequential-NVMe model) and appends each completed block here; the
+    scheduler polls ``drain_from`` between decode steps and advances the
+    row's resident frontier. Blocks are only ever appended, so multiple
+    consumers can hold independent cursors; errors surface as a value
+    (``error``) rather than a raise on the worker thread.
+    """
+
+    def __init__(self, chunk_id: str):
+        self.chunk_id = chunk_id
+        self._lock = threading.Lock()
+        # appended (t0, t1, EncodedKV, encoded_bytes) per completed block
+        self._blocks: List[tuple] = []
+        self.n_tokens: Optional[int] = None    # set once the header is read
+        self.total_bytes = 0                   # encoded bytes read so far
+        self.header_bytes = 0
+        self.error: Optional[BaseException] = None
+        self._done = False
+
+    def drain_from(self, cursor: int) -> "Tuple[List[tuple], int]":
+        """Blocks completed since ``cursor``; returns (new_blocks, cursor')."""
+        with self._lock:
+            return self._blocks[cursor:], len(self._blocks)
+
+    @property
+    def done(self) -> bool:
+        with self._lock:
+            return self._done
+
+    def raise_if_failed(self) -> None:
+        if self.error is not None:
+            raise self.error
+
+    # -- producer side (loader worker thread) ------------------------------
+    def _set_header(self, n_tokens: int, header_bytes: int) -> None:
+        with self._lock:
+            self.n_tokens = n_tokens
+            self.header_bytes = header_bytes
+
+    def _push(self, t0: int, t1: int, enc, nbytes: int) -> None:
+        with self._lock:
+            self._blocks.append((t0, t1, enc, nbytes))
+            self.total_bytes += nbytes
+
+    def _finish(self, error: Optional[BaseException] = None) -> None:
+        with self._lock:
+            self.error = error
+            self._done = True
+
+
 class AsyncKvLoader:
     """Thread-pool flash reader with in-flight coalescing: concurrent loads
     of one ``chunk_id`` — whether from one ``load_many`` batch or from
@@ -94,6 +147,47 @@ class AsyncKvLoader:
         fut.add_done_callback(_forget)
         return fut, True
 
+    def load_stream(self, chunk_id: str, block_tokens: int = 64
+                    ) -> ChunkStream:
+        """Start a block-granular read of one chunk; returns the stream
+        handle immediately. One worker reads the header, then the token
+        blocks in order, pushing each as an ``EncodedKV`` — the consumer
+        (the streaming scheduler) polls ``drain_from`` between decode steps.
+
+        Unlike ``load``/``load_many`` there is no in-flight coalescing here:
+        the streaming scheduler's ``wanted`` registry already guarantees one
+        stream per cold chunk per run, and per-consumer cursors make a
+        shared handle safe if a caller does share one.
+        """
+        from repro.kvstore.streaming import (ArtifactIndex,
+                                             block_payload_bytes,
+                                             read_block_encoded)
+        stream = ChunkStream(chunk_id)
+
+        def _run() -> None:
+            try:
+                # one span covers the whole walk: the link is busy end to
+                # end, and in a Chrome trace the lane visibly overlaps the
+                # scheduler thread's decode_step spans
+                with self.tracer.span("flash_read", chunk=chunk_id,
+                                      streamed=True):
+                    idx = ArtifactIndex.open(self.reader, chunk_id)
+                    stream._set_header(idx.n_tokens, idx.header_bytes)
+                    for t0 in range(0, idx.n_tokens, block_tokens):
+                        t1 = min(t0 + block_tokens, idx.n_tokens)
+                        enc = read_block_encoded(self.reader, idx, t0, t1)
+                        stream._push(t0, t1, enc,
+                                     block_payload_bytes(idx, t0, t1))
+            except BaseException as e:          # surfaced via the handle
+                stream._finish(e)
+                return
+            stream._finish()
+            self.stats.reads += 1
+            self.stats.bytes_loaded += stream.total_bytes
+
+        self.pool.submit(_run)
+        return stream
+
     def load_many(self, chunk_ids: Sequence[str]) -> "cf.Future[List[bytes]]":
         """Fan out per-chunk loads; the returned future completes when all do.
 
@@ -106,8 +200,20 @@ class AsyncKvLoader:
         chunk_id): True where THIS call started the flash read, False where
         it coalesced onto an in-flight one — callers attribute flash bytes
         to initiators only.
+
+        Duplicates *within one call* coalesce deterministically via a local
+        map — the global registry alone can't guarantee it, since a fast
+        read may complete (and drop its registry entry) between two
+        ``_load`` calls of the same batch.
         """
-        loads = [self._load(c) for c in chunk_ids]
+        batch: Dict[str, "Tuple[cf.Future[bytes], bool]"] = {}
+        loads = []
+        for c in chunk_ids:
+            if c in batch:
+                loads.append((batch[c][0], False))
+            else:
+                batch[c] = self._load(c)
+                loads.append(batch[c])
         futures = [f for f, _ in loads]
         out: "cf.Future[List[bytes]]" = cf.Future()
         out.initiated_flags = [i for _, i in loads]

@@ -47,6 +47,12 @@ class LruBytesCache:
                 _, old = self._data.popitem(last=False)
                 self._bytes -= len(old)
 
+    def contains(self, key: str) -> bool:
+        """Membership probe that perturbs neither recency nor hit/miss
+        stats — scheduler readiness checks must not look like traffic."""
+        with self._lock:
+            return key in self._data
+
     def invalidate(self, key: str) -> None:
         with self._lock:
             if key in self._data:
@@ -84,6 +90,17 @@ class TieredStore:
         if self.dram is not None:
             self.dram.put(chunk_id, data)
         return data
+
+    def get_range(self, chunk_id: str, offset: int, length: int) -> bytes:
+        """Range read through the tier: a DRAM-resident payload serves the
+        slice with zero flash bytes; a miss delegates to the flash store's
+        range read WITHOUT promoting (a partial read must not cache a full
+        payload it never transferred)."""
+        if self.dram is not None:
+            hit = self.dram.get(chunk_id)
+            if hit is not None:
+                return hit[offset:offset + length]
+        return self.flash.get_range(chunk_id, offset, length)
 
     def exists(self, chunk_id: str) -> bool:
         return self.flash.exists(chunk_id)

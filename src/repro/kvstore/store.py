@@ -75,6 +75,19 @@ class FlashKVStore:
             self.stats.bytes_read += len(data)
         return data
 
+    def get_range(self, chunk_id: str, offset: int, length: int) -> bytes:
+        """Read ``length`` bytes at ``offset`` of the artifact — the
+        block-granular read primitive streaming admission is built on
+        (``kvstore.streaming`` plans token-block byte ranges against the
+        header and pulls them through here while decode runs)."""
+        with open(self._path(chunk_id), "rb") as f:
+            f.seek(offset)
+            data = f.read(length)
+        with self._lock:
+            self.stats.gets += 1
+            self.stats.bytes_read += len(data)
+        return data
+
     def get_meta(self, chunk_id: str) -> Dict[str, Any]:
         """Artifact meta (n_tokens / codec / family) from the header alone:
         reads the 8-byte prefix + msgpack header, never the payload bytes —

@@ -27,6 +27,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --requests 16 --batch 4 [--mode matkv|vanilla|cacheblend] [--overlap] \
       [--ssd 9100pro|raid0|pm9a3|dram] [--mesh N] [--continuous] [--paged] \
+      [--streaming] [--host-tier-mb MB] \
       [--role both|materialize|decode --store-dir DIR] [--trace PATH]
 
 ``--trace PATH`` exports the run as a Chrome ``trace_event`` JSON
@@ -97,6 +98,16 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="serve over the chunk-shared paged block pool "
                          "(implies --continuous)")
+    ap.add_argument("--streaming", action="store_true",
+                    help="block-granular streaming admission (DESIGN.md "
+                         "§16): cold chunks fold into an online-softmax "
+                         "carry as their blocks land, instead of waiting "
+                         "for whole artifacts (requires --paged)")
+    ap.add_argument("--host-tier-mb", type=float, default=0.0, metavar="MB",
+                    help="host-DRAM demotion tier budget in MiB: reclaimed "
+                         "refs-0 pool pages pack into host bytes and "
+                         "re-promote without touching flash (requires "
+                         "--paged; 0 disables)")
     ap.add_argument("--three-phase", action="store_true",
                     help="pin the paged decode step to the three-phase "
                          "gather/step/scatter pipeline instead of the fused "
@@ -145,6 +156,15 @@ def main() -> None:
     if args.role == "decode":
         args.continuous = True
         args.paged = True
+    if args.streaming and not args.paged:
+        ap.error("--streaming rides the paged block pool's resident "
+                 "frontier; add --paged (or --role decode)")
+    if args.host_tier_mb and not args.paged:
+        ap.error("--host-tier-mb backs the paged pool's reclaim path; it "
+                 "is silently ignored without --paged")
+    if args.streaming and args.rerotate:
+        ap.error("--streaming requires rerotate=False: the online-softmax "
+                 "carry folds position-independent shared pages")
     if args.paged:
         args.continuous = True
     if args.trace is not None and args.role == "both" and not args.continuous:
@@ -206,9 +226,13 @@ def main() -> None:
         qs = [f"where is the {CORPUS_WORDS[i % len(CORPUS_WORDS)]} artifact?"
               for i in range(args.requests)]
         if args.continuous:
+            host_tier = (int(args.host_tier_mb * 2**20)
+                         if args.host_tier_mb else None)
             sched = ContinuousScheduler(eng, max_slots=batch,
                                         paged=args.paged,
-                                        fused=not args.three_phase)
+                                        fused=not args.three_phase,
+                                        streaming=args.streaming,
+                                        host_tier=host_tier)
             sched.run(qs[:batch], max_new_tokens=args.new_tokens)     # warm
             if tracer is not None:
                 tracer.clear()          # trace the timed run, not the warmup
@@ -226,6 +250,11 @@ def main() -> None:
                       f"resident_peak={m.hbm_kv_bytes_resident / 2**20:.2f} "
                       f"MiB over {len(shard_mb)} shard(s) "
                       f"({', '.join(f'{s:.2f}' for s in shard_mb)} MiB each)")
+            if args.streaming:
+                print(f"streaming: p50_ttft={m.p50_ttft_s:.3f}s "
+                      f"p95_ttft={m.p95_ttft_s:.3f}s "
+                      f"load_overlap={m.load_overlap_frac:.2f}"
+                      + ("" if args.trace else " (overlap needs --trace)"))
             print(f"sample answer: {answers[0]!r}")
             _export_trace(args, tracer)
             return
@@ -346,8 +375,11 @@ def _run_decode_role(args, model, params, mesh, batch: int,
         queue.submit_handoff(HandoffRecord(
             q, cids, args.new_tokens,
             generations=queue.generations_snapshot(cids)))
-    sched = ContinuousScheduler(worker, max_slots=batch, paged=True,
-                                fused=not args.three_phase)
+    sched = ContinuousScheduler(
+        worker, max_slots=batch, paged=True, fused=not args.three_phase,
+        streaming=args.streaming,
+        host_tier=(int(args.host_tier_mb * 2**20)
+                   if args.host_tier_mb else None))
     t0 = time.perf_counter()
     answers, m = sched.run(qs, max_new_tokens=args.new_tokens)
     wall = time.perf_counter() - t0

@@ -154,6 +154,18 @@ class Model:
         return transformer.decode_step_rows(self.cfg, params, cache, tokens,
                                             positions)
 
+    def streaming_prompt_q0(self, params, tokens, n_doc):
+        """Roped layer-0 prompt queries at order positions n_doc.. — the
+        seed of a streamed admission's ``StreamingPrefix`` carry."""
+        return transformer.streaming_prompt_q0(self.cfg, params, tokens,
+                                               n_doc)
+
+    def decode_step_rows_streamed(self, params, cache, tokens, q0, m, l, acc):
+        """``decode_step_rows`` with layer 0's doc-prefix attention taken
+        from the streamed (q0, m, l, acc) carry instead of recomputed."""
+        return transformer.decode_step_rows_streamed(
+            self.cfg, params, cache, tokens, q0, m, l, acc)
+
     def decode_step_rows_fused(self, params, pool_k, pool_v, k_scale, v_scale,
                                length, tokens, tables, lens, totals, *,
                                buf_size: int, block_size: int,

@@ -24,9 +24,11 @@ import jax.numpy as jnp
 from repro.configs.base import ATTENTION, RECURRENT
 from repro.dist.sharding import shard
 from repro.models import cache as cache_lib
+from repro.kernels.streaming_prefix import carry_block, carry_finalize
 from repro.models.attention import (attn_into_cache, attn_into_cache_rows,
                                     attn_paged_fused, attn_self,
-                                    attn_with_prefix, init_attention)
+                                    attn_with_prefix, init_attention,
+                                    project_kv, project_q)
 from repro.models.cache import (AttnCache, HybridCache, RowAttnCache, SSMCache,
                                 write_kv)
 from repro.models.mamba import init_mamba, mamba_fwd
@@ -529,6 +531,112 @@ def decode_step_rows(cfg, params, cache: RowAttnCache, tokens, positions=None):
 
     new_cache = RowAttnCache(k=k, v=v, slot_pos=spos,
                              length=cache.length + sq)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(cfg, params, x), new_cache
+
+
+def streaming_prompt_q0(cfg, params, tokens, n_doc):
+    """Layer-0 prompt queries for a streamed admission (DESIGN.md §16).
+
+    embed -> ln1 -> Wq (-> q-norm) -> RoPE at the prompt's final order
+    positions ``n_doc + 0..Sq-1`` — exactly what layer 0 of
+    ``decode_step_rows`` computes for these tokens, but computable the
+    moment a request is accepted: it depends only on the prompt and the
+    (known) composed-prefix length, never on the document KV still in
+    flight. The result seeds the ``StreamingPrefix`` carry.
+
+    tokens (B,Sq) int32, n_doc (B,) int32. Returns q0 (B,Sq,H,hd).
+    """
+    from repro.models.rope import apply_rope, rope_angles
+    x = embed_inputs(cfg, params, tokens)
+    sq = x.shape[1]
+    lp0 = jax.tree.map(lambda a: a[0], params["layers"])
+    q = project_q(cfg, lp0["attn"], rms_norm(x, lp0["ln1"], cfg.norm_eps))
+    if cfg.use_rope:
+        pos = n_doc[:, None] + jnp.arange(sq, dtype=jnp.int32)[None]
+        cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+    return q
+
+
+def decode_step_rows_streamed(cfg, params, cache: RowAttnCache, tokens,
+                              q0, m, l, acc):
+    """Finalize a streamed admission: ``decode_step_rows`` with layer 0's
+    prompt-over-document attention replaced by the already-folded streaming
+    carry (streaming admission, DESIGN.md §16).
+
+    ``(q0, m, l, acc)`` is the layer-0 carry, folded over the *full*
+    document prefix in retrieval order while pages were still landing.
+    Layer 0 here only projects/writes the prompt's own K/V, folds the
+    prompt's causal self-attention block into the carry, and runs the
+    finalize epilogue — using ``q0`` itself (the array the carry was
+    computed with) so document and prompt scores share bit-identical
+    queries. Layers 1.. run the standard write-then-attend; they need the
+    full resident prefix, which is exactly why only layer 0 streams.
+
+    Dense/vlm full-attention only (a sliding window would mask document
+    slots the carry already folded). Returns (logits, new_cache) — the
+    ``decode_step_rows`` contract.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "vlm") or cfg.sliding_window:
+        raise ValueError("decode_step_rows_streamed: dense/vlm "
+                         "full-attention families only")
+    x = embed_inputs(cfg, params, tokens)
+    sq = x.shape[1]
+    order_pos = cache.length[:, None] + jnp.arange(sq, dtype=jnp.int32)[None]
+    positions = order_pos
+    start = (cache.length % cache.buf_size).astype(jnp.int32)      # (B,)
+    spos = jax.vmap(
+        lambda sp, op, st: jax.lax.dynamic_update_slice(
+            sp, op.astype(jnp.int32), (st,)))(
+        cache.slot_pos, order_pos, start)
+
+    # ---- layer 0: fold the prompt block into the carry, then finalize ----
+    lp0 = jax.tree.map(lambda a: a[0], params["layers"])
+    k_new, v_new = project_kv(cfg, lp0["attn"],
+                              rms_norm(x, lp0["ln1"], cfg.norm_eps))
+    if cfg.use_rope:
+        from repro.models.rope import apply_rope, rope_angles
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        k_new = apply_rope(k_new, cos, sin)
+    kc = k_new.astype(cache.k.dtype)       # the cache write's cast — fold
+    vc = v_new.astype(cache.v.dtype)       # what the all-at-once path reads
+
+    def write(buf, new, st):
+        zero = jnp.zeros((), jnp.int32)
+        return jax.lax.dynamic_update_slice(buf, new, (st, zero, zero))
+
+    pk0 = jax.vmap(write)(cache.k[0], kc, start)
+    pv0 = jax.vmap(write)(cache.v[0], vc, start)
+    b, _, n_heads, hd = q0.shape
+    kvh = cfg.num_kv_heads
+    qr = q0.reshape(b, sq, kvh, n_heads // kvh, hd)
+    pmask = jnp.broadcast_to(
+        jnp.arange(sq)[None, :, None] >= jnp.arange(sq)[None, None, :],
+        (b, sq, sq))
+    m, l, acc = carry_block(m, l, acc, qr, kc, vc, pmask)
+    a0 = carry_finalize(m, l, acc, q0.dtype)
+    a0 = a0.reshape(b, sq, cfg.q_dim) @ lp0["attn"]["wo"]
+    x = x + a0
+    x = x + mlp(cfg, lp0["mlp"], rms_norm(x, lp0["ln2"], cfg.norm_eps))
+
+    # ---- layers 1..L-1: standard write-then-attend over the dense view ---
+    def scan_body(x, xs):
+        lp, pk, pv = xs
+        a, pk, pv = attn_into_cache_rows(
+            cfg, lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+            positions, order_pos, pk, pv, spos, start)
+        x = x + a
+        x = x + mlp(cfg, lp["mlp"], rms_norm(x, lp["ln2"], cfg.norm_eps))
+        return x, (pk, pv)
+    rest = jax.tree.map(lambda a: a[1:], params["layers"])
+    x, (ks, vs) = scan_layers(scan_body, x, (rest, cache.k[1:], cache.v[1:]))
+
+    new_cache = RowAttnCache(
+        k=jnp.concatenate([pk0[None], ks], axis=0),
+        v=jnp.concatenate([pv0[None], vs], axis=0),
+        slot_pos=spos, length=cache.length + sq)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     return unembed(cfg, params, x), new_cache
 

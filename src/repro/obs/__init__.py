@@ -7,14 +7,15 @@ DESIGN.md §15 for the span taxonomy and role-merge semantics.
 
 from .registry import Counter, Gauge, Histogram, MetricsRegistry
 from .trace import (NULL_TRACER, TRACE_SCHEMA, Tracer, arg_values,
-                    load_chrome, merge_chrome, validate_chrome)
+                    load_chrome, merge_chrome, span_overlap_frac,
+                    validate_chrome)
 from .compare import (comparison_table, fused_step_kv_bytes_measured,
                       predicted_vs_measured)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "NULL_TRACER", "TRACE_SCHEMA", "Tracer", "arg_values", "load_chrome",
-    "merge_chrome", "validate_chrome",
+    "merge_chrome", "span_overlap_frac", "validate_chrome",
     "comparison_table", "fused_step_kv_bytes_measured",
     "predicted_vs_measured",
 ]

@@ -183,6 +183,46 @@ class Tracer:
 NULL_TRACER = Tracer(enabled=False, role="null")
 
 
+def span_overlap_frac(tracer: Tracer, name: str, against: str) -> float:
+    """Fraction of total ``name``-span time that overlaps the union of
+    ``against``-span intervals.
+
+    The load/decode-overlap gauge: with ``("flash_read", "decode_step")``
+    it answers *how much of the flash-read wall time was hidden behind
+    decode steps* — 0.0 means every read byte stalled the scheduler,
+    1.0 means the link ran entirely in decode's shadow. Spans may come
+    from different threads (loader workers vs the scheduler thread); only
+    their wall-clock intervals matter. Returns 0.0 when either span set
+    is empty.
+    """
+    target: List[Tuple[float, float]] = []
+    other: List[Tuple[float, float]] = []
+    for sname, t0, dur, _tid, _args in tracer.spans():
+        if sname == name:
+            target.append((t0, t0 + dur))
+        elif sname == against:
+            other.append((t0, t0 + dur))
+    total = sum(e - s for s, e in target)
+    if not total or not other:
+        return 0.0
+    other.sort()
+    merged: List[List[float]] = [list(other[0])]
+    for s, e in other[1:]:
+        if s <= merged[-1][1]:
+            merged[-1][1] = max(merged[-1][1], e)
+        else:
+            merged.append([s, e])
+    hidden = 0.0
+    for s, e in target:
+        for ms, me in merged:
+            if me <= s:
+                continue
+            if ms >= e:
+                break
+            hidden += min(e, me) - max(s, ms)
+    return hidden / total
+
+
 # ---------------------------------------------------------------------------
 # Chrome-document level helpers (merge + validate)
 # ---------------------------------------------------------------------------

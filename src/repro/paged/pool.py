@@ -72,6 +72,8 @@ class PoolStats:
     chunk_misses: int = 0      # insert() had to write pages (flash was read)
     flash_bytes_loaded: int = 0  # payload bytes behind the misses
     reclaims: int = 0          # refcount-0 entries evicted for new pages
+    demotions: int = 0         # reclaimed entries packed into the host tier
+    promotions: int = 0        # host-tier entries rehydrated (zero flash)
     peak_used_blocks: int = 0  # allocated (incl. reclaimable LRU pages)
     peak_pinned_blocks: int = 0  # required working set: refs>0 + private
     peak_resident_chunks: int = 0  # distinct chunks with pages in the pool
@@ -90,13 +92,26 @@ class _ChunkPages:
     refs: int = 0
 
 
+@dataclass
+class _StreamEntry:
+    """An in-flight block-granular insert: pages allocated up front, written
+    a token block at a time as flash reads land. Invisible to ``has`` /
+    ``acquire`` until ``commit_stream`` — the frontier is the only window
+    into it (DESIGN.md §16)."""
+    block_ids: List[int]
+    n_tokens: int              # total expected
+    n_resident: int = 0        # resident frontier: tokens written so far
+    nbytes: int = 0            # encoded bytes accumulated
+
+
 class PagedKvPool:
     """Fixed-size KV block pool with ref-counted, chunk-keyed shared pages."""
 
     def __init__(self, cfg, n_blocks: int, block_size: int = 64,
                  n_layers: Optional[int] = None, dtype=None,
                  codec: Union[str, KvCodec, None] = None,
-                 mesh=None, rules: Optional[dict] = None):
+                 mesh=None, rules: Optional[dict] = None,
+                 host_tier=None):
         if n_blocks <= 0 or block_size <= 0:
             raise ValueError("PagedKvPool: n_blocks and block_size must be "
                              "positive")
@@ -144,6 +159,17 @@ class PagedKvPool:
         self._lru: "OrderedDict[str, None]" = OrderedDict()  # refs == 0
         self._pinned_blocks = 0
         self._private: set = set()   # outstanding alloc_private block ids
+        self._streams: Dict[str, _StreamEntry] = {}
+        # host-DRAM mid-tier (DESIGN.md §16): refs-0 pages reclaimed under
+        # allocation pressure demote into this bounded byte cache instead of
+        # dropping, and re-promotion rehydrates them with ZERO flash bytes.
+        # Accepts a capacity in bytes or a ready-made LruBytesCache.
+        if host_tier is None or isinstance(host_tier, int):
+            from repro.kvstore.cache_tier import LruBytesCache
+            self.host_tier = (LruBytesCache(host_tier) if host_tier
+                              else None)
+        else:
+            self.host_tier = host_tier
 
     # -- sizing ----------------------------------------------------------------
     @staticmethod
@@ -253,6 +279,11 @@ class PagedKvPool:
         while len(self._free) < n and self._lru:
             victim, _ = self._lru.popitem(last=False)
             pages = self._entries.pop(victim)
+            if self.host_tier is not None:
+                # demote before the blocks are recycled: the victim's KV
+                # survives as host bytes, so the next request for it skips
+                # flash entirely (promote() rehydrates)
+                self._demote(victim, pages)
             self._free.extend(pages.block_ids)
             self.stats.reclaims += 1
             self.tracer.instant("pool_reclaim", chunk=victim,
@@ -335,17 +366,11 @@ class PagedKvPool:
         if chunk_id in self._entries:
             raise ValueError(f"pool.insert: {chunk_id!r} already resident "
                              f"(acquire it instead)")
+        if chunk_id in self._streams:
+            raise ValueError(f"pool.insert: {chunk_id!r} is streaming in "
+                             f"(commit_stream it instead)")
         if encoded is not None:
-            k_enc, v_enc = jnp.asarray(encoded.k), jnp.asarray(encoded.v)
-            if encoded.codec.codec_id == self.codec.codec_id:
-                k_sc = (None if encoded.k_scale is None
-                        else jnp.asarray(encoded.k_scale))
-                v_sc = (None if encoded.v_scale is None
-                        else jnp.asarray(encoded.v_scale))
-            else:                            # transcode via the decode dtype
-                k_enc, v_enc, k_sc, v_sc = self._encode_artifact(
-                    encoded.codec.decode(k_enc, encoded.k_scale, self.dtype),
-                    encoded.codec.decode(v_enc, encoded.v_scale, self.dtype))
+            k_enc, v_enc, k_sc, v_sc = self._encode_for_write(encoded)
         else:
             if k_art.ndim == 5:
                 k_art, v_art = k_art[:, 0], v_art[:, 0]
@@ -355,20 +380,178 @@ class PagedKvPool:
                               tokens=n_tokens):
             blocks = self._alloc(self.blocks_for(n_tokens))
             slots = self.token_slot_ids(blocks, n_tokens)
-            self.k = self.k.at[:, slots].set(k_enc.astype(self.storage_dtype))
-            self.v = self.v.at[:, slots].set(v_enc.astype(self.storage_dtype))
-            if self.k_scale is not None:
-                sd = self.codec.scale_dtype
-                self.k_scale = self.k_scale.at[:, slots].set(
-                    jnp.asarray(k_sc)[..., 0].astype(sd))
-                self.v_scale = self.v_scale.at[:, slots].set(
-                    jnp.asarray(v_sc)[..., 0].astype(sd))
+            self._write_slots(slots, k_enc, v_enc, k_sc, v_sc)
         self._entries[chunk_id] = _ChunkPages(block_ids=blocks,
                                               n_tokens=n_tokens,
                                               nbytes=nbytes, refs=1)
         self._pin(len(blocks))
         self.stats.chunk_misses += 1
         self.stats.flash_bytes_loaded += nbytes
+        self.stats.peak_resident_chunks = max(self.stats.peak_resident_chunks,
+                                              len(self._entries))
+        return n_tokens
+
+    def _encode_for_write(self, encoded: EncodedKV):
+        """``EncodedKV`` -> storage-form tensors: write-through when its
+        codec matches the pool's, decode -> re-encode transcode otherwise."""
+        k_enc, v_enc = jnp.asarray(encoded.k), jnp.asarray(encoded.v)
+        if encoded.codec.codec_id == self.codec.codec_id:
+            k_sc = (None if encoded.k_scale is None
+                    else jnp.asarray(encoded.k_scale))
+            v_sc = (None if encoded.v_scale is None
+                    else jnp.asarray(encoded.v_scale))
+            return k_enc, v_enc, k_sc, v_sc
+        return self._encode_artifact(
+            encoded.codec.decode(k_enc, encoded.k_scale, self.dtype),
+            encoded.codec.decode(v_enc, encoded.v_scale, self.dtype))
+
+    def _write_slots(self, slots, k_enc, v_enc, k_sc, v_sc) -> None:
+        """Write encoded (L, t, KV, hd) tensors into pool slots ``slots``."""
+        self.k = self.k.at[:, slots].set(k_enc.astype(self.storage_dtype))
+        self.v = self.v.at[:, slots].set(v_enc.astype(self.storage_dtype))
+        if self.k_scale is not None:
+            sd = self.codec.scale_dtype
+            self.k_scale = self.k_scale.at[:, slots].set(
+                jnp.asarray(k_sc)[..., 0].astype(sd))
+            self.v_scale = self.v_scale.at[:, slots].set(
+                jnp.asarray(v_sc)[..., 0].astype(sd))
+
+    # -- streaming inserts (resident frontier, DESIGN.md §16) -------------------
+    def begin_stream(self, chunk_id: str, n_tokens: int) -> None:
+        """Reserve pages for a chunk whose blocks will arrive incrementally.
+        The reserved blocks are neither free nor reclaimable (not in the
+        LRU), so racing allocations can never recycle a page mid-stream; the
+        entry stays invisible to ``has``/``acquire`` until committed."""
+        if chunk_id in self._entries or chunk_id in self._streams:
+            raise ValueError(f"pool.begin_stream: {chunk_id!r} already "
+                             f"resident or streaming")
+        blocks = self._alloc(self.blocks_for(n_tokens))
+        self._pin(len(blocks))
+        self._streams[chunk_id] = _StreamEntry(block_ids=blocks,
+                                               n_tokens=n_tokens)
+
+    def extend_stream(self, chunk_id: str, encoded: EncodedKV,
+                      t0: int, t1: int, nbytes: int = 0) -> int:
+        """Write token block [t0, t1) of a streaming chunk; blocks must
+        arrive in order (t0 == current frontier). Returns the new frontier."""
+        entry = self._streams[chunk_id]
+        if t0 != entry.n_resident or t1 > entry.n_tokens:
+            raise ValueError(
+                f"pool.extend_stream: block [{t0},{t1}) does not extend "
+                f"frontier {entry.n_resident}/{entry.n_tokens} "
+                f"of {chunk_id!r}")
+        k_enc, v_enc, k_sc, v_sc = self._encode_for_write(encoded)
+        slots = self.token_slot_ids(entry.block_ids, entry.n_tokens)[t0:t1]
+        self._write_slots(slots, k_enc, v_enc, k_sc, v_sc)
+        entry.n_resident = t1
+        entry.nbytes += nbytes
+        self.tracer.instant("frontier_advance", chunk=chunk_id,
+                            tokens=t1, total=entry.n_tokens)
+        return entry.n_resident
+
+    def commit_stream(self, chunk_id: str) -> int:
+        """Promote a fully-arrived stream into a normal refcount-1 entry
+        (the moment it becomes visible to ``has``/``acquire``)."""
+        entry = self._streams[chunk_id]
+        if entry.n_resident != entry.n_tokens:
+            raise ValueError(
+                f"pool.commit_stream: {chunk_id!r} frontier at "
+                f"{entry.n_resident}/{entry.n_tokens}")
+        del self._streams[chunk_id]
+        self._entries[chunk_id] = _ChunkPages(block_ids=entry.block_ids,
+                                              n_tokens=entry.n_tokens,
+                                              nbytes=entry.nbytes, refs=1)
+        # blocks were pinned at begin_stream; this is the flash miss the
+        # stream serviced
+        self.stats.chunk_misses += 1
+        self.stats.flash_bytes_loaded += entry.nbytes
+        self.stats.peak_resident_chunks = max(self.stats.peak_resident_chunks,
+                                              len(self._entries))
+        return entry.n_tokens
+
+    def abort_stream(self, chunk_id: str) -> None:
+        """Tear down a failed/abandoned stream; its pages return to the
+        free list."""
+        entry = self._streams.pop(chunk_id, None)
+        if entry is None:
+            return
+        self._free.extend(entry.block_ids)
+        self._pinned_blocks -= len(entry.block_ids)
+
+    def stream_frontier(self, chunk_id: str) -> Optional[int]:
+        """Tokens resident for an in-flight stream, or None if not
+        streaming."""
+        entry = self._streams.get(chunk_id)
+        return entry.n_resident if entry is not None else None
+
+    def chunk_tokens(self, chunk_id: str) -> Optional[int]:
+        """Token count of a resident or streaming chunk (None if absent)."""
+        if chunk_id in self._entries:
+            return self._entries[chunk_id].n_tokens
+        entry = self._streams.get(chunk_id)
+        return entry.n_tokens if entry is not None else None
+
+    # -- host-DRAM demotion tier (DESIGN.md §16) --------------------------------
+    def _demote(self, chunk_id: str, pages: _ChunkPages) -> None:
+        """Pack a reclaimed entry's pages into the host tier (encoded
+        storage form, so the host budget prices exactly like flash)."""
+        from repro.kvstore.serialization import serialize
+        slots = self.token_slot_ids(pages.block_ids, pages.n_tokens)
+        tensors = {"k": np.asarray(self.k[:, slots]),
+                   "v": np.asarray(self.v[:, slots])}
+        if self.k_scale is not None:
+            tensors["k.scale"] = np.asarray(self.k_scale[:, slots])
+            tensors["v.scale"] = np.asarray(self.v_scale[:, slots])
+        payload = serialize(tensors, meta={"n_tokens": pages.n_tokens,
+                                           "nbytes": pages.nbytes,
+                                           "codec": self.codec.codec_id})
+        self.host_tier.put(chunk_id, payload)
+        self.stats.demotions += 1
+        self.tracer.instant("pool_demote", chunk=chunk_id,
+                            bytes=len(payload))
+
+    def host_has(self, chunk_id: str) -> bool:
+        """Whether the host tier holds a demoted copy (recency untouched)."""
+        return (self.host_tier is not None
+                and self.host_tier.contains(chunk_id))
+
+    def promote(self, chunk_id: str) -> Optional[int]:
+        """Rehydrate a demoted chunk from host bytes into fresh pages with
+        refcount 1 — ZERO flash bytes. Returns its token count, or None when
+        the host tier has no copy. The caller must have checked ``acquire``
+        first, exactly like ``insert``."""
+        if self.host_tier is None:
+            return None
+        payload = self.host_tier.get(chunk_id)
+        if payload is None:
+            return None
+        if chunk_id in self._entries or chunk_id in self._streams:
+            raise ValueError(f"pool.promote: {chunk_id!r} already resident "
+                             f"or streaming")
+        from repro.kvstore.serialization import deserialize
+        tensors, meta = deserialize(payload)
+        k_sc = tensors.get("k.scale")
+        v_sc = tensors.get("v.scale")
+        n_tokens = int(meta["n_tokens"])
+        with self.tracer.span("pool_promote", chunk=chunk_id,
+                              tokens=n_tokens):
+            blocks = self._alloc(self.blocks_for(n_tokens))
+            slots = self.token_slot_ids(blocks, n_tokens)
+            # stored in the pool's own storage form — write straight through
+            # (scales are already (L, t, KV); _write_slots expects the
+            # artifact's trailing-1 axis)
+            self._write_slots(slots, jnp.asarray(tensors["k"]),
+                              jnp.asarray(tensors["v"]),
+                              None if k_sc is None else
+                              jnp.asarray(k_sc)[..., None],
+                              None if v_sc is None else
+                              jnp.asarray(v_sc)[..., None])
+        self._entries[chunk_id] = _ChunkPages(block_ids=blocks,
+                                              n_tokens=n_tokens,
+                                              nbytes=int(meta["nbytes"]),
+                                              refs=1)
+        self._pin(len(blocks))
+        self.stats.promotions += 1
         self.stats.peak_resident_chunks = max(self.stats.peak_resident_chunks,
                                               len(self._entries))
         return n_tokens

@@ -136,6 +136,26 @@ class PagedRowCache:
         self.host_gather[slot] = scratch
         self.gather_idx = self.gather_idx.at[slot].set(jnp.asarray(scratch))
 
+    def resident_frontier(self, chunk_keys: List[str]) -> int:
+        """Resident-prefix length (tokens) across a row's retrieval-ordered
+        chunks: committed/resident chunks count fully, an in-flight stream
+        counts up to its frontier, and the walk stops at the first gap —
+        this is the prefix streaming admission may attend over while
+        ``AsyncKvLoader`` races the tail blocks in (DESIGN.md §16)."""
+        total = 0
+        for key in chunk_keys:
+            n = self.pool.chunk_tokens(key)
+            if n is None:
+                break
+            f = self.pool.stream_frontier(key)
+            if f is not None:                  # still streaming
+                total += f
+                if f < n:
+                    break
+            else:
+                total += n
+        return total
+
     def note_step(self) -> None:
         """Age every slot by one decode token (the host mirror of the device
         ``length + 1`` a batched step performs for live AND stale rows)."""

@@ -34,6 +34,19 @@ drops its own refs — co-resident requests' shared pages are untouched.
 Answers stay bit-identical to the row-slotted path (the paged step runs the
 same jitted decode executable on the gathered dense view).
 
+``streaming=True`` (requires ``paged=True``) admits cold requests at *block*
+granularity instead of all-or-nothing (DESIGN.md §16): each cold chunk gets
+a per-chunk flash stream (``AsyncKvLoader.load_stream``) whose arriving
+token blocks advance a pool-resident frontier
+(``begin_stream``/``extend_stream``/``commit_stream``), and the layer-0
+prompt-over-document attention folds landed blocks into an online-softmax
+carry (m/ℓ running maxima) while later blocks are still on the link — so
+admission pays ``max(link, fold) + finalize`` instead of
+``link + compose + prefill``, and the first token is still bit-identical to
+the all-at-once path. A ``host_tier`` byte budget adds a host-DRAM demotion
+tier under the pool: LRU-reclaimed refs-0 pages demote to host bytes and
+``promote`` rehydrates them with zero flash re-reads.
+
 An engine built with a serving mesh (``RagEngine(mesh=...)``) makes either
 cache flavour tensor-parallel transparently: the row cache / block pool
 arrive KV-head-sharded from the engine's constructors and the decode step
@@ -68,7 +81,7 @@ from repro.data.tokenizer import EOS
 from repro.kvstore.async_loader import AsyncKvLoader
 from repro.models.cache import insert_cache_row
 from repro.obs import (MetricsRegistry, NULL_TRACER,
-                       fused_step_kv_bytes_measured)
+                       fused_step_kv_bytes_measured, span_overlap_frac)
 from repro.serving.engine import RagEngine, RowRequest
 from repro.serving.metrics import ServeMetrics  # noqa: F401  (re-export)
 from repro.serving.sampling import greedy
@@ -93,7 +106,13 @@ class RequestRecord:
     n_doc_tokens: int = 0
     flash_bytes: int = 0                   # flash bytes THIS request caused
     to_load: List[str] = field(default_factory=list)  # paged: chunks to read
+    loading: List[str] = field(default_factory=list)  # chunks in the CURRENT
+                                           # future (suffix of to_load after
+                                           # a re-park salvages earlier ones)
+    preloaded: Dict[str, bytes] = field(default_factory=dict)
+                                           # payloads salvaged across re-parks
     expected: List[str] = field(default_factory=list)  # paged: no load needed
+    stream: Optional["_RowStream"] = None  # streaming admission state
     pending_mat: List[str] = field(default_factory=list)
                                            # chunks with no flash artifact
                                            # yet: materialize job posted,
@@ -128,6 +147,42 @@ class RequestRecord:
                 + self.prefill_s + self.decode_share_s)
 
 
+@dataclass
+class _RowStream:
+    """Streaming-admission state for one pending request (DESIGN.md §16).
+
+    Tracks the request's per-chunk block streams, the pool streams it has
+    begun/committed (plus any host-tier promotions it pinned), and the
+    retrieval-order carry-fold cursor: ``fold_idx`` indexes the request's
+    chunk occurrence being folded, ``fold_off`` the tokens folded of it,
+    ``fold_blk`` the blocks of its buffer consumed. The carry only ever
+    advances in retrieval-token order — chunk i+1's blocks stay buffered
+    until chunk i is fully folded — so the online-softmax fold is
+    deterministic regardless of inter-chunk arrival order.
+    """
+    streams: Dict[str, object] = field(default_factory=dict)
+                                           # cid -> AsyncKvLoader.ChunkStream
+    keys: List[str] = field(default_factory=list)
+                                           # cold chunks this request streams
+    started: bool = False                  # classification + streams opened
+    begun: set = field(default_factory=set)        # page keys begin_stream'd
+    committed: set = field(default_factory=set)    # page keys committed
+    cursors: Dict[str, int] = field(default_factory=dict)
+    blocks: Dict[str, List] = field(default_factory=dict)
+                                           # cid -> [(t0, t1, EncodedKV)] in
+                                           # arrival (= token) order
+    fold_idx: int = 0
+    fold_off: int = 0
+    fold_blk: int = 0
+    carry: object = None                   # StreamingPrefix once n_doc known
+    carry_dropped: bool = False            # an unfolded chunk's pages
+                                           # vanished: the admit falls back
+                                           # to the all-at-once prefill
+    n_doc: Optional[int] = None
+    bytes: int = 0                         # flash bytes streamed in
+    done: bool = False                     # every cold stream committed
+
+
 class ContinuousScheduler:
     """Admit requests into decode slots as they arrive; evict at EOS or each
     row's ``max_new_tokens``; backfill freed slots from the pending queue whose
@@ -138,7 +193,9 @@ class ContinuousScheduler:
                  paged: bool = False, block_size: int = 64,
                  pool_blocks: Optional[int] = None,
                  pool_budget_bytes: Optional[int] = None,
-                 fused: bool = True, tracer=None):
+                 fused: bool = True, tracer=None,
+                 streaming: bool = False, host_tier=None,
+                 pre_admit_hook=None):
         if engine.cfg.family not in ("dense", "vlm", "moe"):
             raise ValueError("ContinuousScheduler requires an attention-KV "
                              "family")
@@ -150,7 +207,25 @@ class ContinuousScheduler:
         if paged and engine.rerotate:
             raise ValueError("paged=True requires rerotate=False (shared "
                              "chunk pages must be position-independent)")
+        if streaming and not paged:
+            raise ValueError("streaming=True requires paged=True (the "
+                             "resident frontier lives in the block pool)")
+        if streaming and not engine.streaming_supported():
+            raise ValueError("engine does not support streamed admission "
+                             "(needs a dense/vlm full-attention config, "
+                             "rerotate off)")
         self.engine = engine
+        # streaming=True admits cold requests block-granularly: per-chunk
+        # flash streams advance a pool resident frontier while the layer-0
+        # prompt-over-document attention folds into an online-softmax carry,
+        # so admission is just the finalize step (DESIGN.md §16)
+        self.streaming = streaming
+        # host-DRAM demotion tier between flash and the HBM pool: None (off),
+        # a byte capacity, or an LruBytesCache instance (kvstore.cache_tier)
+        self.host_tier = host_tier
+        # test seam: called with the ready record just before admission; the
+        # admit-time reclaim-race regression forces a reclaim here
+        self.pre_admit_hook = pre_admit_hook
         self.max_slots = max_slots
         self.buf_size = buf_size
         self.paged = paged
@@ -240,10 +315,21 @@ class ContinuousScheduler:
         pcache = None
         cache = None
         if self.paged:
+            n_blocks = self.pool_blocks
+            if (self.streaming and n_blocks is None
+                    and self.pool_budget_bytes is None):
+                # pending streams reserve pages before admission, so the
+                # default sizing gets headroom for max_slots concurrent
+                # in-flight streams on top of the admitted working set
+                per_row = -(-buf // self.block_size)
+                chunk_blocks = -(-eng.chunk_tokens // self.block_size)
+                n_blocks = self.max_slots * (
+                    1 + per_row + 2 * eng.top_k * chunk_blocks) + 4
             pcache = eng.init_paged_cache(
                 self.max_slots, buf, block_size=self.block_size,
-                n_blocks=self.pool_blocks,
-                pool_budget_bytes=self.pool_budget_bytes)
+                n_blocks=n_blocks,
+                pool_budget_bytes=self.pool_budget_bytes,
+                host_tier=self.host_tier)
             self.last_pool = pcache.pool
             if tr.enabled:
                 pcache.pool.tracer = tr
@@ -261,6 +347,13 @@ class ContinuousScheduler:
         def start_loads(r: RequestRecord):
             """Classify chunks + kick the flash reads for one request.
             Requires every artifact to exist (``artifact_ready``)."""
+            if self.paged and self.streaming:
+                # block-granular admission: chunk classification and the
+                # per-chunk streams are opened by the pump (FIFO, capped at
+                # max_slots concurrent streaming requests so queued streams
+                # never exhaust the pool); no payload future is issued
+                r.stream = _RowStream()
+                return
             if self.paged:
                 # chunks already GPU-resident, or in flight for an
                 # earlier pending request, are *expected*: no flash read
@@ -286,6 +379,7 @@ class ContinuousScheduler:
                     else:
                         r.to_load.append(cid)
                         wanted[cid] = wanted.get(cid, 0) + 1
+                r.loading = list(r.to_load)
                 r.future = self.loader.load_many(r.to_load)
             else:
                 # start the flash reads immediately: they overlap with
@@ -316,10 +410,161 @@ class ContinuousScheduler:
 
         def poll_materialized():
             for r in pending:
-                if r.future is None and all(eng.artifact_ready(c)
-                                            for c in r.pending_mat):
+                if r.pending_mat and all(eng.artifact_ready(c)
+                                         for c in r.pending_mat):
                     r.pending_mat = []
                     start_loads(r)
+
+        def start_streams(r: RequestRecord):
+            """Streaming counterpart of the classification in start_loads:
+            warm chunks (pool-resident, host-tier demoted, or already in
+            flight for an earlier request) become *expected*; cold chunks
+            get a block stream each plus a wanted registration so later
+            requests mark them expected instead of double-reading."""
+            st = r.stream
+            for cid in r.req.chunk_ids:
+                if cid in st.keys or cid in r.expected:
+                    continue            # within-request duplicate
+                key = eng.page_key(cid)
+                if (pcache.pool.has(key) or pcache.pool.host_has(key)
+                        or wanted.get(cid, 0) > 0):
+                    # resident, demoted-to-host (the carry fold and admit
+                    # compose both re-promote, zero flash bytes), or in
+                    # flight for an earlier request
+                    r.expected.append(cid)
+                else:
+                    st.keys.append(cid)
+                    st.cursors[cid] = 0
+                    st.blocks[cid] = []
+                    st.streams[cid] = self.loader.load_stream(
+                        cid, block_tokens=self.block_size)
+                    wanted[cid] = wanted.get(cid, 0) + 1
+            st.started = True
+
+        def pump_streams():
+            """Advance every pending request's streams between decode steps:
+            drain completed blocks into the pool (begin / extend / commit
+            each chunk's resident frontier) and fold the carry forward in
+            retrieval-token order. All the compose-and-attend work a cold
+            request needs is done by the time its last page lands —
+            admission is just the finalize step."""
+            live = sum(1 for p in pending
+                       if p.stream is not None and p.stream.started
+                       and not p.stream.done)
+            for r in pending:
+                st = r.stream
+                if st is None or r.pending_mat:
+                    continue
+                if not st.started:
+                    if live >= self.max_slots:
+                        continue
+                    start_streams(r)
+                    live += 1
+                # drain arrived blocks into the pool's resident frontier
+                for cid in st.keys:
+                    s = st.streams[cid]
+                    key = eng.page_key(cid)
+                    if s.error is not None:
+                        raise s.error
+                    if key in st.committed or s.n_tokens is None:
+                        continue        # done, or header not read yet
+                    if key not in st.begun:
+                        try:
+                            pcache.pool.begin_stream(key, s.n_tokens)
+                        except RuntimeError:
+                            # pool momentarily full (admitted rows + live
+                            # stream reservations hold the pages): retry
+                            # next pump once a row evicts or a sibling
+                            # stream commits — unless nothing can release
+                            if not active and not any(
+                                    p.stream is not None
+                                    and len(p.stream.begun)
+                                    > len(p.stream.committed)
+                                    for p in pending):
+                                raise
+                            continue
+                        st.begun.add(key)
+                    blks, st.cursors[cid] = s.drain_from(st.cursors[cid])
+                    for (bt0, bt1, enc, nb) in blks:
+                        pcache.pool.extend_stream(key, enc, bt0, bt1,
+                                                  nbytes=nb)
+                        st.blocks[cid].append((bt0, bt1, enc))
+                    if (s.done and pcache.pool.stream_frontier(key)
+                            == s.n_tokens):
+                        pcache.pool.commit_stream(key)
+                        # drop the commit-time ref: the pages join the
+                        # refcount-0 LRU hot set (reclaimable, demotable)
+                        # like any loaded chunk; the carry folds VALUES
+                        # from the buffered blocks, so it needs no pin,
+                        # and the admit-time re-park covers the rare
+                        # reclaimed-before-admit race
+                        pcache.pool.release(key)
+                        st.committed.add(key)
+                        st.bytes += s.total_bytes + s.header_bytes
+                        wanted[cid] -= 1
+                st.done = len(st.committed) == len(st.keys)
+                # seed the carry once every chunk's token count is known.
+                # The retrieval index already knows each ingested chunk's
+                # length (eng.chunk_n_tokens), so a full-stack engine seeds
+                # at stream START — waiting on stream headers here used to
+                # delay the whole fold behind the LAST header's link slot.
+                # Stream headers / the pool remain the source of truth when
+                # the index can't answer (disaggregated DecodeWorker).
+                cids = r.req.chunk_ids
+                if st.carry is None and not st.carry_dropped and st.keys:
+                    meta_len = getattr(eng, "chunk_n_tokens",
+                                       lambda _c: None)
+
+                    def _len(c):
+                        n = (st.streams[c].n_tokens if c in st.streams
+                             else pcache.pool.chunk_tokens(eng.page_key(c)))
+                        return n if n is not None else meta_len(c)
+
+                    lens = [_len(c) for c in cids]
+                    if all(x is not None for x in lens):
+                        st.n_doc = int(sum(lens))
+                        st.carry = eng.begin_streaming_prefix(
+                            r.req, st.n_doc, bucket=self.block_size)
+                # fold the carry forward, strictly in retrieval-token order
+                if st.carry is None:
+                    continue
+                while st.fold_idx < len(cids):
+                    cid = cids[st.fold_idx]
+                    key = eng.page_key(cid)
+                    if cid in st.streams:
+                        blks = st.blocks[cid]
+                        while st.fold_blk < len(blks):
+                            _bt0, bt1, enc = blks[st.fold_blk]
+                            eng.feed_streaming_block(st.carry, enc)
+                            st.fold_off = bt1
+                            st.fold_blk += 1
+                        nt = st.streams[cid].n_tokens
+                        if nt is None or st.fold_off < nt:
+                            break       # tail blocks still in flight
+                    elif pcache.pool.has(key):
+                        eng.feed_streaming_resident(st.carry, pcache.pool,
+                                                    key)
+                    elif (pcache.pool.host_has(key)
+                            and pcache.pool.promote(key) is not None):
+                        # zero-flash rehydration just to fold the values;
+                        # release straight back into the LRU (the admit
+                        # compose re-acquires or re-promotes)
+                        eng.feed_streaming_resident(st.carry, pcache.pool,
+                                                    key)
+                        pcache.pool.release(key)
+                    elif wanted.get(cid, 0) > 0:
+                        break           # another request's load lands it
+                    else:
+                        # expected pages vanished (reclaimed, no host copy,
+                        # nobody reloading): drop the carry — the admit-time
+                        # re-park reloads the pages and the admission falls
+                        # back to the all-at-once prefill
+                        st.carry = None
+                        st.carry_dropped = True
+                        break
+                    st.fold_idx += 1
+                    st.fold_off = 0
+                    st.fold_blk = 0
 
         def finish(r: RequestRecord):
             ids = r.tokens
@@ -349,9 +594,13 @@ class ContinuousScheduler:
             t_adm = time.perf_counter()
             with tr.span("admit", req=i, slot=slot):
                 if self.paged:
+                    st = r.stream
                     with tr.span("load_wait", req=i):
                         t = time.perf_counter()
-                        payloads = dict(zip(r.to_load, r.future.result()))
+                        payloads = dict(r.preloaded)
+                        if r.future is not None:
+                            payloads.update(zip(r.loading,
+                                                r.future.result()))
                         r.load_stall_s = time.perf_counter() - t
                     with tr.span("compose", req=i,
                                  chunks=len(r.req.chunk_ids)):
@@ -362,11 +611,29 @@ class ContinuousScheduler:
                         r.compose_s = time.perf_counter() - t
                     for cid in r.to_load:
                         wanted[cid] -= 1
-                    with tr.span("prefill", req=i):
+                    if st is not None:
+                        # streamed chunks were real flash reads that compose
+                        # saw as pool hits — reattribute for the counters
+                        # (min-guard: a streamed chunk reclaimed before
+                        # admit re-entered compose as a genuine miss)
+                        n_str = min(len(st.committed), hits)
+                        hits -= n_str
+                        misses += n_str
+                        flash_bytes += st.bytes
+                    streamed = (st is not None and st.carry is not None
+                                and st.carry.n_seen == n_doc)
+                    with tr.span("prefill", req=i, streamed=streamed):
                         t = time.perf_counter()
-                        first = eng.prefill_row_paged(pcache, slot,
-                                                      r.req.prompt)
+                        if streamed:
+                            first = eng.prefill_row_streamed(
+                                pcache, slot, r.req.prompt, st.carry)
+                        else:
+                            first = eng.prefill_row_paged(pcache, slot,
+                                                          r.req.prompt)
                         r.prefill_s = time.perf_counter() - t
+                    if st is not None:
+                        reg.counter("serve.streamed_admits" if streamed
+                                    else "serve.streamed_fallbacks").inc()
                     reg.counter("serve.chunk_hits").inc(hits)
                     reg.counter("serve.chunk_misses").inc(misses)
                 else:
@@ -418,33 +685,90 @@ class ContinuousScheduler:
             active[slot] = r
             return True
 
+        def ready(r: RequestRecord) -> bool:
+            if r.stream is not None:
+                st = r.stream
+                if not st.started or not st.done:
+                    return False     # streams not opened / still arriving
+                if r.future is not None and not r.future.done():
+                    return False     # re-park reloads still in flight
+                if st.carry is not None and st.carry.n_seen != st.n_doc:
+                    return False     # carry still folding (warm chunks an
+                                     # earlier request is landing)
+            elif r.future is None or not r.future.done():
+                return False         # loads not started (materializing) /
+                                     # still in flight
+            # paged: a chunk another pending request is loading isn't
+            # admissible until its pages land (wanted drops to 0 once the
+            # loader admits; if the pages were since reclaimed the
+            # pre-admit check below re-parks the request)
+            return all(pcache.pool.has(eng.page_key(c))
+                       or wanted.get(c, 0) == 0
+                       for c in r.expected)
+
+        def repark_reclaimed(r: RequestRecord) -> bool:
+            """Admit-time reclaim race: ready() saw the expected pages (or a
+            live wanted count), but they were reclaimed while the request
+            queued and nobody is reloading them. Re-issue the loads and
+            re-park instead of composing over freed blocks (the old
+            behavior stalled the scheduler on a synchronous read)."""
+            wants = list(r.expected) + (r.stream.keys
+                                        if r.stream is not None else [])
+            missing = [c for c in dict.fromkeys(wants)
+                       if not pcache.pool.has(eng.page_key(c))
+                       and not pcache.pool.host_has(eng.page_key(c))
+                       and wanted.get(c, 0) == 0
+                       and c not in r.preloaded]
+            if not missing:
+                return False
+            if r.future is not None and r.future.done():
+                # salvage payloads already read for this request
+                r.preloaded.update(zip(r.loading, r.future.result()))
+            for c in missing:
+                if c in r.expected:
+                    r.expected.remove(c)
+                r.to_load.append(c)
+                wanted[c] = wanted.get(c, 0) + 1
+            r.loading = missing
+            r.future = self.loader.load_many(missing)
+            # NOTE: a completed carry stays valid across a re-park — it
+            # folded the chunk VALUES, and the re-read bytes are the same
+            # artifact — so the streamed prefill still runs at admit
+            reg.counter("serve.reparks").inc()
+            tr.instant("repark", req=order[id(r)], chunks=len(missing))
+            return True
+
         while upcoming or pending or active:
             poll_arrivals()
             poll_materialized()
+            if self.streaming:
+                pump_streams()
             # backfill free slots with loaded requests (FIFO, skip-ahead only
             # past requests whose loads are still in flight)
-            def ready(r: RequestRecord) -> bool:
-                if r.future is None or not r.future.done():
-                    return False     # loads not started (materializing) /
-                                     # still in flight
-                # paged: a chunk another pending request is loading isn't
-                # admissible until its pages land (wanted drops to 0 once
-                # the loader admits; if the pages were since reclaimed the
-                # compose fallback reads them synchronously)
-                return all(pcache.pool.has(eng.page_key(c))
-                           or wanted.get(c, 0) == 0
-                           for c in r.expected)
             free = [s for s in range(self.max_slots) if s not in active]
             for slot in free:
                 ready_r = next((r for r in pending if ready(r)), None)
                 if ready_r is None:
                     break
+                if self.pre_admit_hook is not None:
+                    self.pre_admit_hook(ready_r)
+                if self.paged and repark_reclaimed(ready_r):
+                    continue
                 pending.remove(ready_r)
                 admit(ready_r, slot)
             if not active:
                 in_flight = [r.future for r in pending
                              if r.future is not None]
-                if in_flight:
+                streams_live = any(
+                    r.stream is not None and r.stream.started
+                    and not r.stream.done for r in pending)
+                if streams_live:
+                    # blocks are landing every ~link/n_blocks seconds and
+                    # each pump drains-then-folds them: a 2ms nap here
+                    # would stack straight onto cold-request TTFT (the
+                    # final block's drain latency is pure admission delay)
+                    time.sleep(0.0002)
+                elif in_flight:
                     # nothing decoding: wait for the FIRST load to land (not
                     # the oldest — a tiny chunk behind a huge one must not
                     # stall), briefly so arrivals keep being polled
@@ -520,9 +844,24 @@ class ContinuousScheduler:
                 pool.stats.peak_pinned_blocks * pool.bytes_per_block)
             reg.gauge("pool.resident_chunks").set(
                 pool.stats.peak_resident_chunks)
+            reg.gauge("pool.demotions").set(pool.stats.demotions)
+            reg.gauge("pool.promotions").set(pool.stats.promotions)
         else:
             reg.gauge("pool.hbm_kv_bytes_resident").set(
                 cache.k.nbytes + cache.v.nbytes)
+        if tr.enabled:
+            # flash-read wall times + the fraction hidden behind decode
+            # steps (satellite of the streaming-admission claim). On a
+            # tracer shared across runs these cover the tracer's lifetime,
+            # not just this run — benches use a fresh tracer per run.
+            try:
+                for name, _ts, dur, _tid, _a in tr.spans():
+                    if name == "flash_read":
+                        reg.hist("serve.flash_read_s").observe(dur)
+                reg.gauge("serve.load_overlap_frac").set(
+                    span_overlap_frac(tr, "flash_read", "decode_step"))
+            except ValueError:
+                pass    # another role mid-span on a shared tracer
         # ServeMetrics is a derived view over the run's registry
         metrics = ServeMetrics.from_registry(
             reg, role=getattr(self.engine, "role", "both"))

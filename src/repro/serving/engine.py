@@ -139,6 +139,17 @@ class RagEngine(_DecodePlane):
         self.vdb.delete(chunk_id, kv_store=self.store)
         self._chunks.pop(chunk_id, None)
 
+    def chunk_n_tokens(self, chunk_id: str) -> Optional[int]:
+        """Token count of an ingested chunk, from the retrieval index —
+        available before any flash byte arrives, which lets the streaming
+        scheduler seed a request's carry at stream START instead of waiting
+        for every chunk's artifact header to cross the (shared, possibly
+        saturated) link. Returns None for ids this engine never ingested;
+        a mismatch vs the artifact surfaces as a carry-fold fallback, not
+        a wrong answer."""
+        c = self._chunks.get(chunk_id)
+        return None if c is None else int(len(c.tokens))
+
     # -- retrieval ----------------------------------------------------------------
     def retrieve(self, question: str) -> List[str]:
         q = self.embedder.embed_tokens(self.tok.encode(question))

@@ -63,6 +63,13 @@ class ServeMetrics:
     flash_bytes_per_request: List[int] = field(default_factory=list)
     chunk_hits: int = 0                    # chunk already GPU-resident
     chunk_misses: int = 0                  # chunk had to be read + inserted
+    flash_read_s: List[float] = field(default_factory=list)
+                                           # per-read flash wall times (from
+                                           # the trace's flash_read spans;
+                                           # empty when tracing is off)
+    load_overlap_frac: float = 0.0         # fraction of flash-read time
+                                           # hidden behind decode_step spans
+                                           # (the overlap claim, measured)
     hbm_kv_bytes_resident: int = 0         # peak KV bytes resident in HBM
     resident_chunks_peak: int = 0          # paged: peak distinct chunks in
                                            # the pool (codec-sensitive: one
@@ -162,6 +169,9 @@ class ServeMetrics:
                 int(x) for x in reg.hist_values("request.flash_bytes")],
             chunk_hits=int(reg.value("serve.chunk_hits")),
             chunk_misses=int(reg.value("serve.chunk_misses")),
+            flash_read_s=[float(x)
+                          for x in reg.hist_values("serve.flash_read_s")],
+            load_overlap_frac=float(reg.value("serve.load_overlap_frac")),
             hbm_kv_bytes_resident=int(
                 reg.peak("pool.hbm_kv_bytes_resident")),
             resident_chunks_peak=int(reg.peak("pool.resident_chunks")),

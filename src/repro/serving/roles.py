@@ -48,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.chunking import Chunk, chunk_document
-from repro.core.compose import compose_attn_cache_rows
+from repro.core.compose import StreamingPrefix, compose_attn_cache_rows
 from repro.core.materialize import (Materializer, load_artifact,
                                     load_artifact_encoded)
 from repro.core.quantize import get_codec, quantize_kv
@@ -111,6 +111,15 @@ class _DecodePlane:
         # row-slotted step (continuous batching); jit retraces per shape
         self._row_step_fn = jax.jit(
             self._meshed(lambda p, c, t: self.model.decode_step_rows(p, c, t)))
+        # streaming admission (DESIGN.md §16): layer-0 prompt queries + the
+        # carry-finalizing streamed step; both retrace per prompt shape
+        self._q0_fn = jax.jit(
+            self._meshed(lambda p, t, n: self.model.streaming_prompt_q0(
+                p, t, n)))
+        self._streamed_step_fn = jax.jit(
+            self._meshed(
+                lambda p, c, t, q0, m, l, acc:
+                self.model.decode_step_rows_streamed(p, c, t, q0, m, l, acc)))
         # fused paged steps, keyed by (table width, codec, pool geometry)
         self._fused_step_fns = {}
         # chunk_id -> last generation-tagged pool key this worker installed
@@ -262,7 +271,8 @@ class _DecodePlane:
     def init_paged_cache(self, max_slots: int, buf_size: int,
                          block_size: int = 64,
                          n_blocks: Optional[int] = None,
-                         pool_budget_bytes: Optional[int] = None):
+                         pool_budget_bytes: Optional[int] = None,
+                         host_tier=None):
         """Build the pool + page-table cache for ``max_slots`` decode slots.
 
         The pool stores blocks in the engine codec's layout (int8 pages +
@@ -298,7 +308,8 @@ class _DecodePlane:
                                     + self.top_k * chunk_blocks) + 4
         pool = PagedKvPool(self.cfg, n_blocks=n_blocks,
                            block_size=block_size, codec=self.codec,
-                           mesh=self.mesh, rules=self.rules)
+                           mesh=self.mesh, rules=self.rules,
+                           host_tier=host_tier)
         return PagedRowCache(pool, max_slots, buf_size)
 
     def _drop_stale_generation(self, pool, chunk_id: str, key: str) -> None:
@@ -341,6 +352,13 @@ class _DecodePlane:
             key = self.page_key(cid)
             self._drop_stale_generation(pool, cid, key)
             if pool.acquire(key) is not None:
+                hits += 1
+            elif pool.promote(key) is not None:
+                # host-DRAM mid-tier re-promotion (DESIGN.md §16): a chunk
+                # whose pages were reclaimed-and-demoted rehydrates from
+                # host bytes with ZERO flash bytes re-read — counted as a
+                # hit here (no flash traffic), disambiguated by
+                # pool.stats.promotions
                 hits += 1
             else:
                 payload = payloads.get(cid)
@@ -401,6 +419,83 @@ class _DecodePlane:
         first, row = self.prefill_row(row, prompt)
         sq = len(prompt)
         # host-side tail map from compose time — no device round-trip
+        pcache.scatter_range(pcache.rows[slot].tail_slots[:sq],
+                             row.k, row.v, n_doc)
+        pcache.set_row_state(slot, row.slot_pos[0], row.length[0])
+        return first
+
+    # -- streaming admission (block-granular arrival, DESIGN.md §16) -------------
+    #
+    # A cold request need not wait for its last page: the scheduler starts
+    # per-chunk block streams (AsyncKvLoader.load_stream), the pool grows a
+    # per-chunk resident frontier (begin/extend/commit_stream), and the
+    # layer-0 prompt-over-document attention folds incrementally into a
+    # StreamingPrefix carry — in retrieval-token order — while the loader
+    # races the tail. Admission then runs ``prefill_row_streamed``, whose
+    # first token matches the all-at-once path (greedy-identical; the carry
+    # restates _flash_fwd's exact online body).
+
+    def streaming_supported(self) -> bool:
+        """Streamed admission serves dense/vlm full-attention paged mode:
+        the layer-0 peel needs a homogeneous scanned stack, and a sliding
+        window would mask document slots the carry already folded."""
+        return (self.cfg.family in ("dense", "vlm")
+                and self.cfg.sliding_window is None and not self.rerotate)
+
+    def begin_streaming_prefix(self, req: RowRequest, n_doc: int,
+                               bucket: int = 64) -> StreamingPrefix:
+        """Seed a request's carry once its composed-prefix length is known
+        (every chunk's token count — resident chunks from the pool, in-
+        flight ones from their stream headers)."""
+        q0 = self._q0_fn(self.params, jnp.asarray(req.prompt)[None],
+                         jnp.asarray([n_doc], jnp.int32))
+        return StreamingPrefix.begin(q0, self.cfg.num_kv_heads,
+                                     bucket=bucket)
+
+    def feed_streaming_block(self, sp: StreamingPrefix, enc) -> int:
+        """Fold one arriving block's layer-0 K/V into the carry. The block
+        is decoded exactly as the pool view would decode it (identity for
+        bf16; ``dequantize_kv`` math for int8), so the carry consumes the
+        same values the all-at-once gather would."""
+        dt = jnp.dtype(self.cfg.activation_dtype)
+        k = enc.codec.decode(
+            jnp.asarray(enc.k[0]),
+            None if enc.k_scale is None else jnp.asarray(enc.k_scale[0]), dt)
+        v = enc.codec.decode(
+            jnp.asarray(enc.v[0]),
+            None if enc.v_scale is None else jnp.asarray(enc.v_scale[0]), dt)
+        return sp.update(k, v)
+
+    def feed_streaming_resident(self, sp: StreamingPrefix, pool,
+                                key: str) -> int:
+        """Fold a pool-resident chunk's layer-0 pages into the carry (the
+        warm-chunk path: no flash bytes, values straight off the pool in
+        the same decode the dense gather performs)."""
+        slots = jnp.asarray(pool.chunk_slot_ids(key))
+        k0 = jnp.take(pool.k[0], slots, axis=0)
+        v0 = jnp.take(pool.v[0], slots, axis=0)
+        if pool.k_scale is not None:
+            ks = jnp.take(pool.k_scale[0], slots, axis=0)
+            vs = jnp.take(pool.v_scale[0], slots, axis=0)
+            k0 = (k0.astype(jnp.float32)
+                  * ks.astype(jnp.float32)[..., None]).astype(pool.dtype)
+            v0 = (v0.astype(jnp.float32)
+                  * vs.astype(jnp.float32)[..., None]).astype(pool.dtype)
+        return sp.update(k0, v0)
+
+    def prefill_row_streamed(self, pcache, slot: int, prompt: np.ndarray,
+                             sp: StreamingPrefix) -> jnp.ndarray:
+        """Streamed counterpart of ``prefill_row_paged``: same gather /
+        scatter / row-state bookkeeping, but the row step consumes the
+        already-folded layer-0 carry instead of recomputing the document
+        attention the stream already paid for."""
+        row = pcache.dense_row_view(slot)
+        n_doc = pcache.rows[slot].n_doc
+        logits, row = self._streamed_step_fn(
+            self.params, row, jnp.asarray(prompt)[None],
+            sp.q0, sp.m, sp.l, sp.acc)
+        first = greedy(logits[:, -1])
+        sq = len(prompt)
         pcache.scatter_range(pcache.rows[slot].tail_slots[:sq],
                              row.k, row.v, n_doc)
         pcache.set_row_state(slot, row.slot_pos[0], row.length[0])
