@@ -5,8 +5,8 @@ accessed 2+ times (the population for which materialization pays off)."""
 from __future__ import annotations
 
 import numpy as np
-
 from benchmarks.common import row
+
 from repro.retrieval import HashingEmbedder, VectorDB
 
 

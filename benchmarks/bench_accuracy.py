@@ -14,8 +14,8 @@ import tempfile
 
 import jax
 import numpy as np
-
 from benchmarks.common import row
+
 from repro.configs import get_config
 from repro.data import KvQaTask, batched, f1_score
 from repro.kvstore import FlashKVStore

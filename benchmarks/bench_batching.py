@@ -7,6 +7,7 @@ from __future__ import annotations
 import tempfile
 
 from benchmarks.common import QUESTIONS, make_engine, row
+
 from repro.serving import BatchScheduler
 
 

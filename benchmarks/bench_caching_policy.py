@@ -9,8 +9,8 @@ comparing eviction policies by hit rate and GPU-recompute seconds saved."""
 from __future__ import annotations
 
 import numpy as np
-
 from benchmarks.common import row
+
 from repro.core.economics import H100
 from repro.core.tiering import (CostAwarePolicy, LfuPolicy, LruPolicy,
                                 TieredStore)

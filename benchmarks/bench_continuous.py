@@ -25,8 +25,8 @@ import tempfile
 import time
 
 import numpy as np
-
 from benchmarks.common import QUESTIONS, emit_result, make_engine, row
+
 from repro.serving import BatchScheduler, ContinuousScheduler
 
 MAX_NEW_CHOICES = (2, 4, 8, 16)

@@ -5,6 +5,7 @@ int8-on-flash extension: halved bytes => doubled break-even interval."""
 from __future__ import annotations
 
 from benchmarks.common import row
+
 from repro.configs import REGISTRY
 from repro.core.economics import (H100, PM9A3, RTX4090, SAMSUNG_9100_PRO,
                                   break_even_interval_days,

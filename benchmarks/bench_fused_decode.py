@@ -33,6 +33,7 @@ import tempfile
 import time
 
 from benchmarks.common import DOCS, emit_result, make_engine, row
+
 from repro.analysis.roofline import paged_step_kv_bytes_for_pool
 from repro.serving import ContinuousScheduler
 

@@ -8,9 +8,10 @@ Vanilla-on-4090 is ~3x slower (the paper's headline)."""
 from __future__ import annotations
 
 from benchmarks.common import row
+
+from repro.configs import get_config
 from repro.core.economics import (H100, PM9A3, RAID0_9100_PRO_X4, RTX4090,
                                   load_cost, prefill_cost)
-from repro.configs import get_config
 
 N_REQ = 200
 CHUNKS = 1

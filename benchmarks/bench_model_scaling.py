@@ -10,10 +10,10 @@ from __future__ import annotations
 import tempfile
 
 import jax
-
 from benchmarks.common import CHUNK_TOKENS, DOCS, QUESTIONS, row, timeit
+
 from repro.configs import get_config
-from repro.core.economics import H100, RAID0_9100_PRO_X4, load_cost, prefill_cost
+from repro.core.economics import H100, RAID0_9100_PRO_X4, load_cost
 from repro.kvstore import FlashKVStore
 from repro.models import build_model
 from repro.serving import RagEngine

@@ -28,6 +28,7 @@ import tempfile
 import time
 
 from benchmarks.common import QUESTIONS, emit_result, make_engine, row
+
 from repro.core.economics import SsdSpec
 from repro.kvstore import SimulatedReader
 from repro.obs import Tracer

@@ -19,8 +19,8 @@ from __future__ import annotations
 import tempfile
 
 import numpy as np
-
 from benchmarks.common import DOCS, emit_result, make_engine, row
+
 from repro.analysis.roofline import paged_step_kv_bytes_for_pool
 from repro.serving import ContinuousScheduler
 

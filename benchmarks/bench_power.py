@@ -10,6 +10,7 @@ Tables IV/V: MatKV ~0.5x the energy of Vanilla, overlap slightly better."""
 from __future__ import annotations
 
 from benchmarks.common import row
+
 from repro.configs import get_config
 from repro.core.economics import (H100, RAID0_9100_PRO_X4, load_cost,
                                   prefill_cost)

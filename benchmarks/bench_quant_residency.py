@@ -28,8 +28,8 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-
 from benchmarks.common import DOCS, emit_result, make_engine, row
+
 from repro.core.quantize import quantize_kv
 from repro.kernels import ref
 from repro.kernels.paged_decode_quant import paged_decode_quant

@@ -10,6 +10,7 @@ from __future__ import annotations
 import tempfile
 
 from benchmarks.common import QUESTIONS, make_engine, row
+
 from repro.core.economics import load_cost
 from repro.kvstore import PROFILES, SimulatedReader
 from repro.serving import RagEngine

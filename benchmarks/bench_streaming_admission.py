@@ -51,8 +51,8 @@ import sys
 import tempfile
 
 import numpy as np
-
 from benchmarks.common import QUESTIONS, emit_result, make_engine, row
+
 from repro.analysis.roofline import streaming_ttft_model
 from repro.core.economics import SsdSpec
 from repro.kvstore import SimulatedReader

@@ -14,13 +14,10 @@ from __future__ import annotations
 import functools
 import json
 import os
-import tempfile
 import time
 from pathlib import Path
-from typing import Dict, List, Tuple
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.kvstore import FlashKVStore

@@ -23,7 +23,6 @@ import tempfile
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.kvstore import FlashKVStore, SimulatedReader

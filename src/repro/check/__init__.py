@@ -1,0 +1,46 @@
+"""repro.check — "reprolint": repo-invariant static analysis (DESIGN.md §17).
+
+An AST-based analyzer (stdlib ``ast`` only, zero dependencies) whose rules
+are distilled from this repo's own bug history: every rule encodes a
+concurrency/ownership contract that a past PR shipped a
+failing-before-verified fix for, so the serving tier can't silently
+reintroduce the bug class. Run it as::
+
+    python -m repro.check [paths...]
+
+Rules (each maps to the PR/bug that motivated it — DESIGN.md §17):
+
+========  =============================================================
+RP101     pool ref/stream pairing: ``acquire``/``begin_stream``/
+          ``alloc_private`` need a matching release reachable on all
+          paths (try/finally or single-exit), or an ownership-transfer
+          suppression.
+RP102     donated-buffer reuse: a buffer passed at a ``donate_argnums``
+          position of a jitted callable is dead after the call unless
+          the call statement rebinds it.
+RP103     bare ``Future.exception()``/``result()`` inside
+          ``add_done_callback`` callbacks without a cancellation guard
+          (the PR 7 ``CancelledError``-out-of-callbacks hang).
+RP104     mutation of underscore-prefixed shared state of a
+          lock-carrying class outside ``with self._lock``.
+RP105     Pallas kernel-body purity: no host/numpy access, ``float64``,
+          side-effecting builtins, or closure mutation inside a
+          ``pl.pallas_call`` kernel fn.
+RP106     wall-clock reads (``time.time``/``perf_counter``/
+          ``monotonic``) in modules that declare an injectable clock
+          (``now_fn``/``clock``) instead of using it.
+========  =============================================================
+
+Suppress a finding with an inline ``# repro: noqa[RP1xx]`` comment on any
+line of the flagged statement — by convention followed by a justification.
+"""
+
+from repro.check.core import (Finding, RULES, check_paths, check_source,
+                              iter_py_files)
+from repro.check.lockorder import (LockOrderError, LockOrderRegistry,
+                                   TrackedLock, instrumented)
+
+__all__ = [
+    "Finding", "RULES", "check_paths", "check_source", "iter_py_files",
+    "LockOrderError", "LockOrderRegistry", "TrackedLock", "instrumented",
+]

@@ -1,0 +1,78 @@
+"""``python -m repro.check [paths...]`` — the reprolint CLI (CI lint gate).
+
+Exit codes: 0 = clean, 1 = findings, 2 = usage error (unknown rule code,
+missing path). ``--format json`` emits a machine-readable report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.check.core import RULES, check_paths, check_source, iter_py_files
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="reprolint: repo-invariant static analysis "
+                    "(DESIGN.md §17)")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to check "
+                         "(default: src/repro)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", default=None, metavar="RP101,RP104",
+                    help="comma-separated rule codes to run (default: all)")
+    ap.add_argument("--no-noqa", action="store_true",
+                    help="report findings even where a "
+                         "`# repro: noqa[...]` suppresses them")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    import repro.check.rules  # noqa: F401  (registers RULES)
+    if args.list_rules:
+        for code, r in sorted(RULES.items()):
+            print(f"{code}  {r.summary}")
+        return 0
+
+    select = None
+    if args.select:
+        select = [c.strip().upper() for c in args.select.split(",")
+                  if c.strip()]
+        unknown = [c for c in select if c not in RULES]
+        if unknown:
+            print(f"unknown rule code(s): {', '.join(unknown)} "
+                  f"(see --list-rules)", file=sys.stderr)
+            return 2
+
+    try:
+        files = list(iter_py_files(args.paths))
+        findings = check_paths(args.paths, select=select,
+                               respect_noqa=not args.no_noqa)
+    except FileNotFoundError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        print(json.dumps({
+            "schema": 1,
+            "checked_files": len(files),
+            "findings": [f.as_dict() for f in findings],
+        }, indent=1))
+    else:
+        for f in findings:
+            print(f.render())
+        print(f"repro.check: {len(findings)} finding(s) in "
+              f"{len(files)} file(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
+
+
+# re-exported for tests that drive the CLI in-process
+__all__ = ["main", "check_source"]

@@ -1,0 +1,200 @@
+"""Analyzer core: rule registry, noqa suppression, file walking, reporting.
+
+The rules themselves live in :mod:`repro.check.rules`; this module owns
+everything rule-independent — parsing, the parent-link pass every rule
+relies on, the ``# repro: noqa[RPxxx]`` protocol, and ordering/rendering of
+findings. Zero dependencies beyond the stdlib by design: the analyzer gates
+CI, so it must run before (and without) the jax toolchain.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
+                    Sequence, Tuple)
+
+#: matches ``# repro: noqa`` (blanket) or ``# repro: noqa[RP101,RP104]``
+_NOQA_RE = re.compile(r"#\s*repro:\s*noqa(?:\[([A-Za-z0-9_,\s]*)\])?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location.
+
+    ``span`` is the (first, last) physical line of the enclosing statement:
+    a ``# repro: noqa[code]`` comment on *any* of those lines suppresses the
+    finding, so multi-line call chains can carry the justification where it
+    reads best.
+    """
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+    span: Tuple[int, int] = field(default=(0, 0), compare=False)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"code": self.code, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+
+RuleFn = Callable[[ast.Module, List[str], str], Iterable[Finding]]
+
+
+@dataclass(frozen=True)
+class Rule:
+    code: str
+    summary: str
+    fn: RuleFn
+
+
+#: code -> Rule; populated by the ``@rule`` decorator in rules.py
+RULES: Dict[str, Rule] = {}
+
+
+def rule(code: str, summary: str) -> Callable[[RuleFn], RuleFn]:
+    def deco(fn: RuleFn) -> RuleFn:
+        if code in RULES:
+            raise ValueError(f"duplicate rule code {code}")
+        RULES[code] = Rule(code, summary, fn)
+        return fn
+    return deco
+
+
+# -- AST plumbing shared by every rule ---------------------------------------
+
+def attach_parents(tree: ast.AST) -> None:
+    """Link every node to its parent (``_repro_parent``) — the rules walk
+    ancestor chains for with/try/function containment."""
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._repro_parent = parent  # type: ignore[attr-defined]
+
+
+def ancestors(node: ast.AST) -> Iterator[ast.AST]:
+    cur = getattr(node, "_repro_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_repro_parent", None)
+
+
+def stmt_span(node: ast.AST) -> Tuple[int, int]:
+    stmt = node
+    if not isinstance(node, ast.stmt):
+        for anc in ancestors(node):
+            if isinstance(anc, ast.stmt):
+                stmt = anc
+                break
+    return (getattr(stmt, "lineno", getattr(node, "lineno", 0)),
+            getattr(stmt, "end_lineno", getattr(node, "end_lineno", 0)) or 0)
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` source path of a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def node_pos(node: ast.AST) -> Tuple[int, int]:
+    return (getattr(node, "lineno", 0), getattr(node, "col_offset", 0))
+
+
+_SCOPES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda, ast.ClassDef)
+
+
+def own_nodes(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function's body without descending into nested scopes
+    (nested defs/lambdas/classes own their resources independently)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, _SCOPES):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def func_defs(tree: ast.AST) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# -- suppression -------------------------------------------------------------
+
+def _suppressed_codes(line: str) -> Optional[set]:
+    """Codes a source line's noqa comment suppresses; empty set = blanket
+    (all codes); None = no noqa comment on the line."""
+    m = _NOQA_RE.search(line)
+    if m is None:
+        return None
+    if m.group(1) is None:
+        return set()
+    return {c.strip().upper() for c in m.group(1).split(",") if c.strip()}
+
+
+def is_suppressed(finding: Finding, lines: Sequence[str]) -> bool:
+    lo, hi = finding.span
+    if lo <= 0:
+        lo = hi = finding.line
+    for ln in range(lo, min(hi, len(lines)) + 1):
+        codes = _suppressed_codes(lines[ln - 1])
+        if codes is not None and (not codes or finding.code in codes):
+            return True
+    return False
+
+
+# -- entry points ------------------------------------------------------------
+
+def check_source(src: str, path: str = "<string>",
+                 select: Optional[Sequence[str]] = None,
+                 respect_noqa: bool = True) -> List[Finding]:
+    """Run the (selected) rules over one source text."""
+    import repro.check.rules  # noqa: F401  (registers RULES on first use)
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding("RP000", path, e.lineno or 1, (e.offset or 1) - 1,
+                        f"syntax error: {e.msg}")]
+    attach_parents(tree)
+    lines = src.splitlines()
+    findings: List[Finding] = []
+    for code, r in sorted(RULES.items()):
+        if select is not None and code not in select:
+            continue
+        findings.extend(r.fn(tree, lines, path))
+    if respect_noqa:
+        findings = [f for f in findings if not is_suppressed(f, lines)]
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.code))
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterator[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        elif path.suffix == ".py":
+            yield path
+        else:
+            raise FileNotFoundError(f"not a .py file or directory: {p}")
+
+
+def check_paths(paths: Sequence[str],
+                select: Optional[Sequence[str]] = None,
+                respect_noqa: bool = True) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_py_files(paths):
+        findings.extend(check_source(f.read_text(), str(f), select=select,
+                                     respect_noqa=respect_noqa))
+    return findings

@@ -1,0 +1,212 @@
+"""Runtime lock-order detector (DESIGN.md §17).
+
+``TrackedLock`` wraps ``threading.Lock`` and records, per thread, which
+locks are held when a new one is acquired. Every held->acquired pair is an
+edge in a global acquisition-order graph keyed by the lock's *creation
+site* (``file:line``, the lockdep convention: all instances of a class's
+lock share one node, so an ordering observed between two ``ChunkStream``
+locks and two pool locks generalizes). A cycle in that graph means two
+code paths acquire the same locks in opposite orders — a deadlock waiting
+for the right interleaving, even if this run never hit it.
+
+Usage in tests (see ``tests/conftest.py``)::
+
+    reg = LockOrderRegistry()
+    with instrumented(reg, async_loader, queue, cache_tier):
+        ... exercise loader/pool/scheduler ...
+    reg.assert_clean()          # raises LockOrderError on any cycle
+
+``instrumented`` swaps each module's ``threading`` reference for a shim
+whose ``Lock()``/``RLock()`` return tracked locks; everything else
+delegates to the real module. Locks created while instrumented keep
+working after uninstall (they hold their own registry reference).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import threading
+from contextlib import contextmanager
+from types import ModuleType
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+
+class LockOrderError(AssertionError):
+    """A lock-acquisition-order cycle (potential deadlock) was observed."""
+
+
+def _caller_site(skip_file: str) -> str:
+    """``file.py:line`` of the nearest stack frame outside this module —
+    the lock's creation site, which names its node in the order graph."""
+    frame = sys._getframe(1)
+    while frame is not None:
+        if frame.f_code.co_filename != skip_file:
+            return (f"{os.path.basename(frame.f_code.co_filename)}"
+                    f":{frame.f_lineno}")
+        frame = frame.f_back
+    return "<unknown>"
+
+
+class LockOrderRegistry:
+    """Acquisition-order graph + violation log shared by tracked locks."""
+
+    def __init__(self) -> None:
+        self._graph_lock = threading.Lock()   # plain: guards the graph only
+        # a -> b: an edge "a was held while b was acquired", annotated with
+        # the first thread/site that observed it
+        self._edges: Dict[str, Dict[str, str]] = {}
+        self._tls = threading.local()
+        self._reported: set = set()        # (held, acquired) pairs reported
+        self.violations: List[str] = []
+
+    # -- per-thread held stack ------------------------------------------------
+    def _held(self) -> List[str]:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    # -- graph ---------------------------------------------------------------
+    def _path(self, src: str, dst: str) -> Optional[List[str]]:
+        """A directed path src -> ... -> dst in the edge graph, or None."""
+        stack: List[Tuple[str, List[str]]] = [(src, [src])]
+        seen = {src}
+        while stack:
+            node, path = stack.pop()
+            if node == dst:
+                return path
+            for nxt in self._edges.get(node, ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append((nxt, path + [nxt]))
+        return None
+
+    def note_acquire(self, name: str, reentrant: bool = False) -> None:
+        held = self._held()
+        if name in held and not reentrant:
+            self.violations.append(
+                f"self-deadlock: {name} acquired while already held by "
+                f"this thread (held: {' -> '.join(held)})")
+        with self._graph_lock:
+            for h in held:
+                if h == name:
+                    continue
+                back = self._path(name, h)
+                if back is not None and (h, name) not in self._reported:
+                    self._reported.add((h, name))
+                    self.violations.append(
+                        f"lock-order cycle: acquiring {name} while holding "
+                        f"{h}, but the reverse order "
+                        f"{' -> '.join(back)} was already observed "
+                        f"(first at {self._edges[back[0]][back[1]]})")
+                self._edges.setdefault(h, {}).setdefault(
+                    name, f"thread={threading.current_thread().name}")
+        held.append(name)
+
+    def note_release(self, name: str) -> None:
+        held = self._held()
+        # release may be out of LIFO order (rare but legal) — remove the
+        # most recent matching entry
+        for i in range(len(held) - 1, -1, -1):
+            if held[i] == name:
+                del held[i]
+                return
+
+    def edges(self) -> Dict[str, Dict[str, str]]:
+        with self._graph_lock:
+            return {a: dict(bs) for a, bs in self._edges.items()}
+
+    def assert_clean(self) -> None:
+        if self.violations:
+            raise LockOrderError(
+                "lock-order violations observed:\n  "
+                + "\n  ".join(self.violations))
+
+
+class TrackedLock:
+    """Drop-in ``threading.Lock`` recording acquisition order."""
+
+    def __init__(self, registry: LockOrderRegistry,
+                 name: Optional[str] = None, reentrant: bool = False):
+        self._registry = registry
+        self.name = name or _caller_site(__file__)
+        self._reentrant = reentrant
+        self._lock = threading.RLock() if reentrant else threading.Lock()
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        got = self._lock.acquire(blocking, timeout)
+        if got:
+            self._registry.note_acquire(self.name,
+                                        reentrant=self._reentrant)
+        return got
+
+    def release(self) -> None:
+        self._lock.release()
+        self._registry.note_release(self.name)
+
+    def locked(self) -> bool:
+        locked = getattr(self._lock, "locked", None)
+        if locked is not None:
+            return locked()
+        if self._lock.acquire(blocking=False):   # RLock pre-3.12 fallback
+            self._lock.release()
+            return False
+        return True
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc: object) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return f"<TrackedLock {self.name}>"
+
+
+class _ThreadingShim:
+    """Stands in for a module's ``threading`` reference: ``Lock``/``RLock``
+    become tracked, everything else delegates to the real module."""
+
+    def __init__(self, registry: LockOrderRegistry):
+        self._registry = registry
+
+    def Lock(self) -> TrackedLock:
+        return TrackedLock(self._registry, name=_caller_site(__file__))
+
+    def RLock(self) -> TrackedLock:
+        return TrackedLock(self._registry, name=_caller_site(__file__),
+                           reentrant=True)
+
+    def __getattr__(self, item: str) -> object:
+        return getattr(threading, item)
+
+
+def install(registry: LockOrderRegistry,
+            modules: Sequence[ModuleType]) -> Dict[ModuleType, object]:
+    """Point each module's ``threading`` attribute at a tracking shim;
+    returns the originals for :func:`uninstall`."""
+    shim = _ThreadingShim(registry)
+    saved: Dict[ModuleType, object] = {}
+    for m in modules:
+        if not hasattr(m, "threading"):
+            raise ValueError(f"{m.__name__} does not import threading — "
+                             f"nothing to instrument")
+        saved[m] = m.threading
+        m.threading = shim
+    return saved
+
+
+def uninstall(saved: Dict[ModuleType, object]) -> None:
+    for m, original in saved.items():
+        m.threading = original
+
+
+@contextmanager
+def instrumented(registry: LockOrderRegistry,
+                 *modules: ModuleType) -> Iterator[LockOrderRegistry]:
+    saved = install(registry, modules)
+    try:
+        yield registry
+    finally:
+        uninstall(saved)

@@ -1,0 +1,589 @@
+"""The six reprolint rules (RP101–RP106), one per historical bug class.
+
+Every rule here is an approximation with a deliberate bias: flag the shape
+of a bug this repo actually shipped (see DESIGN.md §17 for the rule ->
+PR/bug map) and accept that legitimate cross-function ownership transfers
+need an inline ``# repro: noqa[RPxxx]`` with a justifying comment — the
+suppression then *documents the contract* at the hand-off site.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Iterator, List, Optional, Set
+
+from repro.check.core import (Finding, ancestors, dotted, func_defs,
+                              node_pos, own_nodes, rule, stmt_span)
+
+# mutating container/collection methods — calling one of these on shared
+# state is a write even though the attribute itself is only loaded
+_MUTATORS = {"append", "extend", "add", "update", "pop", "popleft",
+             "appendleft", "popitem", "clear", "remove", "discard",
+             "insert", "setdefault", "move_to_end", "difference_update"}
+
+
+def _finding(code: str, node: ast.AST, path: str, msg: str) -> Finding:
+    line, col = node_pos(node)
+    return Finding(code, path, line, col, msg, span=stmt_span(node))
+
+
+def _attr_calls(nodes: Iterable[ast.AST]) -> Iterator[ast.Call]:
+    for n in nodes:
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute):
+            yield n
+
+
+# ---------------------------------------------------------------------------
+# RP101 — pool ref / stream pairing (PR 3/5 double frees, PR 9 stream leaks)
+# ---------------------------------------------------------------------------
+
+_ACQ_PAIRS = {
+    "acquire": ("release", "release_row_paged"),
+    "begin_stream": ("commit_stream", "abort_stream"),
+    "alloc_private": ("free_private",),
+}
+
+
+def _is_pool_recv(recv: Optional[str]) -> bool:
+    """``acquire`` is also a ``threading.Lock`` method — only pool-ish
+    receivers (``pool``, ``pcache.pool``, ``self.pool``, ...) are in scope."""
+    if not recv:
+        return False
+    return "pool" in recv.split(".")[-1].lower()
+
+
+def _in_finally_of(rel: ast.AST) -> Optional[ast.Try]:
+    for anc in ancestors(rel):
+        if isinstance(anc, ast.Try):
+            for stmt in anc.finalbody:
+                if rel is stmt or any(rel is n for n in ast.walk(stmt)):
+                    return anc
+    return None
+
+
+def _branch_depth(fn: ast.AST, node: ast.AST) -> int:
+    """How many conditional/looping constructs sit between ``node`` and the
+    function body — a release nested deeper than its acquire is a release
+    some paths skip."""
+    depth = 0
+    for anc in ancestors(node):
+        if anc is fn:
+            break
+        if isinstance(anc, (ast.If, ast.For, ast.While, ast.AsyncFor,
+                            ast.ExceptHandler, ast.IfExp)):
+            depth += 1
+    return depth
+
+
+@rule("RP101", "pool acquire/stream/private-alloc must release on all paths")
+def rp101(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Finding]:
+    for fn in func_defs(tree):
+        nodes = list(own_nodes(fn))
+        calls = list(_attr_calls(nodes))
+        exits = [n for n in nodes if isinstance(n, (ast.Return, ast.Raise))]
+        for acq in calls:
+            kind = acq.func.attr
+            if kind not in _ACQ_PAIRS:
+                continue
+            if kind == "acquire" and not _is_pool_recv(dotted(acq.func.value)):
+                continue
+            rel_names = _ACQ_PAIRS[kind]
+            rels = [c for c in calls if c.func.attr in rel_names]
+            if not rels:
+                yield _finding(
+                    "RP101", acq, path,
+                    f"{kind}() with no {' / '.join(rel_names)} in this "
+                    f"function — pair it, or suppress with a comment naming "
+                    f"where ownership transfers to")
+                continue
+            protected = False
+            for rel in rels:
+                t = _in_finally_of(rel)
+                if t is not None and node_pos(rel) > node_pos(acq):
+                    # release in a finally: reachable on every path out,
+                    # provided no return/raise can skip past the try after
+                    # the acquire (acquire inside the try, or acquire-then-
+                    # try with nothing risky between)
+                    t_start = node_pos(t)
+                    if node_pos(acq) >= t_start or not any(
+                            node_pos(acq) < node_pos(e) < t_start
+                            for e in exits):
+                        protected = True
+                        break
+                # single-exit: no return/raise between acquire and release,
+                # and the release no more conditional than the acquire
+                if (node_pos(rel) > node_pos(acq)
+                        and _branch_depth(fn, rel) <= _branch_depth(fn, acq)
+                        and not any(node_pos(acq) < node_pos(e)
+                                    < node_pos(rel) for e in exits)):
+                    protected = True
+                    break
+            if not protected:
+                yield _finding(
+                    "RP101", acq, path,
+                    f"{kind}() release is conditional or jumped over by an "
+                    f"early return/raise — move it to a try/finally")
+
+
+# ---------------------------------------------------------------------------
+# RP102 — donated-buffer reuse (PR 3: scatter jits donate the pool buffers)
+# ---------------------------------------------------------------------------
+
+def _donate_positions(node: ast.AST) -> Optional[Set[int]]:
+    """Literal ``donate_argnums`` positions; None when unresolvable."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out: Set[int] = set()
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, int)):
+                return None
+            out.add(e.value)
+        return out
+    if isinstance(node, ast.IfExp):
+        a, b = _donate_positions(node.body), _donate_positions(node.orelse)
+        if a is not None and b is not None:
+            return a | b                 # either branch may donate: union
+    return None
+
+
+def _donating_call(call: ast.AST) -> Optional[Set[int]]:
+    """Donated positions if ``call`` is ``jax.jit(..., donate_argnums=...)``
+    or ``functools.partial(jax.jit, donate_argnums=...)``."""
+    if not isinstance(call, ast.Call):
+        return None
+    fname = dotted(call.func) or ""
+    is_jit = fname == "jit" or fname.endswith(".jit")
+    is_partial_jit = (fname.endswith("partial") and call.args
+                      and (dotted(call.args[0]) or "").endswith("jit"))
+    if not (is_jit or is_partial_jit):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return _donate_positions(kw.value)
+    return None
+
+
+def _donating_names(tree: ast.Module) -> Dict[str, Set[int]]:
+    """name -> donated positions, for jit-wrapped defs and assignments."""
+    out: Dict[str, Set[int]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                pos = _donating_call(dec)
+                if pos:
+                    out[node.name] = pos
+        elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = dotted(node.targets[0])
+            pos = _donating_call(node.value)
+            if tgt and pos:
+                out[tgt] = pos
+    return out
+
+
+def _assign_targets(stmt: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        stack = [t]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.Tuple, ast.List, ast.Starred)):
+                stack.extend(getattr(n, "elts", [])
+                             or [getattr(n, "value", None)])
+            else:
+                d = dotted(n)
+                if d:
+                    out.add(d)
+    return out
+
+
+@rule("RP102", "buffer read after being donated to a jitted call")
+def rp102(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Finding]:
+    donating = _donating_names(tree)
+    if not donating:
+        return
+    for fn in func_defs(tree):
+        nodes = sorted(own_nodes(fn), key=node_pos)
+        # rebind events: (pos, dotted-target) — a rebind of `x` (or of a
+        # prefix like `pool` for `pool.k`) makes the name live again
+        rebinds = []
+        for n in nodes:
+            if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                for tgt in _assign_targets(n):
+                    rebinds.append((node_pos(n), tgt))
+        for call in nodes:
+            if not isinstance(call, ast.Call):
+                continue
+            fname = dotted(call.func)
+            pos = donating.get(fname or "")
+            if not pos:
+                continue
+            stmt_lo, stmt_hi = stmt_span(call)
+            stmt_targets: Set[str] = set()
+            for anc in ancestors(call):
+                if isinstance(anc, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    stmt_targets = _assign_targets(anc)
+                    break
+            for i in sorted(pos):
+                if i >= len(call.args):
+                    continue
+                donated = dotted(call.args[i])
+                if donated is None or donated in stmt_targets:
+                    continue           # rebound by the call statement itself
+                prefixes = {donated}
+                parts = donated.split(".")
+                for k in range(1, len(parts)):
+                    prefixes.add(".".join(parts[:k]))
+                cutoff = min((p for p, t in rebinds
+                              if t in prefixes and p[0] > stmt_hi),
+                             default=(1 << 30, 0))
+                for use in nodes:
+                    upos = node_pos(use)
+                    if not (stmt_hi < upos[0] and upos < cutoff):
+                        continue
+                    if isinstance(use, (ast.Attribute, ast.Name)) and \
+                            isinstance(use.ctx, ast.Load) and \
+                            dotted(use) == donated:
+                        yield _finding(
+                            "RP102", use, path,
+                            f"{donated!r} read after being donated to "
+                            f"{fname}() (donate_argnums={i}) — the buffer "
+                            f"is invalidated by the call")
+                        break
+
+
+# ---------------------------------------------------------------------------
+# RP103 — bare Future.exception()/result() in done callbacks (PR 7 hang)
+# ---------------------------------------------------------------------------
+
+def _callback_bodies(tree: ast.Module) -> Iterator[ast.AST]:
+    """Functions/lambdas registered via ``*.add_done_callback(cb)``."""
+    defs: Dict[str, List[ast.AST]] = {}
+    for fd in func_defs(tree):
+        defs.setdefault(fd.name, []).append(fd)
+    seen: Set[int] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_done_callback" and node.args):
+            continue
+        cb = node.args[0]
+        targets: List[ast.AST] = []
+        if isinstance(cb, ast.Lambda):
+            targets = [cb]
+        elif isinstance(cb, ast.Name):
+            targets = defs.get(cb.id, [])
+        for t in targets:
+            if id(t) not in seen:
+                seen.add(id(t))
+                yield t
+
+
+def _catches_cancelled(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:
+        return True
+    types = (handler.type.elts if isinstance(handler.type, ast.Tuple)
+             else [handler.type])
+    for t in types:
+        name = (dotted(t) or "").split(".")[-1]
+        if name in ("CancelledError", "BaseException", "Exception"):
+            return True
+    return False
+
+
+@rule("RP103", "done-callback calls Future.exception()/result() unguarded")
+def rp103(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Finding]:
+    for cb in _callback_bodies(tree):
+        nodes = sorted(ast.walk(cb), key=node_pos)
+        # a `fut.cancelled()` probe or an `_outcome(fut)`-style helper call
+        # guards every later exception()/result() on the same name
+        guarded_names: Dict[str, tuple] = {}
+        for n in nodes:
+            if not isinstance(n, ast.Call):
+                continue
+            if isinstance(n.func, ast.Attribute):
+                recv = dotted(n.func.value)
+                if n.func.attr == "cancelled" and recv:
+                    guarded_names.setdefault(recv, node_pos(n))
+                if n.func.attr in ("_outcome", "outcome"):
+                    for a in n.args:
+                        d = dotted(a)
+                        if d:
+                            guarded_names.setdefault(d, node_pos(n))
+            elif isinstance(n.func, ast.Name) and \
+                    n.func.id in ("_outcome", "outcome"):
+                for a in n.args:
+                    d = dotted(a)
+                    if d:
+                        guarded_names.setdefault(d, node_pos(n))
+        for n in nodes:
+            if not (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr in ("exception", "result")):
+                continue
+            recv = dotted(n.func.value)
+            if recv is None:
+                continue
+            guard = guarded_names.get(recv)
+            if guard is not None and guard <= node_pos(n):
+                continue
+            if any(isinstance(anc, ast.Try)
+                   and any(_catches_cancelled(h) for h in anc.handlers)
+                   and any(n is w for s in anc.body for w in ast.walk(s))
+                   for anc in ancestors(n)):
+                continue
+            yield _finding(
+                "RP103", n, path,
+                f"bare {recv}.{n.func.attr}() in an add_done_callback "
+                f"callback: on a cancelled future it raises CancelledError "
+                f"(a BaseException) out of Future._invoke_callbacks, "
+                f"silently aborting later callbacks — check "
+                f"{recv}.cancelled() first or catch CancelledError")
+
+
+# ---------------------------------------------------------------------------
+# RP104 — lock-guarded shared state mutated outside the lock
+# ---------------------------------------------------------------------------
+
+def _is_self_attr(node: ast.AST, name: Optional[str] = None) -> Optional[str]:
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        if name is None or node.attr == name:
+            return node.attr
+    return None
+
+
+def _lock_attrs(cls: ast.ClassDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            fname = (dotted(node.value.func) or "").split(".")[-1]
+            if fname in ("Lock", "RLock"):
+                for t in node.targets:
+                    attr = _is_self_attr(t)
+                    if attr:
+                        out.add(attr)
+    return out
+
+
+def _with_lock_node(node: ast.AST, locks: Set[str]) -> bool:
+    """Is ``node`` inside a ``with self.<lock>:`` block?"""
+    for anc in ancestors(node):
+        if isinstance(anc, (ast.With, ast.AsyncWith)):
+            for item in anc.items:
+                ctx = item.context_expr
+                if isinstance(ctx, ast.Call):
+                    ctx = ctx.func       # with self._lock.acquire_timeout()…
+                attr = _is_self_attr(ctx)
+                if attr in locks:
+                    return True
+    return False
+
+
+def _mutations(method: ast.AST) -> Iterator[tuple]:
+    """(attr_name, node, verb) for each mutation of a ``self._x`` in
+    ``method`` — direct (re)binds, augmented assigns, subscript stores, and
+    mutating container-method calls."""
+    for n in own_nodes(method):
+        if isinstance(n, ast.Attribute) and \
+                isinstance(n.ctx, (ast.Store, ast.Del)):
+            attr = _is_self_attr(n)
+            if attr:
+                yield attr, n, "assigned"
+        elif isinstance(n, ast.Subscript) and \
+                isinstance(n.ctx, (ast.Store, ast.Del)):
+            attr = _is_self_attr(n.value)
+            if attr:
+                yield attr, n, "item-assigned"
+        elif isinstance(n, ast.AugAssign):
+            tgt = n.target
+            attr = _is_self_attr(tgt) or (
+                isinstance(tgt, ast.Subscript) and _is_self_attr(tgt.value))
+            if attr:
+                yield attr, n, "aug-assigned"
+        elif isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                and n.func.attr in _MUTATORS:
+            attr = _is_self_attr(n.func.value)
+            if attr:
+                yield attr, n, f".{n.func.attr}()-mutated"
+
+
+@rule("RP104", "lock-guarded underscore state mutated outside the lock")
+def rp104(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Finding]:
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        locks = _lock_attrs(cls)
+        if not locks:
+            continue
+        # the guarded set: underscore attrs this class itself accesses under
+        # one of its locks anywhere — those are the documented thread-facing
+        # shared state
+        guarded: Set[str] = set()
+        for node in ast.walk(cls):
+            attr = None
+            if isinstance(node, ast.Attribute):
+                attr = _is_self_attr(node)
+            elif isinstance(node, ast.Subscript):
+                attr = _is_self_attr(node.value)
+            if (attr and attr.startswith("_") and attr not in locks
+                    and _with_lock_node(node, locks)):
+                guarded.add(attr)
+        if not guarded:
+            continue
+        # nested defs are scanned as functions of their own: closures are
+        # exactly the code that ends up on worker threads (done callbacks,
+        # pool submissions), so they don't inherit __init__'s exemption
+        for method in func_defs(cls):
+            if method.name in ("__init__", "__new__", "__del__"):
+                continue               # construction/teardown is unshared
+            for attr, node, verb in _mutations(method):
+                if attr in guarded and not _with_lock_node(node, locks):
+                    yield _finding(
+                        "RP104", node, path,
+                        f"self.{attr} is {verb} outside `with self."
+                        f"{'/'.join(sorted(locks))}` but is elsewhere "
+                        f"accessed under it — racing threads can interleave")
+
+
+# ---------------------------------------------------------------------------
+# RP105 — Pallas kernel-body purity
+# ---------------------------------------------------------------------------
+
+_HOST_MODULES = {"np", "numpy", "time", "os", "sys", "random", "io"}
+_HOST_BUILTINS = {"print", "open", "input", "breakpoint", "exec", "eval"}
+
+
+def _kernel_fns(tree: ast.Module) -> Iterator[ast.AST]:
+    """Functions passed (directly or via functools.partial) as the kernel
+    argument of a ``pl.pallas_call``."""
+    defs = {fd.name: fd for fd in func_defs(tree)}
+    partials: Dict[str, str] = {}      # local name -> wrapped fn name
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.value, ast.Call) and node.value.args:
+            fname = dotted(node.value.func) or ""
+            if fname.endswith("partial"):
+                tgt, inner = dotted(node.targets[0]), dotted(node.value.args[0])
+                if tgt and inner:
+                    partials[tgt] = inner
+    seen: Set[int] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and (dotted(node.func) or "").endswith("pallas_call")
+                and node.args):
+            continue
+        arg = node.args[0]
+        name = dotted(arg)
+        if isinstance(arg, ast.Call) and \
+                (dotted(arg.func) or "").endswith("partial") and arg.args:
+            name = dotted(arg.args[0])
+        if name in partials:
+            name = partials[name]
+        fd = defs.get(name or "")
+        if fd is not None and id(fd) not in seen:
+            seen.add(id(fd))
+            yield fd
+
+
+def _local_bindings(fn: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs
+              + ([args.vararg] if args.vararg else [])
+              + ([args.kwarg] if args.kwarg else [])):
+        out.add(a.arg)
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store):
+            out.add(n.id)
+        elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.add(n.name)
+    return out
+
+
+@rule("RP105", "impure Pallas kernel body")
+def rp105(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Finding]:
+    for fn in _kernel_fns(tree):
+        local = _local_bindings(fn)
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                    and n.id in _HOST_MODULES and n.id not in local:
+                yield _finding(
+                    "RP105", n, path,
+                    f"host module {n.id!r} used inside Pallas kernel "
+                    f"{fn.name!r} — kernel bodies trace to device code and "
+                    f"must not touch the host")
+            elif isinstance(n, ast.Call) and isinstance(n.func, ast.Name) \
+                    and n.func.id in _HOST_BUILTINS and n.func.id not in local:
+                yield _finding(
+                    "RP105", n, path,
+                    f"side-effecting builtin {n.func.id}() inside Pallas "
+                    f"kernel {fn.name!r}")
+            elif (isinstance(n, ast.Attribute) and n.attr == "float64") or \
+                    (isinstance(n, ast.Constant) and n.value == "float64"):
+                yield _finding(
+                    "RP105", n, path,
+                    f"float64 inside Pallas kernel {fn.name!r} — TPU lanes "
+                    f"are 32-bit; f64 silently falls back or errors")
+            elif isinstance(n, (ast.Global, ast.Nonlocal)):
+                yield _finding(
+                    "RP105", n, path,
+                    f"{'global' if isinstance(n, ast.Global) else 'nonlocal'}"
+                    f" inside Pallas kernel {fn.name!r} — the kernel traces "
+                    f"once; closure mutation is a silent no-op per launch")
+            elif isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                    and n.func.attr in _MUTATORS \
+                    and isinstance(n.func.value, ast.Name) \
+                    and n.func.value.id not in local:
+                yield _finding(
+                    "RP105", n, path,
+                    f"mutation of closure variable "
+                    f"{n.func.value.id!r} inside Pallas kernel {fn.name!r} "
+                    f"— runs at trace time, not per launch")
+
+
+# ---------------------------------------------------------------------------
+# RP106 — wall-clock reads where an injectable clock is declared
+# ---------------------------------------------------------------------------
+
+_CLOCK_PARAMS = {"now_fn", "clock"}
+_WALL_CLOCKS = {"time.time", "time.perf_counter", "time.monotonic"}
+
+
+def _declares_clock(tree: ast.Module) -> Optional[str]:
+    for fn in func_defs(tree):
+        args = fn.args
+        for a in args.posonlyargs + args.args + args.kwonlyargs:
+            if a.arg in _CLOCK_PARAMS:
+                return a.arg
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.ctx, ast.Store) and \
+                node.attr.lstrip("_") in _CLOCK_PARAMS:
+            return node.attr
+    return None
+
+
+@rule("RP106", "wall-clock read in a module with an injectable clock")
+def rp106(tree: ast.Module, lines: List[str], path: str
+          ) -> Iterator[Finding]:
+    declared = _declares_clock(tree)
+    if declared is None:
+        return
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Call) and dotted(n.func) in _WALL_CLOCKS:
+            yield _finding(
+                "RP106", n, path,
+                f"direct {dotted(n.func)}() call in a module that declares "
+                f"an injectable clock ({declared!r}) — route it through the "
+                f"injected clock so tests stay deterministic")

@@ -8,21 +8,20 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from repro.configs.base import ATTENTION, RECURRENT, ModelConfig
+from repro.configs.base import ATTENTION, ModelConfig, RECURRENT
+from repro.configs.deepseek_moe_16b import CONFIG as _deepseek_moe
+from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
+from repro.configs.granite_8b import CONFIG as _granite
+from repro.configs.llama_paper import LLAMA_3B, LLAMA_70B, LLAMA_8B
+from repro.configs.llava_next_mistral_7b import CONFIG as _llava_next
+from repro.configs.phi4_mini_3_8b import CONFIG as _phi4_mini
+from repro.configs.qwen3_14b import CONFIG as _qwen3_14b
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
+from repro.configs.recurrentgemma_2b import CONFIG as _recurrentgemma
 from repro.configs.shapes import (InputShape, SHAPES, get_shape,
                                   shape_applicable)
-
-from repro.configs.whisper_tiny import CONFIG as _whisper_tiny
-from repro.configs.deepseek_moe_16b import CONFIG as _deepseek_moe
-from repro.configs.qwen3_14b import CONFIG as _qwen3_14b
-from repro.configs.phi4_mini_3_8b import CONFIG as _phi4_mini
-from repro.configs.recurrentgemma_2b import CONFIG as _recurrentgemma
-from repro.configs.falcon_mamba_7b import CONFIG as _falcon_mamba
-from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
-from repro.configs.llava_next_mistral_7b import CONFIG as _llava_next
 from repro.configs.smollm_135m import CONFIG as _smollm
-from repro.configs.granite_8b import CONFIG as _granite
-from repro.configs.llama_paper import LLAMA_3B, LLAMA_8B, LLAMA_70B
+from repro.configs.whisper_tiny import CONFIG as _whisper_tiny
 
 # The 10 assigned architectures.
 ASSIGNED: Dict[str, ModelConfig] = {

@@ -10,8 +10,8 @@ consistency so a bad config fails at construction, not deep inside a jit trace.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 # Layer-kind tags used by hybrid block patterns.
 RECURRENT = "recurrent"

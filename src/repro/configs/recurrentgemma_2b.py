@@ -3,7 +3,7 @@ vocab=256000. Griffin block pattern — two RG-LRU (recurrent) blocks followed b
 one local (sliding-window 2048) attention block. [arXiv:2402.19427]
 """
 
-from repro.configs.base import ATTENTION, RECURRENT, ModelConfig
+from repro.configs.base import ATTENTION, ModelConfig, RECURRENT
 
 CONFIG = ModelConfig(
     name="recurrentgemma-2b",

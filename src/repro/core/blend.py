@@ -26,8 +26,8 @@ from repro.models.mlp import mlp
 from repro.models.moe import moe_ffn
 from repro.models.norms import rms_norm
 from repro.models.rope import rope_q_k
-from repro.models.transformer import embed_inputs
 from repro.models.scan_utils import scan_layers
+from repro.models.transformer import embed_inputs
 
 
 def hkvd_select(cfg, params, tokens, cache: AttnCache, ratio: float):

@@ -18,7 +18,7 @@ each other (their KVs are already frozen) — the paper's key accuracy insight.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -24,10 +24,10 @@ from __future__ import annotations
 
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
-from repro.core.economics import (GpuSpec, SsdSpec, H100, SAMSUNG_9100_PRO,
+from repro.core.economics import (GpuSpec, H100, SAMSUNG_9100_PRO, SsdSpec,
                                   break_even_interval_s)
 
 

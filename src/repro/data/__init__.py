@@ -1,6 +1,6 @@
 from repro.data.pipeline import PrefetchIterator, batched
 from repro.data.synthetic import KvQaTask, QaExample, f1_score, lm_stream
-from repro.data.tokenizer import BOS, EOS, PAD, SEP, ByteTokenizer
+from repro.data.tokenizer import BOS, ByteTokenizer, EOS, PAD, SEP
 
 __all__ = ["PrefetchIterator", "batched", "KvQaTask", "QaExample", "f1_score",
            "lm_stream", "BOS", "EOS", "PAD", "SEP", "ByteTokenizer"]

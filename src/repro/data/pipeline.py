@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Dict, Iterator
+from typing import Dict, Iterator
 
 import numpy as np
 

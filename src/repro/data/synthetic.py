@@ -17,7 +17,7 @@ from typing import Dict, Iterator, List, Tuple
 
 import numpy as np
 
-from repro.data.tokenizer import BOS, EOS, SEP, ByteTokenizer
+from repro.data.tokenizer import ByteTokenizer, EOS, SEP
 
 
 def lm_stream(vocab_size: int, batch: int, seq_len: int, seed: int = 0

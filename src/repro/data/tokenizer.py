@@ -4,8 +4,6 @@ synthetic QA benchmarks; any vocab_size >= 260 model config can consume it."""
 
 from __future__ import annotations
 
-from typing import List
-
 import numpy as np
 
 PAD = 0

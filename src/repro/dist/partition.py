@@ -27,13 +27,11 @@ Conventions (Megatron-style tensor parallelism; DESIGN.md §6):
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import Rules, _spec_merged, merge_rules
 

@@ -32,8 +32,7 @@ import math
 from typing import Dict, Optional, Tuple, Union
 
 import jax
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist import _compat  # noqa: F401  (installs jax version shims)
 

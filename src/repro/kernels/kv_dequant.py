@@ -8,12 +8,9 @@ next to the compute. Elementwise, tiled over (rows, hd) VMEM blocks.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(q_ref, s_ref, o_ref):

@@ -12,8 +12,19 @@ from __future__ import annotations
 import concurrent.futures as cf
 import threading
 from dataclasses import dataclass
-from typing import (Callable, Dict, Iterable, Iterator, List, Optional,
-                    Sequence, Tuple)
+from typing import (Any, Callable, Dict, Iterable, Iterator, List, Optional,
+                    Protocol, Sequence, Tuple)
+
+
+class SupportsGet(Protocol):
+    """The flash-reader surface the loader needs: blocking byte reads
+    keyed by chunk id (FlashKVStore, SimulatedReader, TieredStore...)."""
+
+    def get(self, chunk_id: str) -> bytes: ...
+
+
+#: one completed stream block: (t0, t1, EncodedKV payload, encoded bytes)
+Block = Tuple[int, int, Any, int]
 
 
 @dataclass
@@ -36,18 +47,17 @@ class ChunkStream:
     (``error``) rather than a raise on the worker thread.
     """
 
-    def __init__(self, chunk_id: str):
+    def __init__(self, chunk_id: str) -> None:
         self.chunk_id = chunk_id
         self._lock = threading.Lock()
-        # appended (t0, t1, EncodedKV, encoded_bytes) per completed block
-        self._blocks: List[tuple] = []
+        self._blocks: List[Block] = []         # appended per completed block
         self.n_tokens: Optional[int] = None    # set once the header is read
         self.total_bytes = 0                   # encoded bytes read so far
         self.header_bytes = 0
         self.error: Optional[BaseException] = None
         self._done = False
 
-    def drain_from(self, cursor: int) -> "Tuple[List[tuple], int]":
+    def drain_from(self, cursor: int) -> Tuple[List[Block], int]:
         """Blocks completed since ``cursor``; returns (new_blocks, cursor')."""
         with self._lock:
             return self._blocks[cursor:], len(self._blocks)
@@ -67,7 +77,7 @@ class ChunkStream:
             self.n_tokens = n_tokens
             self.header_bytes = header_bytes
 
-    def _push(self, t0: int, t1: int, enc, nbytes: int) -> None:
+    def _push(self, t0: int, t1: int, enc: Any, nbytes: int) -> None:
         with self._lock:
             self._blocks.append((t0, t1, enc, nbytes))
             self.total_bytes += nbytes
@@ -86,7 +96,8 @@ class AsyncKvLoader:
     entry), so it never grows into a payload cache; persistent reuse is the
     paged pool's job."""
 
-    def __init__(self, reader, n_workers: int = 4, tracer=None):
+    def __init__(self, reader: SupportsGet, n_workers: int = 4,
+                 tracer: Optional[Any] = None) -> None:
         from repro.obs import NULL_TRACER
         self.reader = reader
         self.pool = cf.ThreadPoolExecutor(max_workers=n_workers,
@@ -206,8 +217,8 @@ class AsyncKvLoader:
         read may complete (and drop its registry entry) between two
         ``_load`` calls of the same batch.
         """
-        batch: Dict[str, "Tuple[cf.Future[bytes], bool]"] = {}
-        loads = []
+        batch: Dict[str, Tuple[cf.Future[bytes], bool]] = {}
+        loads: List[Tuple[cf.Future[bytes], bool]] = []
         for c in chunk_ids:
             if c in batch:
                 loads.append((batch[c][0], False))
@@ -215,8 +226,8 @@ class AsyncKvLoader:
                 batch[c] = self._load(c)
                 loads.append(batch[c])
         futures = [f for f, _ in loads]
-        out: "cf.Future[List[bytes]]" = cf.Future()
-        out.initiated_flags = [i for _, i in loads]
+        out: cf.Future[List[bytes]] = cf.Future()
+        out.initiated_flags = [i for _, i in loads]  # type: ignore[attr-defined]
         out.set_running_or_notify_cancel()
         if not futures:
             out.set_result([])
@@ -230,7 +241,7 @@ class AsyncKvLoader:
                 pending -= 1
                 if pending:
                     return
-            results = []
+            results: List[bytes] = []
             for f in futures:
                 exc = self._outcome(f)    # cancellation as a value, not a
                 if exc is not None:       # callback-aborting raise
@@ -243,7 +254,7 @@ class AsyncKvLoader:
             f.add_done_callback(on_done)
         return out
 
-    def shutdown(self, wait: bool = True, cancel: bool = False):
+    def shutdown(self, wait: bool = True, cancel: bool = False) -> None:
         """Stop the loader. ``cancel=True`` additionally cancels queued
         (not-yet-running) reads: their futures — and any ``load_many``
         gather waiting on them — resolve with CancelledError instead of
@@ -265,16 +276,16 @@ class PrefetchPipeline:
     (``<=``) used to hold depth+1 payloads live.
     """
 
-    def __init__(self, items: Iterable, load_fn: Callable, depth: int = 1,
-                 n_workers: int = 2):
+    def __init__(self, items: Iterable[Any], load_fn: Callable[[Any], Any],
+                 depth: int = 1, n_workers: int = 2) -> None:
         self._items = list(items)
         self._load_fn = load_fn
         self._depth = max(1, depth)
         self._pool = cf.ThreadPoolExecutor(max_workers=n_workers,
                                            thread_name_prefix="prefetch")
 
-    def __iter__(self) -> Iterator:
-        inflight: Dict[int, cf.Future] = {}
+    def __iter__(self) -> Iterator[Tuple[Any, Any]]:
+        inflight: Dict[int, cf.Future[Any]] = {}
         idx = 0
         try:
             while idx < len(self._items) and len(inflight) < self._depth:

@@ -11,9 +11,9 @@ import os
 import struct
 import threading
 import uuid
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 from repro.kvstore.serialization import read_meta
 

@@ -39,7 +39,7 @@ from repro.analysis.roofline import (Roofline, model_flops_for,
                                      parse_collectives, time_scan_correction)
 from repro.configs import ASSIGNED, SHAPES, get_shape
 from repro.launch.mesh import make_production_mesh
-from repro.launch.specs import Inapplicable, make_lowerable, resolved_config
+from repro.launch.specs import Inapplicable, make_lowerable
 
 RESULTS = Path("experiments/dryrun/results.jsonl")
 

@@ -10,7 +10,7 @@ repro.dist, ready for ``jit(...).lower(...).compile()``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,7 @@ from repro.dist.partition import (batch_specs, cache_specs, param_specs,
                                   to_shardings, zero1_specs)
 from repro.dist.sharding import mesh_context
 from repro.models import build_model
-from repro.training.optimizer import AdamWConfig, init_state, apply_updates
+from repro.training.optimizer import AdamWConfig, apply_updates, init_state
 
 WHISPER_DECODER_LEN = 448
 

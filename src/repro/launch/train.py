@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ASSIGNED, get_config
 from repro.data.pipeline import PrefetchIterator

@@ -22,9 +22,9 @@ from repro.models.attention import (attn_cross, attn_with_prefix, cross_kv,
                                     flash_attention, init_attention, project_kv,
                                     project_q)
 from repro.models.cache import EncDecCache, write_kv
-from repro.models.scan_utils import scan_layers
 from repro.models.mlp import init_mlp, mlp
 from repro.models.norms import layer_norm
+from repro.models.scan_utils import scan_layers
 
 
 def _ln_params(d, dt):

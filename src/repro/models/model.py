@@ -16,8 +16,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import cache as cache_lib
-from repro.models import encdec, transformer
+from repro.models import cache as cache_lib, encdec, transformer
 from repro.models.scan_utils import scan_layers
 
 

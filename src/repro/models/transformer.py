@@ -15,15 +15,13 @@ Three entry points per model (the MatKV lifecycle):
 
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ATTENTION, RECURRENT
+from repro.configs.base import ATTENTION
 from repro.dist.sharding import shard
-from repro.models import cache as cache_lib
 from repro.kernels.streaming_prefix import carry_block, carry_finalize
 from repro.models.attention import (attn_into_cache, attn_into_cache_rows,
                                     attn_paged_fused, attn_self,

@@ -5,12 +5,12 @@ scheduler, role workers, CLI — can import it unconditionally.  See
 DESIGN.md §15 for the span taxonomy and role-merge semantics.
 """
 
+from .compare import (comparison_table, fused_step_kv_bytes_measured,
+                      predicted_vs_measured)
 from .registry import Counter, Gauge, Histogram, MetricsRegistry
 from .trace import (NULL_TRACER, TRACE_SCHEMA, Tracer, arg_values,
                     load_chrome, merge_chrome, span_overlap_frac,
                     validate_chrome)
-from .compare import (comparison_table, fused_step_kv_bytes_measured,
-                      predicted_vs_measured)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",

@@ -47,8 +47,8 @@ from __future__ import annotations
 
 import math
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Union
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -107,11 +107,11 @@ class _StreamEntry:
 class PagedKvPool:
     """Fixed-size KV block pool with ref-counted, chunk-keyed shared pages."""
 
-    def __init__(self, cfg, n_blocks: int, block_size: int = 64,
-                 n_layers: Optional[int] = None, dtype=None,
+    def __init__(self, cfg: Any, n_blocks: int, block_size: int = 64,
+                 n_layers: Optional[int] = None, dtype: Any = None,
                  codec: Union[str, KvCodec, None] = None,
-                 mesh=None, rules: Optional[dict] = None,
-                 host_tier=None):
+                 mesh: Any = None, rules: Optional[dict] = None,
+                 host_tier: Any = None) -> None:
         if n_blocks <= 0 or block_size <= 0:
             raise ValueError("PagedKvPool: n_blocks and block_size must be "
                              "positive")
@@ -132,7 +132,8 @@ class PagedKvPool:
         self.mesh = mesh
         self._rules = rules
 
-        def place(arr, names):
+        def place(arr: jax.Array, names: Sequence[Optional[str]]
+                  ) -> jax.Array:
             if mesh is None:
                 return arr
             spec = spec_for(mesh, arr.shape, names, rules)
@@ -142,6 +143,8 @@ class PagedKvPool:
         shape = (self.n_layers, n_slots, cfg.num_kv_heads, cfg.head_dim)
         self.k = place(jnp.zeros(shape, self.storage_dtype), _BLOCK_AXES)
         self.v = place(jnp.zeros(shape, self.storage_dtype), _BLOCK_AXES)
+        self.k_scale: Optional[jax.Array]
+        self.v_scale: Optional[jax.Array]
         if self.codec.scale_dtype is not None:
             sshape = (self.n_layers, n_slots, cfg.num_kv_heads)
             self.k_scale = place(jnp.zeros(sshape, self.codec.scale_dtype),
@@ -158,7 +161,7 @@ class PagedKvPool:
         self._entries: Dict[str, _ChunkPages] = {}
         self._lru: "OrderedDict[str, None]" = OrderedDict()  # refs == 0
         self._pinned_blocks = 0
-        self._private: set = set()   # outstanding alloc_private block ids
+        self._private: Set[int] = set()  # outstanding alloc_private ids
         self._streams: Dict[str, _StreamEntry] = {}
         # host-DRAM mid-tier (DESIGN.md §16): refs-0 pages reclaimed under
         # allocation pressure demote into this bounded byte cache instead of
@@ -173,7 +176,7 @@ class PagedKvPool:
 
     # -- sizing ----------------------------------------------------------------
     @staticmethod
-    def block_bytes(cfg, block_size: int = 64,
+    def block_bytes(cfg: Any, block_size: int = 64,
                     codec: Union[str, KvCodec, None] = None,
                     n_layers: Optional[int] = None) -> int:
         """Encoded HBM bytes of one block (K + V + scales) — usable before a
@@ -184,7 +187,8 @@ class PagedKvPool:
                 * cfg.num_kv_heads * codec.bytes_per_vector(cfg.head_dim, act))
 
     @classmethod
-    def blocks_for_budget(cls, cfg, budget_bytes: int, block_size: int = 64,
+    def blocks_for_budget(cls, cfg: Any, budget_bytes: int,
+                          block_size: int = 64,
                           codec: Union[str, KvCodec, None] = None,
                           n_layers: Optional[int] = None) -> int:
         """How many blocks one HBM byte budget buys under ``codec`` — the
@@ -342,14 +346,16 @@ class PagedKvPool:
         self.stats.chunk_hits += 1
         return pages.n_tokens
 
-    def _encode_artifact(self, k_art, v_art):
+    def _encode_artifact(self, k_art: Any, v_art: Any
+                         ) -> Tuple[jax.Array, jax.Array, Any, Any]:
         """Decoded (L, S, KV, hd) k/v -> storage tensors + scales (or None)."""
         k_enc, k_sc = self.codec.encode(k_art)
         v_enc, v_sc = self.codec.encode(v_art)
         return k_enc, v_enc, k_sc, v_sc
 
-    def insert(self, chunk_id: str, k_art=None, v_art=None, nbytes: int = 0,
-               *, encoded: Optional[EncodedKV] = None) -> int:
+    def insert(self, chunk_id: str, k_art: Any = None, v_art: Any = None,
+               nbytes: int = 0, *,
+               encoded: Optional[EncodedKV] = None) -> int:
         """Write one chunk's KV artifact into freshly allocated pages with
         refcount 1; returns the token count. Two forms:
 
@@ -391,7 +397,8 @@ class PagedKvPool:
                                               len(self._entries))
         return n_tokens
 
-    def _encode_for_write(self, encoded: EncodedKV):
+    def _encode_for_write(self, encoded: EncodedKV
+                          ) -> Tuple[jax.Array, jax.Array, Any, Any]:
         """``EncodedKV`` -> storage-form tensors: write-through when its
         codec matches the pool's, decode -> re-encode transcode otherwise."""
         k_enc, v_enc = jnp.asarray(encoded.k), jnp.asarray(encoded.v)
@@ -405,7 +412,8 @@ class PagedKvPool:
             encoded.codec.decode(k_enc, encoded.k_scale, self.dtype),
             encoded.codec.decode(v_enc, encoded.v_scale, self.dtype))
 
-    def _write_slots(self, slots, k_enc, v_enc, k_sc, v_sc) -> None:
+    def _write_slots(self, slots: np.ndarray, k_enc: jax.Array,
+                     v_enc: jax.Array, k_sc: Any, v_sc: Any) -> None:
         """Write encoded (L, t, KV, hd) tensors into pool slots ``slots``."""
         self.k = self.k.at[:, slots].set(k_enc.astype(self.storage_dtype))
         self.v = self.v.at[:, slots].set(v_enc.astype(self.storage_dtype))

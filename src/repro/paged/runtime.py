@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,7 +83,9 @@ class PagedRowCache:
         # rows racing on one slot is fine — the values are garbage either
         # way and are masked by each row's slot_pos; what matters is that
         # stale writes can never land in pages a live request uses.
-        self._scratch = pool.alloc_private(1)[0]
+        # the scratch block is engine-lifetime by design (shared
+        # dummy-write target); it is never freed.
+        self._scratch = pool.alloc_private(1)[0]  # repro: noqa[RP101]
         gi = np.stack([self.scratch_row(s) for s in range(max_slots)])
         self.gather_idx = jnp.asarray(gi)
         self.slot_pos = jnp.full((max_slots, buf_size), -1, jnp.int32)

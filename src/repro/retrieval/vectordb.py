@@ -4,7 +4,7 @@ that MatKV's delete path relies on (paper §IV delete(O))."""
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 

@@ -470,7 +470,12 @@ class ContinuousScheduler:
                         continue        # done, or header not read yet
                     if key not in st.begun:
                         try:
-                            pcache.pool.begin_stream(key, s.n_tokens)
+                            # stream lifecycle spans pump invocations:
+                            # begun here, committed (or aborted at
+                            # eviction) by a later pump once the flash
+                            # stream drains; st.begun tracks it.
+                            pcache.pool.begin_stream(  # repro: noqa[RP101]
+                                key, s.n_tokens)
                         except RuntimeError:
                             # pool momentarily full (admitted rows + live
                             # stream reservations hold the pages): retry

@@ -38,7 +38,7 @@ from repro.core.compose import (compose_attn_cache, compose_hybrid_cache,
                                 compose_ssm_cache)
 from repro.core.materialize import load_artifact
 from repro.core.quantize import get_codec
-from repro.data.tokenizer import EOS, ByteTokenizer
+from repro.data.tokenizer import ByteTokenizer, EOS
 from repro.models.cache import (AttnCache, init_attn_cache, init_hybrid_cache,
                                 init_ssm_cache, write_kv)
 from repro.retrieval.embed import HashingEmbedder

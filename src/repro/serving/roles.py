@@ -52,7 +52,7 @@ from repro.core.compose import StreamingPrefix, compose_attn_cache_rows
 from repro.core.materialize import (Materializer, load_artifact,
                                     load_artifact_encoded)
 from repro.core.quantize import get_codec, quantize_kv
-from repro.data.tokenizer import SEP, ByteTokenizer
+from repro.data.tokenizer import ByteTokenizer, SEP
 from repro.kvstore.async_loader import AsyncKvLoader
 from repro.models.cache import RowAttnCache
 from repro.obs import MetricsRegistry, NULL_TRACER
@@ -351,7 +351,9 @@ class _DecodePlane:
         for cid in req.chunk_ids:
             key = self.page_key(cid)
             self._drop_stale_generation(pool, cid, key)
-            if pool.acquire(key) is not None:
+            # ownership transfers to the RowPages handle; every ref taken
+            # here is dropped by release_row_paged at row eviction.
+            if pool.acquire(key) is not None:  # repro: noqa[RP101]
                 hits += 1
             elif pool.promote(key) is not None:
                 # host-DRAM mid-tier re-promotion (DESIGN.md §16): a chunk
@@ -392,7 +394,10 @@ class _DecodePlane:
                 f"exceeds buf_size {pcache.buf_size}; size the buffer for "
                 f"the worst-case row")
         tail = min(need + 4, pcache.buf_size - pos)
-        handle.private_blocks = pool.alloc_private(max(1, tail))
+        # the private tail belongs to the RowPages handle;
+        # release_row_paged frees it at row eviction.
+        handle.private_blocks = pool.alloc_private(  # repro: noqa[RP101]
+            max(1, tail))
         tail_slots = pool.token_slot_ids(handle.private_blocks,
                                          min(len(handle.private_blocks)
                                              * pool.block_size,

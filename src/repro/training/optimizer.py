@@ -5,7 +5,7 @@ PartitionSpecs, optionally further sharded over the data axis, ZeRO-1 style)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.training.checkpoint import save_checkpoint
-from repro.training.optimizer import (AdamWConfig, AdamWState, apply_updates,
-                                      init_state)
+from repro.training.optimizer import AdamWConfig, apply_updates, init_state
 
 
 @dataclass

@@ -13,3 +13,25 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def lock_order():
+    """Lockdep for the serving tier (repro.check.lockorder): every lock
+    created by the concurrency-bearing modules during the test is tracked,
+    and the test fails at teardown if any acquisition-order cycle (a
+    potential deadlock) was observed — even one this run never hit.
+    """
+    import repro.kvstore.async_loader as async_loader
+    import repro.kvstore.cache_tier as cache_tier
+    import repro.kvstore.simulated as simulated
+    import repro.kvstore.store as store
+    import repro.obs.trace as trace
+    import repro.serving.queue as queue_mod
+    from repro.check.lockorder import LockOrderRegistry, instrumented
+
+    reg = LockOrderRegistry()
+    with instrumented(reg, async_loader, cache_tier, simulated, store,
+                      trace, queue_mod):
+        yield reg
+    reg.assert_clean()

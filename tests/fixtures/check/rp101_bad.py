@@ -1,0 +1,29 @@
+"""RP101 fixtures (bad): the PR 3/5/9 leak shapes.
+
+Never imported — parsed by tests/test_check.py via repro.check.
+"""
+
+
+def compose_row_leaks_on_error(pool, key):
+    # the PR 5 double-free's dual: a ref taken with no release anywhere
+    pages = pool.acquire(key)
+    if pages is None:
+        raise KeyError(key)
+    return pages
+
+
+def stream_commit_skipped(pool, key, n_tokens):
+    # the PR 9 shape: an early return jumps over the commit, leaking the
+    # stream reservation
+    pool.begin_stream(key, n_tokens)
+    if n_tokens == 0:
+        return None
+    pool.commit_stream(key)
+
+
+def private_tail_conditional_free(pool, n):
+    # release nested deeper than its acquire: some paths skip it
+    blocks = pool.alloc_private(n)
+    if n > 1:
+        pool.free_private(blocks)
+    return blocks

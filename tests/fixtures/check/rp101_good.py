@@ -1,0 +1,37 @@
+"""RP101 fixtures (good): paired lifecycles the rule must accept."""
+
+
+def compose_row_paired(pool, key, transform):
+    pages = pool.acquire(key)
+    try:
+        return transform(pages)
+    finally:
+        pool.release(key)
+
+
+def stream_single_exit(pool, key, n_tokens):
+    pool.begin_stream(key, n_tokens)
+    pool.commit_stream(key)
+
+
+def stream_abort_in_finally(pool, key, n_tokens, feed):
+    pool.begin_stream(key, n_tokens)
+    committed = False
+    try:
+        for blk in feed:
+            pool.extend_stream(key, blk)
+        pool.commit_stream(key)
+        committed = True
+    finally:
+        if not committed:
+            pool.abort_stream(key)
+
+
+def lock_acquire_is_out_of_scope(lock):
+    # threading.Lock().acquire() is not a pool ref — RP101 must skip it
+    lock.acquire()
+    lock.release()
+
+
+def ownership_transfer_suppressed(pool, key, registry):
+    registry[key] = pool.acquire(key)  # repro: noqa[RP101] released by owner

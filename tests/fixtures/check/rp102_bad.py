@@ -1,0 +1,16 @@
+"""RP102 fixture (bad): the PR 3 donated-scatter reuse bug, minimized."""
+
+import jax
+
+
+def _scatter_impl(k, upd):
+    return k
+
+
+scatter = jax.jit(_scatter_impl, donate_argnums=(0,))
+
+
+def decode_step(pool, upd):
+    new_k = scatter(pool.k, upd)
+    norm = pool.k.sum()  # read of the donated (now invalid) buffer
+    return new_k, norm

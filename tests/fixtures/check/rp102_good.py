@@ -1,0 +1,27 @@
+"""RP102 fixtures (good): donation followed by rebind is the contract."""
+
+import jax
+
+
+def _scatter_impl(k, upd):
+    return k
+
+
+scatter = jax.jit(_scatter_impl, donate_argnums=(0,))
+
+
+def rebind_in_same_statement(pool, upd):
+    pool.k = scatter(pool.k, upd)
+    return pool.k.sum()
+
+
+def rebind_before_read(pool, upd):
+    out = scatter(pool.k, upd)
+    pool.k = out
+    return pool.k.sum()
+
+
+def prefix_rebind_revives(pool, make_pool, upd):
+    scatter(pool.k, upd)
+    pool = make_pool()
+    return pool.k.sum()

@@ -1,0 +1,23 @@
+"""RP103 fixture (bad): the PR 7 hang, minimized.
+
+``Future.exception()`` on a cancelled future raises CancelledError — a
+BaseException — straight out of ``Future._invoke_callbacks``, silently
+aborting every later callback on the same future.
+"""
+
+
+def submit_unguarded(executor, task, tracker):
+    fut = executor.submit(task)
+
+    def _done(f):
+        err = f.exception()
+        tracker.note(err)
+
+    fut.add_done_callback(_done)
+    return fut
+
+
+def submit_lambda_unguarded(executor, task, sink):
+    fut = executor.submit(task)
+    fut.add_done_callback(lambda f: sink.append(f.result()))
+    return fut

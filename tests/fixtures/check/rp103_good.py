@@ -1,0 +1,53 @@
+"""RP103 fixtures (good): every guard idiom the rule must accept."""
+
+import concurrent.futures as cf
+
+
+def _outcome(f):
+    if f.cancelled():
+        return None
+    return f.exception()
+
+
+def submit_cancelled_probe(executor, task, tracker):
+    fut = executor.submit(task)
+
+    def _done(f):
+        if f.cancelled():
+            tracker.note(None)
+            return
+        tracker.note(f.exception())
+
+    fut.add_done_callback(_done)
+    return fut
+
+
+def submit_outcome_helper(executor, task, tracker):
+    fut = executor.submit(task)
+
+    def _done(f):
+        err = _outcome(f)
+        if err is None:
+            tracker.note(f.result())
+
+    fut.add_done_callback(_done)
+    return fut
+
+
+def submit_try_caught(executor, task, tracker):
+    fut = executor.submit(task)
+
+    def _done(f):
+        try:
+            tracker.note(f.result())
+        except cf.CancelledError:
+            pass
+
+    fut.add_done_callback(_done)
+    return fut
+
+
+def plain_call_site_out_of_scope(fut):
+    # exception() outside a done callback is synchronous caller code —
+    # CancelledError propagates normally there, so RP103 must skip it
+    return fut.exception()

@@ -1,0 +1,37 @@
+"""RP104 fixture (bad): lock-guarded queue state mutated lock-free.
+
+Minimized from the WorkQueue/AsyncKvLoader shape: state the class itself
+treats as lock-guarded (accessed under ``with self._lock`` elsewhere)
+mutated on a path that skips the lock.
+"""
+
+import threading
+
+
+class WorkTracker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending = []
+        self._done = {}
+
+    def put(self, item):
+        with self._lock:
+            self._pending.append(item)
+            self._done.pop(item, None)
+
+    def finish(self, key, value):
+        self._done[key] = value  # item-assign outside the lock
+
+    def drop_all(self):
+        self._pending.clear()  # mutator call outside the lock
+
+    def submit(self, executor, task):
+        fut = executor.submit(task)
+
+        def _done_cb(f):
+            # nested closure runs on the executor thread — exactly the
+            # unguarded-mutation shape RP104 exists for
+            self._pending.pop()
+
+        fut.add_done_callback(_done_cb)
+        return fut

@@ -1,0 +1,34 @@
+"""RP104 fixtures (good): lock discipline the rule must accept."""
+
+import threading
+
+
+class WorkTracker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending = []  # construction is unshared: no lock needed
+
+    def put(self, item):
+        with self._lock:
+            self._pending.append(item)
+
+    def drain(self):
+        with self._lock:
+            out, self._pending = self._pending, []
+        return out
+
+    def approx_len(self):
+        # an unlocked *read* is a documented racy-snapshot idiom here;
+        # RP104 only flags mutations
+        return len(self._pending)
+
+
+class NoLockByDesign:
+    """Single-writer class (the PagedKvPool contract): no lock declared,
+    so RP104 has nothing to enforce."""
+
+    def __init__(self):
+        self._rows = []
+
+    def push(self, row):
+        self._rows.append(row)

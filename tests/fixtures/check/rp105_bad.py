@@ -1,0 +1,18 @@
+"""RP105 fixture (bad): host access + f64 inside a Pallas kernel body."""
+
+import numpy as np
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_trace_log = []
+
+
+def _bad_kernel(x_ref, o_ref):
+    host = np.zeros((8,))  # host numpy inside the kernel
+    print("step")  # side-effecting builtin
+    _trace_log.append(1)  # closure mutation: runs at trace time only
+    o_ref[...] = x_ref[...].astype(jnp.float64) + host.sum()  # f64 on TPU
+
+
+def launch(x):
+    return pl.pallas_call(_bad_kernel, out_shape=x)(x)

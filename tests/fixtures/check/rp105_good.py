@@ -1,0 +1,22 @@
+"""RP105 fixtures (good): pure kernel body; host code outside is fine."""
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _good_kernel(scale, x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float32) * scale
+
+
+def launch(x, scale):
+    kernel = functools.partial(_good_kernel, scale)
+    return pl.pallas_call(kernel, out_shape=x)(x)
+
+
+def host_helper():
+    # not a kernel body: host numpy and print are fine here
+    print("host side")
+    return np.zeros((8,))

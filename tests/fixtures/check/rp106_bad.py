@@ -1,0 +1,12 @@
+"""RP106 fixture (bad): a module declaring an injectable clock reads the
+wall clock directly — the Tracer shape, bypassing its own ``now_fn``."""
+
+import time
+
+
+class Meter:
+    def __init__(self, now_fn=time.perf_counter):
+        self._now_fn = now_fn
+
+    def stamp(self):
+        return time.perf_counter()  # bypasses the injected clock

@@ -1,0 +1,12 @@
+"""RP106 fixtures (good): the injected clock is used everywhere; the
+wall-clock *reference* in a default is fine (it is not a read)."""
+
+import time
+
+
+class Meter:
+    def __init__(self, now_fn=time.perf_counter):
+        self._now_fn = now_fn
+
+    def stamp(self):
+        return self._now_fn()

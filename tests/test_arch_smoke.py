@@ -9,7 +9,8 @@ import pytest
 
 from repro.configs import ASSIGNED, get_config
 from repro.models import build_model
-from repro.training import AdamWConfig, TrainConfig, make_train_step, init_state
+from repro.training import (AdamWConfig, TrainConfig, init_state,
+                            make_train_step)
 
 ARCHS = sorted(ASSIGNED)
 

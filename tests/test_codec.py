@@ -19,9 +19,9 @@ from repro.kernels import ref
 from repro.kernels.ops import paged_decode_quant_op
 from repro.kernels.paged_decode_quant import paged_decode_quant
 from repro.kvstore import FlashKVStore
-from repro.kvstore.serialization import read_meta, serialize
+from repro.kvstore.serialization import serialize
 from repro.models import build_model
-from repro.paged import PagedKvPool, PagedRowCache, gather_rows_quant
+from repro.paged import PagedKvPool, gather_rows_quant
 from repro.serving import (ContinuousScheduler, RagEngine, dense_row_path,
                            paged_row_path, teacher_forced_rel)
 

@@ -2,8 +2,8 @@
 
 import pytest
 
-from repro.configs import (ASSIGNED, PAPER_MODELS, REGISTRY, config_for_shape,
-                           get_config, get_shape, SHAPES)
+from repro.configs import (ASSIGNED, REGISTRY, SHAPES, config_for_shape,
+                           get_config, get_shape)
 
 
 def test_all_assigned_present():

@@ -6,11 +6,9 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.dist.sharding import DEFAULT_RULES
 
 
 def test_resolve_divisibility(monkeypatch):

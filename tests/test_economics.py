@@ -1,11 +1,11 @@
 """The ten-day rule + cost model (paper §II-C, Eq. 1)."""
 
-import pytest
 
 from repro.configs import get_config
-from repro.core.economics import (H100, RTX4090, SAMSUNG_9100_PRO, PM9A3,
-                                  break_even_interval_days, cost_ratio_per_access,
-                                  kv_mb_per_gpu_second, load_cost, prefill_cost)
+from repro.core.economics import (H100, RTX4090, SAMSUNG_9100_PRO,
+                                  break_even_interval_days,
+                                  cost_ratio_per_access, kv_mb_per_gpu_second,
+                                  load_cost, prefill_cost)
 
 
 def test_ten_day_rule_headline():

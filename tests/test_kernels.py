@@ -11,9 +11,9 @@ from repro.kernels.chunked_decode import chunked_decode
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.kv_dequant import kv_dequant
 from repro.kernels.mamba_scan import mamba_scan
-from repro.kernels.paged_decode import paged_decode
 from repro.kernels.ops import (chunked_decode_op, flash_prefill_op,
-                               kv_dequant_op, mamba_scan_op, paged_decode_op)
+                               paged_decode_op)
+from repro.kernels.paged_decode import paged_decode
 
 TOLS = {jnp.float32: dict(rtol=3e-5, atol=3e-5),
         jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}

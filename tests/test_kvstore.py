@@ -14,6 +14,14 @@ from repro.kvstore import (AsyncKvLoader, FlashKVStore, LruBytesCache,
                            deserialize, read_meta, serialize)
 
 
+@pytest.fixture(autouse=True)
+def _lockdep(lock_order):
+    """Every test here runs under the lock-order detector (conftest
+    ``lock_order``): a cycle in loader/tier lock acquisition fails the
+    test even if this run never deadlocked."""
+    yield
+
+
 def test_serialize_roundtrip_mixed_dtypes():
     import ml_dtypes
     tensors = {

@@ -13,10 +13,9 @@ from repro.core import (Materializer, chunk_document, compose_attn_cache,
                         load_artifact)
 from repro.core.blend import blend, hkvd_select
 from repro.core.chunking import chunk_id_for
-from repro.core.quantize import quantization_error, quantize_kv, dequantize_kv
+from repro.core.quantize import dequantize_kv, quantization_error, quantize_kv
 from repro.kvstore import FlashKVStore
 from repro.models import build_model
-from repro.models.cache import AttnCache, write_kv
 
 
 @pytest.fixture(scope="module")

@@ -12,9 +12,8 @@ import pytest
 from repro.configs import get_config
 from repro.kvstore import FlashKVStore
 from repro.models import build_model
-from repro.obs import (NULL_TRACER, Counter, MetricsRegistry, Tracer,
-                       arg_values, load_chrome, merge_chrome,
-                       validate_chrome)
+from repro.obs import (Counter, MetricsRegistry, NULL_TRACER, Tracer,
+                       arg_values, load_chrome, merge_chrome, validate_chrome)
 from repro.obs.trace import _NULL_SPAN
 from repro.serving import ContinuousScheduler, RagEngine
 from repro.serving.metrics import METRICS_SCHEMA, ServeMetrics

@@ -5,6 +5,7 @@ import pytest
 
 hypothesis = pytest.importorskip(
     "hypothesis", reason="hypothesis not installed; property tests skipped")
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.chunking import chunk_document
@@ -12,8 +13,6 @@ from repro.core.economics import (GpuSpec, SsdSpec, break_even_interval_s)
 from repro.core.quantize import dequantize_kv, quantize_kv
 from repro.kvstore import LruBytesCache, deserialize, serialize
 from repro.models.attention import position_mask
-
-import jax.numpy as jnp
 
 _DTYPES = [np.float32, np.float16, np.int8, np.int32]
 

@@ -2,7 +2,7 @@
 
 import numpy as np
 
-from repro.retrieval import EMBED_DIM, HashingEmbedder, VectorDB
+from repro.retrieval import HashingEmbedder, VectorDB
 
 
 def test_embedder_deterministic_and_normalized():

@@ -29,6 +29,13 @@ QUESTIONS = ["where is the amber gate?", "where is the cedar door?",
              "where is the brass lamp?"]
 
 
+@pytest.fixture(autouse=True)
+def _lockdep(lock_order):
+    """Run under the lock-order detector (conftest ``lock_order``): any
+    acquisition-order cycle observed during the test fails it."""
+    yield
+
+
 @pytest.fixture(scope="module")
 def setup():
     cfg = get_config("smollm-135m").reduced(vocab_size=300)

@@ -8,17 +8,15 @@ import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.economics import SsdSpec
 from repro.core.materialize import load_artifact_encoded
-from repro.core.quantize import get_codec
 from repro.kvstore import (ArtifactIndex, AsyncKvLoader, FlashKVStore,
                            SimulatedReader, block_payload_bytes,
                            read_block_encoded)
-from repro.core.economics import SsdSpec
 from repro.models import build_model
 from repro.obs import Tracer, span_overlap_frac
 from repro.paged import PagedKvPool
@@ -32,6 +30,13 @@ CORPUS = {
 }
 QUESTIONS = ["where is the amber gate?", "where is the cedar door?",
              "where is the brass lamp?"]
+
+
+@pytest.fixture(autouse=True)
+def _lockdep(lock_order):
+    """Run under the lock-order detector (conftest ``lock_order``): any
+    acquisition-order cycle observed during the test fails it."""
+    yield
 
 
 @pytest.fixture(scope="module")

@@ -1,11 +1,10 @@
 """Selective materialization + eviction (paper §III-E): admission by the
 per-object ten-day rule, capacity-bounded eviction, TCO-ordered victims."""
 
-import pytest
 
 from repro.core.economics import GpuSpec, SsdSpec
-from repro.core.tiering import (AlwaysAdmit, CostAwarePolicy, LfuPolicy,
-                                LruPolicy, TenDayAdmission, TieredStore)
+from repro.core.tiering import (CostAwarePolicy, LfuPolicy, LruPolicy,
+                                TenDayAdmission, TieredStore)
 
 
 class MemStore:

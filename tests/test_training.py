@@ -1,12 +1,11 @@
 """Training substrate: optimizer math, loss goes down, checkpoints roundtrip."""
 
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
+import numpy as np
 
 from repro.configs import get_config
-from repro.data import KvQaTask, batched, lm_stream, PrefetchIterator
+from repro.data import KvQaTask, PrefetchIterator, batched, lm_stream
 from repro.models import build_model
 from repro.models.model import chunked_cross_entropy, cross_entropy
 from repro.training import (AdamWConfig, TrainConfig, init_state,
